@@ -1,0 +1,42 @@
+"""Kernel micro-benchmarks: interpret-mode Pallas vs jnp oracles, and the
+encode → im2col → spgemm dual-side SpCONV pipeline (paper §IV/§V)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spconv
+from repro.kernels import ops
+from repro.kernels.ref import spgemm_ref
+from benchmarks.bench_utils import emit, sparse, time_fn
+
+
+def run():
+    rng = np.random.default_rng(0)
+    # spgemm kernel vs oracle
+    a = jnp.asarray(sparse(rng, (256, 256), 0.6))
+    b = jnp.asarray(sparse(rng, (256, 256), 0.6))
+    t_k = time_fn(lambda x, y: ops.bitmap_spgemm(
+        x, y, block_m=64, block_n=64, slice_k=64, interpret=True), a, b)
+    t_r = time_fn(jax.jit(spgemm_ref), a, b)
+    emit("kernel/bitmap_spgemm_256", t_k, f"jnp_ref={t_r:.0f}us")
+
+    # sparse im2col kernel
+    x = jnp.asarray(sparse(rng, (56, 56, 16), 0.6))
+    t_i = time_fn(lambda v: ops.sparse_im2col(v, 3, 3, 1, interpret=True),
+                  x)
+    emit("kernel/sparse_im2col_56x56x16", t_i, "")
+
+    # full dual-side SpCONV pipeline
+    xi = jnp.asarray(sparse(rng, (1, 28, 28, 16), 0.5))
+    w = jnp.asarray(sparse(rng, (3, 3, 16, 32), 0.6))
+    t_c = time_fn(lambda xx, ww: spconv.conv2d_dual_sparse(
+        xx, ww, use_kernel=True, interpret=True).out, xi, w)
+    t_ref = time_fn(jax.jit(spconv.conv2d_ref), xi, w)
+    res = spconv.conv2d_dual_sparse(xi, w, use_kernel=False)
+    emit("kernel/spconv_dual_28x28", t_c,
+         f"xla_conv={t_ref:.0f}us;steps={int(res.steps.sparse)}/"
+         f"{int(res.steps.dense)}")
+
+
+if __name__ == "__main__":
+    run()

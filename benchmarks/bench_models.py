@@ -1,0 +1,72 @@
+"""Paper Fig. 22: layer-wise inference speedups for the five DNN models.
+
+For every layer of VGG-16 / ResNet-18 / Mask R-CNN / BERT-base / RNN
+(shapes + published sparsities in ``repro.configs.paper_models``) we
+compute the step-count speedups of the paper's five execution modes.
+CONV layers go through the bitmap im2col → operand construction first, so
+activation sparsity reaches the GEMM exactly as it would at runtime.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import paper_models as pm
+from repro.core import im2col as i2c
+from repro.core import pruning, stats
+from benchmarks.bench_utils import emit, sparse
+
+RNG = np.random.default_rng(0)
+
+
+def conv_operands(layer: pm.ConvLayer):
+    x = sparse(RNG, (layer.h, layer.w, layer.cin), layer.a_sparsity)
+    w = RNG.normal(size=(layer.k, layer.k, layer.cin,
+                         layer.cout)).astype(np.float32)
+    mask = np.asarray(pruning.magnitude_mask(jnp.asarray(w),
+                                             layer.w_sparsity))
+    w = w * mask
+    lt = i2c.im2col_outer(jnp.asarray(x), layer.k, layer.k, layer.stride)
+    a = jnp.asarray(w.reshape(-1, layer.cout).T)      # (F, KKC)
+    return a, lt
+
+
+def gemm_operands(layer: pm.GemmLayer):
+    act = sparse(RNG, (layer.m, layer.k), layer.a_sparsity)
+    w = RNG.normal(size=(layer.k, layer.n)).astype(np.float32)
+    mask = np.asarray(pruning.magnitude_mask(jnp.asarray(w),
+                                             layer.w_sparsity))
+    return jnp.asarray(act), jnp.asarray(w * mask)
+
+
+def run():
+    print("# Fig 22 reproduction: per-layer speedups (step-count model)")
+    print("# modes: single = weight-side only [72]-style; "
+          "dual = this paper")
+    summary = {}
+    for model, layers in pm.MODELS.items():
+        speedups_dual, speedups_single = [], []
+        for layer in layers:
+            if isinstance(layer, pm.ConvLayer):
+                a, b = conv_operands(layer)
+            else:
+                a, b = gemm_operands(layer)
+            dual = stats.ohmma_steps(a, b)
+            single = stats.ohmma_steps_single_side(
+                b if isinstance(layer, pm.GemmLayer) else a.T,
+                m=a.shape[0])
+            sp_d, sp_s = float(dual.speedup), float(single.speedup)
+            speedups_dual.append(sp_d)
+            speedups_single.append(sp_s)
+            emit(f"model/{model}/{layer.name}", 0.0,
+                 f"dual={sp_d:.2f};single={sp_s:.2f}")
+        summary[model] = (float(np.mean(speedups_dual)),
+                          float(np.mean(speedups_single)))
+    print("\n# model averages (dual vs single-side)")
+    print("#   paper: CNN dual avg 4.38x (1.25–7.49), "
+          "BERT/RNN dual 3.62–8.45x, single 1.36–1.92x")
+    for model, (d, s) in summary.items():
+        print(f"#   {model:10s} dual={d:5.2f}x  single={s:5.2f}x")
+    return summary
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""§Roofline table: aggregate the dry-run result JSONs.
+
+Reads benchmarks/results/dryrun/*.json (produced by
+``python -m repro.launch.dryrun --all``) and prints the per-cell roofline
+terms, bottleneck, model-vs-HLO flops ratio, and HBM fit.
+"""
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def rows(mesh=None):
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        out.append(r)
+    return out
+
+
+def run():
+    data = rows()
+    if not data:
+        print("# no dry-run results found — run "
+              "`python -m repro.launch.dryrun --all --mesh both` first")
+        return []
+    hdr = (f"# {'arch':22s} {'shape':11s} {'mesh':8s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+           f"{'bound':>12s} {'useful':>7s} {'HBM GiB':>8s} fit")
+    print(hdr)
+    for r in data:
+        print(f"# {r['arch']:22s} {r['shape']:11s} {r['mesh']:8s} "
+              f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} "
+              f"{r['collective_s']:10.4f} {r['bottleneck']:>12s} "
+              f"{r['useful_flops_ratio']:7.2f} "
+              f"{r['hbm_gib_per_device']:8.2f} "
+              f"{'Y' if r['fits_16gib'] else 'N'}")
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0.0,"
+              f"bottleneck={r['bottleneck']};"
+              f"roofline_s={r['roofline_s']:.5f}")
+    return data
+
+
+if __name__ == "__main__":
+    run()

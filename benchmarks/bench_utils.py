@@ -1,0 +1,27 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 2, repeat: int = 5) -> float:
+    """Median wall-time in microseconds of jitted fn(*args)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def sparse(rng, shape, sparsity, dtype=np.float32):
+    x = rng.normal(size=shape).astype(dtype)
+    x[rng.random(shape) < sparsity] = 0
+    return x

@@ -1,0 +1,27 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus commented summaries).
+
+  Table III  → bench_im2col
+  Fig. 21    → bench_spgemm
+  Fig. 22    → bench_models
+  kernels    → bench_kernels  (Pallas interpret-mode micro-benches)
+  §Roofline  → bench_roofline (aggregates dry-run artifacts)
+"""
+
+
+def main() -> None:
+    from benchmarks import (bench_im2col, bench_kernels, bench_models,
+                            bench_roofline, bench_spgemm)
+    print("name,us_per_call,derived")
+    for mod, tag in [(bench_im2col, "Table III"),
+                     (bench_spgemm, "Fig 21"),
+                     (bench_models, "Fig 22"),
+                     (bench_kernels, "kernels"),
+                     (bench_roofline, "roofline")]:
+        print(f"\n# ===== {mod.__name__} ({tag}) =====")
+        mod.run()
+
+
+if __name__ == '__main__':
+    main()

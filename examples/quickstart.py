@@ -1,0 +1,40 @@
+"""Quickstart: build a small model, train a few steps, generate.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.configs.base import RunConfig
+from repro.data.pipeline import SyntheticTokens
+from repro.models import transformer as tfm
+from repro.serving import serve_loop
+from repro.training import optimizer as opt
+from repro.training.train_loop import make_train_step
+
+
+def main():
+    cfg = smoke_config("qwen1.5-110b")       # reduced same-family config
+    rc = RunConfig(microbatches=2, learning_rate=3e-3, warmup_steps=5)
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    ostate = opt.init_opt_state(params, rc)
+    step = jax.jit(make_train_step(cfg, rc))
+    data = SyntheticTokens(cfg.vocab_size, global_batch=16, seq_len=32)
+
+    ef = None
+    for i in range(20):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        params, ostate, ef, m = step(params, ostate, ef, batch)
+        if i % 5 == 0:
+            print(f"step {i:3d}  loss {float(m['loss']):.3f}  "
+                  f"lr {float(m['lr']):.2e}")
+
+    prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    tokens = serve_loop.generate(params, {"tokens": prompt}, cfg,
+                                 max_new_tokens=8, capacity=64)
+    print("generated:", tokens.tolist())
+
+
+if __name__ == "__main__":
+    main()

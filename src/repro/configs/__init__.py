@@ -1,0 +1,74 @@
+"""Config registry: assigned architectures + reduced smoke variants."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.configs.base import (MeshConfig, ModelConfig, RunConfig,
+                                SHAPES, SHAPES_BY_NAME, ShapeConfig)
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+_RUN_OVERRIDES: Dict[str, Dict[str, dict]] = {}
+
+
+def register(cfg: ModelConfig, run_overrides: Dict[str, dict] = None):
+    _REGISTRY[cfg.name] = cfg
+    _RUN_OVERRIDES[cfg.name] = run_overrides or {}
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(k for k in _REGISTRY if not k.endswith("-smoke"))
+
+
+def get_run_config(name: str, shape: str) -> RunConfig:
+    """Per-(arch, shape) execution policy (memory/parallelism knobs)."""
+    _ensure_loaded()
+    overrides = _RUN_OVERRIDES.get(name, {}).get(shape, {})
+    return RunConfig(**overrides)
+
+
+def smoke_config(name: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    _ensure_loaded()
+    return _REGISTRY[f"{name}-smoke"]
+
+
+_LOADED = False
+
+
+def _ensure_loaded():
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from repro.configs import (chatglm3_6b, jamba_1_5_large_398b,  # noqa
+                               llama3_2_vision_90b, mamba2_370m,
+                               mixtral_8x7b, nemotron_4_340b,
+                               qwen1_5_110b, qwen3_moe_235b_a22b,
+                               whisper_base, yi_34b)
+
+
+def runnable_shapes(name: str) -> List[ShapeConfig]:
+    """The assigned shapes this arch actually runs (long_500k needs
+    sub-quadratic attention — see DESIGN.md §5)."""
+    cfg = get_config(name)
+    out = []
+    for s in SHAPES:
+        if s.name == "long_500k" and not cfg.subquadratic:
+            continue
+        out.append(s)
+    return out
+
+
+__all__ = ["MeshConfig", "ModelConfig", "RunConfig", "SHAPES",
+           "SHAPES_BY_NAME", "ShapeConfig", "get_config", "get_run_config",
+           "list_archs", "register", "runnable_shapes", "smoke_config"]

@@ -1,0 +1,155 @@
+"""Config dataclasses: model architecture, run/shape, mesh, sparsity."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense|moe|ssm|hybrid|audio|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 → d_model // n_heads
+
+    # attention
+    rope_style: str = "half"       # half | 2d (chatglm) | none
+    abs_positions: bool = False    # sinusoidal absolute positions (whisper)
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    sliding_window: int = 0        # 0 = full attention
+    # mlp
+    mlp_type: str = "swiglu"       # swiglu | relu2 | gelu | relu
+    # moe
+    n_experts: int = 0
+    n_experts_active: int = 0
+    moe_every: int = 1             # MoE at layer positions p % moe_every == moe_offset
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+    # ssm / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_conv: int = 4
+    ssm_chunk: int = 64
+    attn_every: int = 0            # hybrid: attention at p % attn_every == 0
+    # enc-dec / multimodal
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_len: int = 0           # stub frontend sequence length
+    cross_attn_every: int = 0      # vlm: cross-attn at p % cross_attn_every == 0
+    num_image_tokens: int = 0
+    frontend: str = "none"         # none | audio | vision (always a stub)
+    # norms / embeddings
+    norm_kind: str = "rms"         # rms | layer
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # sub-quadratic capability (decides long_500k applicability)
+    subquadratic: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.ssm_state else 0
+
+    def layer_kind(self, pos: int) -> str:
+        """Layer type at position ``pos`` within the layer period."""
+        if self.family == "ssm":
+            return "mamba"
+        if self.family == "hybrid":
+            return "attn" if pos % self.attn_every == 0 else "mamba"
+        if self.cross_attn_every:
+            return "cross" if pos % self.cross_attn_every == 0 else "attn"
+        return "attn"
+
+    def layer_is_moe(self, pos: int) -> bool:
+        if not self.n_experts:
+            return False
+        return pos % self.moe_every == self.moe_offset
+
+    @property
+    def period(self) -> int:
+        """Length of the repeating layer pattern (scan unit)."""
+        p = 1
+        if self.family == "hybrid" and self.attn_every:
+            p = self.attn_every
+        if self.cross_attn_every:
+            p = self.cross_attn_every
+        if self.n_experts and self.moe_every > 1:
+            p = _lcm(p, self.moe_every)
+        return p
+
+    @property
+    def n_periods(self) -> int:
+        assert self.n_layers % self.period == 0, (self.n_layers, self.period)
+        return self.n_layers // self.period
+
+
+def _lcm(a: int, b: int) -> int:
+    import math
+    return a * b // math.gcd(a, b)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned (input-shape) cell."""
+    name: str                      # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                      # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", "train", 4096, 256),
+    ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    ShapeConfig("decode_32k", "decode", 32768, 128),
+    ShapeConfig("long_500k", "decode", 524288, 1),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Execution knobs per (arch × shape): memory & parallelism policy."""
+    microbatches: int = 1          # gradient-accumulation steps
+    param_dtype: str = "float32"
+    act_dtype: str = "bfloat16"
+    accum_dtype: str = "float32"   # gradient-accumulator dtype
+    remat: str = "full"            # full | dots | none
+    scan_unroll: bool = False      # python-loop layers (cost validation)
+    optimizer: str = "adamw"       # adamw | adamw_bf16 | adafactor
+    kv_quant: bool = False         # int8 KV cache
+    decode_2d: bool = False        # 2-D weight sharding at decode (§Perf)
+    seq_shard: bool = True         # Megatron-style sequence sharding
+    attn_chunk: int = 2048         # KV-chunked attention threshold/size
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    grad_clip: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n

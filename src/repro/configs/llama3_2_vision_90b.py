@@ -1,0 +1,50 @@
+"""llama-3.2-vision-90b [vlm] — cross-attention image layers every 5th
+layer (hf:meta-llama/Llama-3.2-90B-Vision).  The vision tower is a STUB:
+input_specs() provides precomputed patch embeddings (1601 tokens,
+projected to d_model).
+
+100L (20 cross + 80 self) d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256.
+"""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+CONFIG = register(
+    ModelConfig(
+        name="llama-3.2-vision-90b",
+        family="vlm",
+        n_layers=100,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=28672,
+        vocab_size=128256,
+        cross_attn_every=5,
+        num_image_tokens=1601,
+        frontend="vision",
+        rope_style="half",
+        rope_theta=500_000.0,
+        mlp_type="swiglu",
+    ),
+    run_overrides={
+        "train_4k": dict(microbatches=16, optimizer="adamw_bf16",
+                         accum_dtype="bfloat16"),
+        "decode_32k": dict(kv_quant=True),
+    })
+
+SMOKE = register(
+    ModelConfig(
+        name="llama-3.2-vision-90b-smoke",
+        family="vlm",
+        n_layers=10,            # 2 periods of 5
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab_size=512,
+        cross_attn_every=5,
+        num_image_tokens=16,
+        frontend="vision",
+        rope_style="half",
+        mlp_type="swiglu",
+    ))

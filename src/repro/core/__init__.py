@@ -1,0 +1,9 @@
+"""Core contribution of *Dual-side Sparse Tensor Core* in JAX.
+
+Bitmap two-level sparse encoding, outer-product SpGEMM, bitmap-based
+implicit sparse im2col, SpCONV, pruning, and the step-count cost models.
+"""
+from repro.core import bitmap, im2col, layers, pruning, spconv, spgemm, stats
+
+__all__ = ["bitmap", "im2col", "layers", "pruning", "spconv", "spgemm",
+           "stats"]

@@ -1,0 +1,84 @@
+"""Sparsity-aware layers: the integration point between the paper's
+technique and the model zoo.
+
+``DualSparseLinear`` is a drop-in linear projection with three modes:
+
+* ``dense``  — plain matmul (paper's CUTLASS baseline).
+* ``weight`` — single-side sparsity: masked weights (Sparse Tensor Core
+  [72] baseline); work model counts only weight-side skips.
+* ``dual``   — dual-side: weight mask + dynamic activation sparsity,
+  dispatched to the bitmap SpGEMM (Pallas kernel on TPU, jnp fallback on
+  CPU) with step-count statistics for the speedup accounting.
+
+All modes are numerically identical to ``act @ (w * mask)`` — sparsity
+changes the schedule, not the math — so models can enable them per-layer
+at inference without retraining glue.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stats
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseLinearConfig:
+    in_features: int
+    out_features: int
+    mode: str = "dense"            # dense | weight | dual
+    use_bias: bool = False
+    block_m: int = 128
+    block_n: int = 128
+    block_k: int = 128
+    use_kernel: bool = False       # Pallas path (interpret-mode on CPU)
+    collect_stats: bool = False
+
+
+def init_sparse_linear(key: jax.Array, cfg: SparseLinearConfig,
+                       dtype=jnp.float32):
+    kw, _ = jax.random.split(key)
+    scale = 1.0 / (cfg.in_features ** 0.5)
+    params = {
+        "w": jax.random.uniform(kw, (cfg.in_features, cfg.out_features),
+                                dtype, -scale, scale),
+        "mask": jnp.ones((cfg.in_features, cfg.out_features), dtype=bool),
+    }
+    if cfg.use_bias:
+        params["b"] = jnp.zeros((cfg.out_features,), dtype)
+    return params
+
+
+def apply_sparse_linear(
+    params, x: jax.Array, cfg: SparseLinearConfig,
+) -> Tuple[jax.Array, Optional[stats.StepCounts]]:
+    """x: (..., in_features) → (..., out_features)[, step stats]."""
+    w = params["w"]
+    if cfg.mode in ("weight", "dual"):
+        w = w * params["mask"].astype(w.dtype)
+
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, cfg.in_features)
+
+    counts = None
+    if cfg.mode == "dual" and cfg.use_kernel:
+        from repro.core import spgemm as sg
+        res = sg.spgemm(x2, w, block_m=cfg.block_m, block_n=cfg.block_n,
+                        block_k=cfg.block_k, use_kernel=True)
+        y, counts = res.out, res.steps
+    else:
+        y = x2 @ w
+        if cfg.collect_stats:
+            if cfg.mode == "dual":
+                counts = stats.mxu_steps(x2, w, cfg.block_m, cfg.block_n,
+                                         cfg.block_k)
+            elif cfg.mode == "weight":
+                counts = stats.mxu_steps(jnp.ones_like(x2), w, cfg.block_m,
+                                         cfg.block_n, cfg.block_k)
+
+    if cfg.use_bias:
+        y = y + params["b"]
+    return y.reshape(*lead, cfg.out_features), counts

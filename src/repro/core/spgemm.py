@@ -1,0 +1,147 @@
+"""Outer-product bitmap SpGEMM (paper §III).
+
+Three entry points, lowest to highest level:
+
+* :func:`outer_step` / :func:`merge_partial` — the paper's three primitive
+  operations (*multiply-value*, *multiply-bitmap*, *merge* with
+  gather–accumulate–scatter, Fig. 2c / Fig. 7), faithful at algorithm
+  granularity.  Used by the unit tests to validate the scheme itself.
+* :func:`spgemm_emulate` — a K-step ``lax.scan`` over outer products on
+  condensed operands: the warp-level SpGEMM of Fig. 5 expressed in jnp.
+* :func:`spgemm` — the production path: two-level bitmap encoding + the
+  Pallas block-skip kernel (``repro.kernels``), falling back to the jnp
+  reference on CPU.
+
+All paths compute exactly ``A @ B`` for any sparsity pattern; sparsity only
+changes the *work schedule*, never the result.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+from repro.core import stats
+
+
+# ---------------------------------------------------------------------------
+# paper-primitive level (Fig. 2c, Fig. 7)
+# ---------------------------------------------------------------------------
+
+class PartialMatrix(NamedTuple):
+    """One outer-product partial matrix D_k in bitmap encoding."""
+    values: jax.Array   # (M, N) dense-laid-out values of a ⊗ b
+    bitmap: jax.Array   # packed (M, N//32) uint32 — multiply-bitmap output
+
+
+def outer_step(a_col: jax.Array, b_row: jax.Array,
+               a_bits: jax.Array, b_bits: jax.Array) -> PartialMatrix:
+    """*multiply-value* + *multiply-bitmap* for one k step.
+
+    a_col: (M,) condensed-or-raw column of A;  b_row: (N,) row of B.
+    a_bits: (M//32,) packed;  b_bits: (N//32,) packed.
+    """
+    values = jnp.outer(a_col, b_row)
+    bits = bm.bitmap_outer(a_bits, b_bits)  # BOHMMA analogue
+    return PartialMatrix(values=values, bitmap=bits)
+
+
+def merge_partial(acc: jax.Array, part: PartialMatrix) -> jax.Array:
+    """*merge*: gather–accumulate–scatter (paper Fig. 7).
+
+    ① gather elements of the accumulator at the partial matrix's non-zero
+    positions, ② accumulate with the multiply-value output, ③ scatter back.
+    With a dense tile-local accumulator (the TPU VMEM analogue of the
+    accumulation buffer) the three steps fuse into a masked add — which is
+    the point of keeping partial matrices tile-local (two-level bitmap).
+    """
+    mask = bm.unpack_bits(part.bitmap, axis=1)
+    gathered = jnp.where(mask, acc, 0)                      # ① gather
+    accumulated = gathered + jnp.where(mask, part.values, 0)  # ② accumulate
+    return jnp.where(mask, accumulated, acc)                # ③ scatter
+
+
+def spgemm_emulate(a: jax.Array, b: jax.Array) -> jax.Array:
+    """K-step outer-product SpGEMM over bitmap-encoded operands (Fig. 2c).
+
+    Encodes A column-major / B row-major, then scans K steps of
+    outer_step + merge.  O(M·N·K) on CPU — for validation at small sizes.
+    """
+    (m, k), (_, n) = a.shape, b.shape
+    a_enc = bm.encode(a, "col")
+    b_enc = bm.encode(b, "row")
+    a_dense = bm.decode(a_enc)  # positional access for the emulation
+    b_dense = bm.decode(b_enc)
+
+    def step(acc, kk):
+        part = outer_step(
+            a_dense[:, kk], b_dense[kk, :],
+            a_enc.bitmap[:, kk], b_enc.bitmap[kk, :])
+        return merge_partial(acc, part), None
+
+    acc0 = jnp.zeros((m, n), dtype=jnp.promote_types(a.dtype, jnp.float32))
+    acc, _ = jax.lax.scan(step, acc0, jnp.arange(k))
+    return acc.astype(jnp.promote_types(a.dtype, b.dtype))
+
+
+# ---------------------------------------------------------------------------
+# production path
+# ---------------------------------------------------------------------------
+
+class SpGEMMResult(NamedTuple):
+    out: jax.Array
+    steps: stats.StepCounts
+
+
+def plan_blocks(
+    a_tiles: jax.Array, b_tiles: jax.Array, max_active: Optional[int] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Build the scalar-prefetch schedule from level-2 tile bitmaps.
+
+    a_tiles: (Mt, Kt) bool, b_tiles: (Kt, Nt) bool.
+    Returns (indices, counts):
+      indices: (Mt, Nt, Kt_cap) int32 — for output block (i, j), the
+               ordered list of active k-block indices (padded with 0).
+      counts:  (Mt, Nt) int32 — number of valid entries.
+    This is the warp-bitmap skip list the Pallas kernel prefetches.
+    """
+    mt, kt = a_tiles.shape
+    _, nt = b_tiles.shape
+    act = bm.tile_activity_outer(a_tiles, b_tiles)  # (Mt, Nt, Kt)
+    counts = jnp.sum(act, axis=-1, dtype=jnp.int32)
+    cap = int(max_active) if max_active is not None else kt
+    # stable-front-pack the active k indices
+    order = jnp.argsort(~act, axis=-1, stable=True)
+    indices = order[..., :cap].astype(jnp.int32)
+    return indices, counts
+
+
+def spgemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 256,
+    use_kernel: bool = True,
+    interpret: Optional[bool] = None,
+    precision=None,
+) -> SpGEMMResult:
+    """Dual-side sparse matmul with two-level bitmap block skipping.
+
+    Computes A @ B; when ``use_kernel`` the Pallas scalar-prefetch kernel
+    executes only bitmap-active blocks (level 2) and condenses k-slices
+    (level 1).  Returns the result plus the step-count statistics that are
+    this container's machine-independent "speedup" measurement.
+    """
+    counts = stats.mxu_steps(a, b, block_m, block_n, block_k)
+    if use_kernel:
+        from repro.kernels import ops as kops  # local import; kernels need core
+        out = kops.bitmap_spgemm(
+            a, b, block_m=block_m, block_n=block_n, block_k=block_k,
+            interpret=interpret)
+    else:
+        out = jnp.dot(a, b, precision=precision)
+    return SpGEMMResult(out=out, steps=counts)

@@ -1,0 +1,162 @@
+"""Instruction / step-count models for dual-side sparse GEMM.
+
+These are the machine-independent cost models behind the paper's numbers:
+
+* ``ohmma_steps_*``   — paper-GPU model: a warp computes a 32×32×1 outer
+  product per step as 8 OHMMA.8161 instructions (4 A-groups of 8 × 2
+  B-groups of 16, paper Fig. 15).  Condensed non-zero counts quantise to
+  ⟨0,25,50,75⟩% skip on the A side and ⟨0,50⟩% on the B side (Fig. 5),
+  and empty warp tiles are skipped entirely by the level-2 bitmap (Fig. 9).
+
+* ``mxu_steps_*``     — TPU-adapted model (DESIGN.md §2): the unit of skip
+  is a 128-deep k-slice group inside a (bm, bk)×(bk, bn) Pallas block;
+  block-level skipping corresponds to the warp-bitmap, k-slice
+  condensation to the quantised OHMMA skip.
+
+Both models count *multiply-accumulate work units*; speedup = dense/steps.
+They are exercised by ``benchmarks/bench_spgemm.py`` (paper Fig. 21) and
+``benchmarks/bench_models.py`` (paper Fig. 22).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Paper warp-tile geometry (§III-B3, Fig. 5): 32×32×1 outer product per
+# step; one OHMMA covers an 8×16 sub-tile, so 8 OHMMAs per step.
+WARP_M = 32
+WARP_N = 32
+OHMMA_M = 8
+OHMMA_N = 16
+
+
+class StepCounts(NamedTuple):
+    dense: jax.Array   # steps the dense schedule would take
+    sparse: jax.Array  # steps after dual-side skipping
+    tiles_skipped: jax.Array  # level-2 whole-tile skips
+
+    @property
+    def speedup(self):
+        return self.dense / jnp.maximum(self.sparse, 1)
+
+
+def _ceil_div(a, b):
+    return (a + b - 1) // b
+
+
+# ---------------------------------------------------------------------------
+# paper-GPU OHMMA model
+# ---------------------------------------------------------------------------
+
+def ohmma_steps(a: jax.Array, b: jax.Array) -> StepCounts:
+    """OHMMA instruction counts for C = A(M,K) @ B(K,N), dual-side sparse.
+
+    Implements the paper's warp-level skip arithmetic exactly:
+    for every warp tile (i, j) and every k step, the A column fragment
+    (32 rows) condenses to ``ca`` non-zeros and the B row fragment (32
+    cols) to ``cb``; the step issues ceil(ca/8) * ceil(cb/16) OHMMAs
+    (dense: 4 * 2 = 8).  A warp tile whose A or B fragment is entirely
+    zero is skipped by the warp-bitmap.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    mt, nt = _ceil_div(m, WARP_M), _ceil_div(n, WARP_N)
+    pad_m, pad_n = mt * WARP_M - m, nt * WARP_N - n
+    a = jnp.pad(a != 0, ((0, pad_m), (0, 0)))
+    b = jnp.pad(b != 0, ((0, 0), (0, pad_n)))
+    # ca[i, kk]: non-zeros in rows of warp-row-tile i at k column kk
+    ca = jnp.sum(a.reshape(mt, WARP_M, k), axis=1)            # (Mt, K)
+    cb = jnp.sum(b.reshape(k, nt, WARP_N), axis=2).T          # (Nt, K)
+    qa = _ceil_div(ca, OHMMA_M)                               # 0..4
+    qb = _ceil_div(cb, OHMMA_N)                               # 0..2
+    steps = jnp.sum(qa[:, None, :] * qb[None, :, :])          # Σ_ij Σ_k
+    dense = jnp.asarray(mt * nt * k * (WARP_M // OHMMA_M) * (WARP_N // OHMMA_N))
+    # level-2 skip accounting: (i,j,kk) steps with qa*qb == 0
+    skipped = jnp.sum((qa[:, None, :] * qb[None, :, :]) == 0)
+    return StepCounts(dense=dense, sparse=steps, tiles_skipped=skipped)
+
+
+def ohmma_steps_single_side(b: jax.Array, m: int) -> StepCounts:
+    """Sparse-Tensor-Core[72]-style single-side model: only the weight
+    matrix B is sparse (vector-wise pruned at a fixed ratio); A is dense."""
+    k, n = b.shape
+    nt = _ceil_div(n, WARP_N)
+    mt = _ceil_div(m, WARP_M)
+    pad_n = nt * WARP_N - n
+    bm = jnp.pad(b != 0, ((0, 0), (0, pad_n)))
+    cb = jnp.sum(bm.reshape(k, nt, WARP_N), axis=2).T
+    qb = _ceil_div(cb, OHMMA_N)
+    qa = WARP_M // OHMMA_M  # dense A: always 4
+    steps = jnp.sum(qa * qb) * mt
+    dense = jnp.asarray(mt * nt * k * 8)
+    return StepCounts(dense=dense, sparse=steps,
+                      tiles_skipped=jnp.sum(qb == 0) * mt)
+
+
+# ---------------------------------------------------------------------------
+# TPU/MXU-adapted model (used to predict Pallas kernel behaviour)
+# ---------------------------------------------------------------------------
+
+def mxu_steps(
+    a: jax.Array,
+    b: jax.Array,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 256,
+    slice_k: int = 128,
+) -> StepCounts:
+    """MXU work units for the TPU-adapted kernel.
+
+    Unit = one (block_m × slice_k) × (slice_k × block_n) matmul.  A k-slice
+    inside block (i, j, kb) is *active* iff some column of the A block uses
+    it AND some row of the B block uses it (bitmap AND, DESIGN.md §2); the
+    kernel condenses active slices and rounds up to slice_k granularity —
+    here slices are already the granularity, so sparse units = number of
+    active slices summed over (i, j, kb).  A fully inactive block is
+    skipped by the scalar-prefetch grid (level-2).
+    """
+    m, k = a.shape
+    _, n = b.shape
+    slice_k = min(slice_k, block_k)
+    mt, nt, kt = _ceil_div(m, block_m), _ceil_div(n, block_n), _ceil_div(k, block_k)
+    a = jnp.pad(a != 0, ((0, mt * block_m - m), (0, kt * block_k - k)))
+    b = jnp.pad(b != 0, ((0, kt * block_k - k), (0, nt * block_n - n)))
+    s = block_k // slice_k
+    # column activity of A per (i, kb, slice)
+    col = jnp.any(a.reshape(mt, block_m, kt, s, slice_k), axis=(1, 4))
+    # row activity of B per (kb, slice, j)
+    row = jnp.any(b.reshape(kt, s, slice_k, nt, block_n), axis=(2, 4))
+    act = col[:, None] & row.transpose(2, 0, 1)[None]  # (Mt,Nt,Kt,s)
+    sparse = jnp.sum(act)
+    dense = jnp.asarray(mt * nt * kt * s)
+    blocks_skipped = jnp.sum(~jnp.any(act, axis=-1))
+    return StepCounts(dense=dense, sparse=sparse, tiles_skipped=blocks_skipped)
+
+
+# ---------------------------------------------------------------------------
+# im2col read-cost model (paper Table III rationale)
+# ---------------------------------------------------------------------------
+
+def im2col_read_cost(density: float, kind: str) -> float:
+    """Relative per-output-element read cost of im2col variants.
+
+    Mirrors the paper's explanation of Table III: CSR pays two extra
+    data-dependent reads (row ptr + col idx) per non-zero access; bitmap
+    compresses position metadata to 1 bit (amortised 1/32 word read) plus
+    one popcount.  Dense reads everything once.  Values are *operational
+    intensity* style constants, not measured cycles — benches scale them
+    by measured wall-times of the jnp emulation.
+    """
+    if kind == "dense":
+        return 1.0
+    if kind == "csr":
+        return density * 3.0 + 0.05   # value + 2 dependent index reads
+    if kind == "bitmap":
+        return density * 1.0 + 1.0 / WARP_BITS_PER_READ
+    raise ValueError(kind)
+
+
+WARP_BITS_PER_READ = 32

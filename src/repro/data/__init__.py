@@ -1,0 +1,4 @@
+"""Data substrate: deterministic synthetic pipelines."""
+from repro.data import pipeline
+
+__all__ = ["pipeline"]

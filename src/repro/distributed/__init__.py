@@ -1,0 +1,4 @@
+"""Distribution: sharding policies, compression, mesh helpers."""
+from repro.distributed import compression, sharding
+
+__all__ = ["compression", "sharding"]

@@ -1,0 +1,220 @@
+"""Logical-axis → mesh sharding policies per shape kind.
+
+Mesh axes: ("data", "model") single-pod 16×16, ("pod", "data", "model")
+multi-pod 2×16×16.  Policies (DESIGN.md §6):
+
+* train    — FSDP on data(+pod) for params/optimizer state (embed dim),
+             TP on model (heads / ffn / experts), batch on data(+pod);
+             microbatching controls activation memory.
+* prefill  — same layout minus the optimizer.
+* decode   — 2-D weight sharding (weight-gathered serving), KV cache:
+             batch on data(+pod), kv-heads on model (GSPMD pads 8→16).
+* long     — batch=1: KV sequence on data (chunked attention reduces over
+             the shards), SSM state heads on model.
+
+A mesh axis is never assigned twice in one PartitionSpec: later logical
+axes that map to an already-used mesh axis resolve to None (replicated on
+that axis), so e.g. MoE expert weights ("experts","embed","mlp") shard as
+(model, data, None).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def _dp(multi_pod: bool):
+    return ("pod", "data") if multi_pod else "data"
+
+
+def make_rules(kind: str, *, multi_pod: bool = False,
+               decode_2d: bool = False) -> Dict[str, Any]:
+    dp = _dp(multi_pod)
+    common = {
+        # params
+        "vocab": "model",
+        "embed": dp,           # FSDP dim
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "experts": "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "layers": None,
+        # activations
+        "batch": dp,
+        "seq": None,
+        "seq_q": "model",      # attention fallback when heads ∤ model
+        "tokens_flat": dp,     # MoE dispatch token dim
+        "expert_cap": dp,      # MoE expert capacity dim
+        "seq_res": "model",    # residual-stream sequence sharding (SP)
+        # KV caches shard their sequence dim on model (kv-head counts of
+        # the assigned archs don't divide 16); batch stays on data.
+        "seq_kv": "model",
+    }
+    common["kv_batch"] = common["batch"]   # cache batch dim
+    if kind in ("train", "prefill"):
+        return common
+    if kind == "decode":
+        dec = dict(common)
+        dec["kv_heads"] = None
+        if decode_2d:
+            # §Perf iteration: weights 2-D sharded over (model, data) —
+            # no per-token FSDP weight gather; activations replicated on
+            # data (tiny at decode), caches keep batch on data.
+            dec.update({
+                "embed": None,
+                "mlp": ("model", "data"),
+                "experts": "model",
+                "heads": "model",
+                "head_dim": "data",
+                "ssm_inner": ("model", "data"),
+                "vocab": ("model", "data"),
+                "batch": None,
+                "kv_batch": dp,
+            })
+        return dec
+    if kind == "long":
+        # batch=1: nothing to shard on data except the KV sequence
+        long = dict(common)
+        long["batch"] = None
+        long["kv_batch"] = None
+        long["seq_kv"] = dp
+        long["kv_heads"] = None
+        return long
+    raise ValueError(kind)
+
+
+def spec_from_axes(axes: Sequence[Optional[str]],
+                   rules: Dict[str, Any],
+                   shape: Optional[Sequence[int]] = None,
+                   axis_sizes: Optional[Dict[str, int]] = None
+                   ) -> PartitionSpec:
+    """Resolve logical axes → PartitionSpec.
+
+    * a mesh axis is used at most once per spec (later dims replicate);
+    * if ``shape``/``axis_sizes`` are given, mesh axes that do not divide
+      the dim evenly are dropped from the tail of the assignment (pjit
+      input shardings require exact divisibility; e.g. kv_heads=8 over
+      model=16 resolves to replicated).
+    """
+    used = set()
+    out = []
+    for i, a in enumerate(axes):
+        m = rules.get(a) if a is not None else None
+        if m is None:
+            out.append(None)
+            continue
+        parts = tuple(m) if isinstance(m, (tuple, list)) else (m,)
+        parts = tuple(p for p in parts if p not in used)
+        if shape is not None and axis_sizes is not None:
+            parts = _best_divisible(parts, shape[i], axis_sizes)
+        used.update(parts)
+        if not parts:
+            out.append(None)
+        elif len(parts) == 1:
+            out.append(parts[0])
+        else:
+            out.append(parts)
+    return PartitionSpec(*out)
+
+
+def _best_divisible(parts, dim: int, sizes) -> tuple:
+    """Largest contiguous sub-tuple of mesh axes whose product divides
+    ``dim`` (e.g. batch=16 on ("pod","data")=2×16 → ("data",))."""
+    best, best_prod = (), 1
+    n = len(parts)
+    for i in range(n):
+        prod = 1
+        for j in range(i, n):
+            prod *= sizes.get(parts[j], 1)
+            if dim % prod == 0 and prod > best_prod:
+                best, best_prod = parts[i:j + 1], prod
+    return best
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+
+def tree_pspecs(axes_tree, rules: Dict[str, Any]):
+    """Tree of logical-axes tuples → tree of PartitionSpecs."""
+    return jax.tree_util.tree_map(
+        lambda axes: spec_from_axes(axes, rules), axes_tree,
+        is_leaf=_is_axes)
+
+
+def tree_pspecs_shaped(axes_tree, abstract_tree, rules: Dict[str, Any],
+                       mesh: Mesh):
+    """Shape-aware variant for pjit *input* shardings (divisibility)."""
+    sizes = dict(mesh.shape)
+    return jax.tree_util.tree_map(
+        lambda axes, a: spec_from_axes(axes, rules, a.shape, sizes),
+        axes_tree, abstract_tree, is_leaf=_is_axes)
+
+
+def tree_shardings(mesh: Mesh, pspec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspec_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+# ---------------------------------------------------------------------------
+# input / cache / optimizer specs
+# ---------------------------------------------------------------------------
+
+def input_pspecs(batch_specs: Dict[str, Any], rules: Dict[str, Any]
+                 ) -> Dict[str, PartitionSpec]:
+    """Shardings for model inputs (tokens/labels/frontend stubs)."""
+    out = {}
+    for name, sds in batch_specs.items():
+        if name in ("tokens", "labels"):
+            axes: Tuple[Optional[str], ...] = ("batch", None)
+        else:  # frames / image_embeds: (B, M, D)
+            axes = ("batch", None, None)
+        out[name] = spec_from_axes(axes[:len(sds.shape)], rules)
+    return out
+
+
+def cache_logical_axes(cfg) -> Dict[str, Any]:
+    """Logical axes tree parallel to transformer.init_caches output."""
+    from repro.models.cache import KVCache
+    from repro.models.ssm import SSMState
+
+    def kv_axes():
+        return KVCache(
+            k=("layers", "kv_batch", "seq_kv", "kv_heads", None),
+            v=("layers", "kv_batch", "seq_kv", "kv_heads", None),
+            k_scale=("layers", "kv_batch", "seq_kv", "kv_heads", None),
+            v_scale=("layers", "kv_batch", "seq_kv", "kv_heads", None),
+            pos=("layers",),
+            window=("layers",),
+        )
+
+    caches: Dict[str, Any] = {}
+    for pos in range(cfg.period):
+        kind = cfg.layer_kind(pos)
+        c: Dict[str, Any] = {}
+        if kind in ("attn", "cross"):
+            c["kv"] = kv_axes()
+        if kind == "mamba":
+            c["ssm"] = SSMState(
+                state=("layers", "kv_batch", "ssm_heads", None, None),
+                conv=("layers", "kv_batch", None, "ssm_inner"))
+        if cfg.is_encoder_decoder:
+            c["cross_kv"] = kv_axes()
+        caches[f"pos{pos}"] = c
+    return caches
+
+
+def opt_state_pspecs(param_pspecs):
+    """Adam m/v mirror the parameter shardings; step is replicated."""
+    return {
+        "m": param_pspecs,
+        "v": param_pspecs,
+        "step": PartitionSpec(),
+    }

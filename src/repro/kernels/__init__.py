@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the dual-side sparse Tensor Core.
+
+bitmap_spgemm   — two-level bitmap block-skip SpGEMM (scalar prefetch)
+sparse_im2col   — bitmap-based implicit sparse im2col
+bitmap_encode   — dense → (packed bitmap, condensed values)
+
+Each has a jit wrapper in ``ops.py`` and a pure-jnp oracle in ``ref.py``;
+kernels are validated in interpret mode on CPU and target TPU Mosaic.
+"""

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: dense → bitmap encode (paper Fig. 2b / Fig. 11 S0).
+
+Per channel, packs the non-zero mask of each feature-map row into uint32
+words and front-packs ("condenses") the non-zero values with a one-hot
+selection matmul — the MXU-friendly gather (DESIGN.md §2): for row x with
+exclusive popcount prefix c(i), the selector S[i,t] = [c(i)=t ∧ x(i)≠0]
+satisfies (x @ S)[t] = t-th non-zero of x.  One small matmul per row keeps
+the gather on the systolic array instead of a serial scatter.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bitmap import WORD
+
+
+def _encode_kernel(x_ref, bits_ref, cond_ref, *, h: int, wp: int):
+    x = x_ref[0]                               # (H, Wp)
+    mask = x != 0
+
+    # pack bits: (H, Ww, 32) · 2^lane → (H, Ww) uint32
+    ww = wp // WORD
+    m3 = mask.reshape(h, ww, WORD).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jax.lax.broadcasted_iota(
+        jnp.uint32, (1, 1, WORD), 2))
+    bits_ref[0, :, :] = jnp.sum(m3 * weights, axis=-1, dtype=jnp.uint32)
+
+    # condense values row by row via one-hot selection matmul
+    cum = (jnp.cumsum(mask, axis=1) - mask).astype(jnp.int32)  # exclusive
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, wp), 1)
+
+    def body(i, _):
+        row = jax.lax.dynamic_slice(x, (i, 0), (1, wp))          # (1, Wp)
+        crow = jax.lax.dynamic_slice(cum, (i, 0), (1, wp))
+        mrow = row != 0
+        sel = ((crow[0][:, None] == lane[0][None, :]) & mrow[0][:, None])
+        cond = jnp.dot(row.astype(jnp.float32), sel.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        pl.store(cond_ref, (0, pl.ds(i, 1), slice(None)),
+                 cond.astype(cond_ref.dtype))
+        return 0
+
+    jax.lax.fori_loop(0, h, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitmap_encode_pallas(
+    x: jax.Array, *, interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (C, H, W) dense → (bits (C,H,ceil(W/32)) uint32, cond (C,H,W))."""
+    c, h, w = x.shape
+    wp = -(-w // WORD) * WORD
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, wp - w)))
+    kernel = functools.partial(_encode_kernel, h=h, wp=wp)
+    bits, cond = pl.pallas_call(
+        kernel,
+        grid=(c,),
+        in_specs=[pl.BlockSpec((1, h, wp), lambda ci: (ci, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, h, wp // WORD), lambda ci: (ci, 0, 0)),
+            pl.BlockSpec((1, h, wp), lambda ci: (ci, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, h, wp // WORD), jnp.uint32),
+            jax.ShapeDtypeStruct((c, h, wp), x.dtype),
+        ],
+        interpret=interpret,
+    )(xp)
+    return bits, cond[:, :, :w]

@@ -1,0 +1,63 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode — the
+kernel body executes as jnp ops, which is the validation path; on TPU they
+compile to Mosaic.  ``interpret=None`` auto-detects.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bmod
+from repro.core import im2col as i2c
+from repro.kernels.bitmap_encode import bitmap_encode_pallas
+from repro.kernels.bitmap_spgemm import (  # noqa: F401  (re-exports)
+    bitmap_spgemm,
+    bitmap_spgemm_kcondensed,
+    bitmap_spgemm_planned,
+    kcondense,
+    plan_slices,
+)
+from repro.kernels.sparse_im2col import sparse_im2col_pallas
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return bool(interpret)
+
+
+def bitmap_encode(x: jax.Array, interpret: Optional[bool] = None):
+    """(C, H, W) dense → (packed bits, row-condensed values)."""
+    return bitmap_encode_pallas(x, interpret=_auto_interpret(interpret))
+
+
+def sparse_im2col(
+    x: jax.Array, kh: int, kw: int, stride: int = 1,
+    interpret: Optional[bool] = None,
+) -> i2c.LoweredBitmap:
+    """Implicit bitmap im2col of an (H, W, C) feature map.
+
+    stride==1 runs the fused Pallas path (encode kernel → im2col kernel);
+    other strides use the jnp reference (same outputs).
+    """
+    interp = _auto_interpret(interpret)
+    if stride != 1:
+        return i2c.im2col_bitmap(x, kh, kw, stride)
+    h, w, c = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    p = oh * ow
+    xc = jnp.moveaxis(x, -1, 0)                        # (C, H, W)
+    bits, cond = bitmap_encode_pallas(xc, interpret=interp)
+    low_bits, low_vals = sparse_im2col_pallas(
+        cond, bits, kh=kh, kw=kw, interpret=interp)
+    # convert per-row packed bitmap (KKC, OH, OWw) to flat-P packing
+    mask = bmod.unpack_bits(low_bits, axis=-1)[..., :ow]   # (KKC, OH, OW)
+    flat = mask.reshape(-1, p)
+    packed = bmod.pack_bits(jnp.pad(flat, ((0, 0), (0, (-p) % bmod.WORD))),
+                            axis=1)
+    counts = jnp.sum(flat, axis=1, dtype=jnp.int32)
+    return i2c.LoweredBitmap(bitmap=packed, values=low_vals, counts=counts)

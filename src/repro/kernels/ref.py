@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes/densities and assert_allclose
+against these references (interpret-mode kernel vs oracle on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+from repro.core import im2col as i2c
+
+
+def spgemm_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    """Oracle for bitmap_spgemm: plain matmul with f32 accumulation."""
+    out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def sparse_im2col_ref(x: jax.Array, kh: int, kw: int, stride: int = 1):
+    """Oracle for the sparse_im2col kernel: the jnp bitmap im2col
+    (itself validated against dense im2col in tests)."""
+    return i2c.im2col_bitmap(x, kh, kw, stride)
+
+
+def encode_ref(x: jax.Array, slice_k: int = 128):
+    """Oracle for bitmap_encode: packed bitmap, per-row-condensed values,
+    per-slice column-activity counts."""
+    mask = x != 0
+    packed = bm.pack_bits(jnp.pad(mask, ((0, 0), (0, (-x.shape[1]) % 32))),
+                          axis=1)
+    cond = bm._condense(x, mask, axis=1)
+    counts = jnp.sum(mask, axis=1, dtype=jnp.int32)
+    k = x.shape[1]
+    s = -(-k // slice_k)
+    colact = jnp.any(jnp.pad(mask, ((0, 0), (0, s * slice_k - k))).reshape(
+        x.shape[0], s, slice_k), axis=-1)
+    return packed, cond, counts, colact

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: bitmap-based implicit sparse im2col (paper Fig. 11).
+
+One grid program per lowered row k = (dy, dx, c).  The program reads the
+packed bitmap words and the row-condensed values of feature-map rows
+dy..dy+OH-1 (already in VMEM — the "registers" of the paper's S1), then:
+
+  S2  extracts the window bits by word shift/or (the paper's mask+shift),
+  S3  computes value offsets from cumulative popcounts (the accumulated
+      shifted-out bits),
+  S4  popcounts the window and gathers the condensed value segments with
+      dynamic slices, emitting the lowered row directly in condensed form.
+
+The lowered matrix never exists in HBM (implicit im2col); the outputs are
+exactly the (bitmap, condensed values) operand the SpGEMM kernel's planner
+consumes.  Kernel fast-path is stride=1 (the dominant DNN case and the
+paper's running example); other strides fall back to the jnp reference in
+``ops.py``.
+
+Output bitmap layout: per-output-row packed words, i.e. shape
+(KKC, OH, ceil(OW/32)) — each feature row's window bits start a fresh word
+(lane alignment); ``ops.py`` provides the conversion to the flat-P layout.
+Values/counts layouts are identical to the jnp reference.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.bitmap import WORD
+
+
+def _im2col_kernel(vals_ref, bits_ref, out_bits_ref, out_vals_ref, *,
+                   oh: int, ow: int, oww: int):
+    dy = pl.program_id(1)
+    dx = pl.program_id(2)
+
+    vals_rows = vals_ref[0, pl.ds(dy, oh), :]        # (OH, Wp) condensed
+    words = bits_ref[0, pl.ds(dy, oh), :]            # (OH, Wwp) packed
+
+    q = (dx // WORD).astype(jnp.int32)
+    r = (dx % WORD).astype(jnp.uint32)
+
+    # ---- S2: window bit extraction (mask + shift on the bitmap row) ----
+    wq = jax.lax.dynamic_slice(words, (0, q), (oh, oww + 1))
+    lo = wq[:, :oww] >> r
+    hi = jnp.where(r == 0, jnp.uint32(0),
+                   wq[:, 1:] << (jnp.uint32(WORD) - r))
+    lowered = lo | hi                                 # (OH, OWw)
+    tail = ow % WORD
+    if tail:
+        lane = jax.lax.broadcasted_iota(jnp.int32, (oh, oww), 1)
+        tail_mask = jnp.where(lane == oww - 1,
+                              jnp.uint32((1 << tail) - 1),
+                              jnp.uint32(0xFFFFFFFF))
+        lowered = lowered & tail_mask
+    out_bits_ref[0, :, :] = lowered
+
+    # ---- S3: offsets = accumulated shifted-out popcount ----
+    pc = jax.lax.population_count(words).astype(jnp.int32)   # (OH, Wwp)
+    prefix = jnp.cumsum(pc, axis=1) - pc                      # exclusive
+    off_word = jax.lax.dynamic_slice(prefix, (0, q), (oh, 1))[:, 0]
+    in_word = jax.lax.population_count(
+        wq[:, 0] & ((jnp.uint32(1) << r) - jnp.uint32(1))).astype(jnp.int32)
+    offs = off_word + in_word                                 # (OH,)
+
+    # ---- S4: popcount window lengths + condensed value gather ----
+    seg_lens = jnp.sum(jax.lax.population_count(lowered).astype(jnp.int32),
+                       axis=1)                                # (OH,)
+    out_vals_ref[0, :] = jnp.zeros_like(out_vals_ref[0, :])
+    lane = jax.lax.iota(jnp.int32, ow)
+
+    def body(oy, off_run):
+        start = jax.lax.dynamic_slice(offs, (oy,), (1,))[0]
+        seg = jax.lax.dynamic_slice(vals_rows, (oy, start), (1, ow))[0]
+        ln = jax.lax.dynamic_slice(seg_lens, (oy,), (1,))[0]
+        seg = jnp.where(lane < ln, seg, 0)
+        pl.store(out_vals_ref, (0, pl.ds(off_run, ow)), seg)
+        return off_run + ln
+
+    jax.lax.fori_loop(0, oh, body, jnp.int32(0))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kh", "kw", "interpret"))
+def sparse_im2col_pallas(
+    cond_vals: jax.Array,   # (C, H, W) row-condensed values
+    bits: jax.Array,        # (C, H, ceil(W/32)) packed uint32
+    *, kh: int, kw: int, interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (lowered_bits (KKC, OH, OWw) uint32, lowered_vals (KKC, P))."""
+    c, h, w = cond_vals.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    oww = -(-ow // WORD)
+    p = oh * ow
+    p_cap = -(-(p + ow) // 128) * 128  # slack for the last dynamic store
+
+    vals_p = jnp.pad(cond_vals, ((0, 0), (0, 0), (0, ow)))
+    bits_p = jnp.pad(bits, ((0, 0), (0, 0), (0, 1)))
+    wp = vals_p.shape[2]
+    wwp = bits_p.shape[2]
+    kkc = kh * kw * c
+
+    kernel = functools.partial(_im2col_kernel, oh=oh, ow=ow, oww=oww)
+    out_bits, out_vals = pl.pallas_call(
+        kernel,
+        grid=(c, kh, kw),
+        in_specs=[
+            pl.BlockSpec((1, h, wp), lambda ci, dy, dx: (ci, 0, 0)),
+            pl.BlockSpec((1, h, wwp), lambda ci, dy, dx: (ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, oh, oww),
+                         lambda ci, dy, dx: ((dy * kw + dx) * c + ci, 0, 0)),
+            pl.BlockSpec((1, p_cap),
+                         lambda ci, dy, dx: ((dy * kw + dx) * c + ci, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((kkc, oh, oww), jnp.uint32),
+            jax.ShapeDtypeStruct((kkc, p_cap), cond_vals.dtype),
+        ],
+        interpret=interpret,
+    )(vals_p, bits_p)
+    return out_bits, out_vals[:, :p]

@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level state) so importing never touches jax device
+state; the dry-run sets XLA_FLAGS for 512 host devices before any import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (one v5e pod slice) or 2×16×16 (two pods) device mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Degenerate mesh over the locally visible devices (tests/smoke)."""
+    n = len(jax.devices())
+    dp = max(n // model_parallel, 1)
+    return jax.make_mesh((dp, model_parallel), ("data", "model"))

@@ -1,0 +1,56 @@
+"""Serving launcher: sharded prefill/decode on a mesh + batching engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+        --smoke --requests 4
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config, get_run_config, smoke_config
+from repro.configs.base import RunConfig
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import nn, transformer as tfm
+from repro.serving.engine import Engine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--capacity", type=int, default=128)
+    args = ap.parse_args()
+
+    if args.smoke:
+        cfg = smoke_config(args.arch)
+        mesh = make_host_mesh()
+        rc = RunConfig()
+    else:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh()
+        rc = get_run_config(args.arch, "decode_32k")
+    rules = shd.make_rules("decode")
+
+    with mesh, nn.axis_rules(rules, mesh=mesh):
+        params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+        engine = Engine(params, cfg, slots=args.slots,
+                        capacity=args.capacity, rc=rc)
+        t0 = time.time()
+        for uid in range(args.requests):
+            engine.submit(Request(uid=uid, prompt=[1 + uid, 2, 3],
+                                  max_new_tokens=args.max_new))
+        done = engine.run_to_completion()
+        dt = time.time() - t0
+    toks = sum(len(r.output) for r in done)
+    for r in sorted(done, key=lambda r: r.uid):
+        print(f"req {r.uid}: {r.output}")
+    print(f"{toks} tokens in {dt:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Production training launcher.
+
+Builds the mesh, resolves sharding rules, pjits the train step with
+explicit in/out shardings, and drives the loop with checkpointing,
+straggler monitoring, and restart-safe resumption.  On this CPU container
+it runs reduced configs end-to-end; on a real cluster the same entrypoint
+runs per-host under ``jax.distributed.initialize``.
+
+    PYTHONPATH=src python -m repro.launch.train --arch chatglm3-6b \
+        --smoke --steps 20
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs import get_config, get_run_config, smoke_config
+from repro.configs.base import RunConfig
+from repro.data.pipeline import Prefetcher, SyntheticTokens
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import nn, transformer as tfm
+from repro.training import optimizer as opt
+from repro.training.fault_tolerance import (CheckpointManager,
+                                            StragglerMonitor)
+from repro.training.train_loop import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config + host mesh")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if args.smoke:
+        cfg = smoke_config(args.arch)
+        mesh = make_host_mesh()
+        rc = RunConfig(microbatches=2, learning_rate=1e-3)
+    else:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        rc = get_run_config(args.arch, "train_4k")
+    rules = shd.make_rules("train", multi_pod=args.multi_pod)
+
+    with mesh, nn.axis_rules(rules, mesh=mesh):
+        params, specs = tfm.init_model(jax.random.PRNGKey(0), cfg)
+        param_ps = shd.tree_pspecs_shaped(specs, params, rules, mesh)
+        param_sh = shd.tree_shardings(mesh, param_ps)
+        params = jax.tree_util.tree_map(jax.device_put, params, param_sh)
+        ostate = opt.init_opt_state(params, rc)
+
+        step_fn = jax.jit(
+            make_train_step(cfg, rc, compress_grads=args.compress_grads,
+                            param_pspecs=param_ps),
+            donate_argnums=(0, 1))
+
+        data = SyntheticTokens(cfg.vocab_size, args.global_batch,
+                               args.seq, seed=0)
+        mgr = CheckpointManager(args.ckpt_dir, keep=2)
+        mon = StragglerMonitor()
+
+        state_like = {"params": params, "m": ostate.m, "v": ostate.v,
+                      "step": ostate.step}
+        restored = mgr.restore_latest(state_like)
+        start = 0
+        if restored is not None:
+            st, manifest = restored
+            params, start = st["params"], manifest["step"]
+            ostate = opt.OptState(m=st["m"], v=st["v"], step=st["step"])
+            print(f"resumed from step {start}")
+
+        from repro.distributed.compression import init_error_feedback
+        ef = init_error_feedback(params) if args.compress_grads else None
+        pre = Prefetcher(data, start_step=start)
+        batch_sh = NamedSharding(
+            mesh, shd.spec_from_axes(("batch", None), rules))
+        try:
+            for i in range(start, args.steps):
+                _, host_batch = pre.next()
+                batch = {k: jax.device_put(jnp.asarray(v), batch_sh)
+                         for k, v in host_batch.items()}
+                with mon:
+                    params, ostate, ef, m = step_fn(params, ostate, ef,
+                                                    batch)
+                if i % 10 == 0:
+                    print(f"step {i:4d}  loss {float(m['loss']):.3f}  "
+                          f"gnorm {float(m['grad_norm']):.2f}  "
+                          f"stragglers {mon.flags}")
+                if (i + 1) % args.ckpt_every == 0:
+                    mgr.save(i + 1, {"params": params, "m": ostate.m,
+                                     "v": ostate.v, "step": ostate.step})
+        finally:
+            pre.close()
+            mgr.wait()
+    print("training complete")
+
+
+if __name__ == "__main__":
+    main()

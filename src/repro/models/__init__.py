@@ -1,0 +1,6 @@
+"""Model substrate: attention, MLP, MoE, SSM, caches, assemblies."""
+from repro.models import (attention, cache, mlp, model_zoo, moe, nn, ssm,
+                          transformer)
+
+__all__ = ["attention", "cache", "mlp", "model_zoo", "moe", "nn", "ssm",
+           "transformer"]

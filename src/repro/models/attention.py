@@ -1,0 +1,248 @@
+"""Attention: GQA, sliding-window, cross-attention, RoPE variants, caches.
+
+Grouped-query attention never materialises repeated KV heads (einsum with
+an explicit group dim), softmax runs in f32, and long-KV attention runs
+KV-chunked (flash-style running log-sum-exp via ``lax.scan``) so prefill
+at 32k context keeps activation memory O(chunk) instead of O(S²).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import cache as kvc
+from repro.models import nn
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions: jax.Array, dim: int, theta: float) -> Tuple[
+        jax.Array, jax.Array]:
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, style: str,
+               theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (S,) absolute token positions."""
+    if style == "none":
+        return x
+    hd = x.shape[-1]
+    rot = hd if style == "half" else hd // 2  # chatglm "2d": half the dims
+    cos, sin = _rope_angles(positions, rot, theta)       # (S, rot/2)
+    cos = cos[None, :, None, :].astype(x.dtype)
+    sin = sin[None, :, None, :].astype(x.dtype)
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(xr, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return jnp.concatenate([out, xp], axis=-1) if rot < hd else out
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False):
+    hd, h, kv, d = cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "wq": nn.normal(ks[0], (d, h, hd), ("embed", "heads", "head_dim"),
+                        stddev=scale),
+        "wk": nn.normal(ks[1], (d, kv, hd), ("embed", "kv_heads",
+                                             "head_dim"), stddev=scale),
+        "wv": nn.normal(ks[2], (d, kv, hd), ("embed", "kv_heads",
+                                             "head_dim"), stddev=scale),
+        "wo": nn.normal(ks[3], (h, hd, d), ("heads", "head_dim", "embed"),
+                        stddev=scale),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = nn.zeros((h, hd), ("heads", "head_dim"))
+        p["bk"] = nn.zeros((kv, hd), ("kv_heads", "head_dim"))
+        p["bv"] = nn.zeros((kv, hd), ("kv_heads", "head_dim"))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# core attention (grouped, masked, optionally KV-chunked)
+# ---------------------------------------------------------------------------
+
+def _attend_block(q, k, v, qpos, kpos, window) -> Tuple[jax.Array, jax.Array,
+                                                        jax.Array]:
+    """Unnormalised attention over one KV block.
+
+    q: (B, Sq, KV, G, hd); k/v: (B, Skv, KV, hd);
+    qpos: (Sq,), kpos: (Skv,) absolute positions (-1 = invalid slot).
+    Returns (acc (B,Sq,KV,G,hd) f32, row max m, row sumexp l).
+    """
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (q.shape[-1] ** -0.5)
+    valid = (kpos[None, :] >= 0) & (kpos[None, :] <= qpos[:, None])
+    if window is not None:
+        valid &= kpos[None, :] > (qpos[:, None] - window)
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)                       # (B,KV,G,Sq)
+    e = jnp.exp(scores - m[..., None])
+    e = jnp.where(valid[None, None, None], e, 0.0)
+    l = jnp.sum(e, axis=-1)
+    acc = jnp.einsum("bkgqs,bskd->bqkgd", e, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return acc, jnp.moveaxis(m, 3, 1), jnp.moveaxis(l, 3, 1)  # (B,Sq,KV,G)
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+           qpos: jax.Array, kpos: jax.Array,
+           window: Optional[int] = None, chunk: int = 0,
+           k_scale: Optional[jax.Array] = None,
+           v_scale: Optional[jax.Array] = None) -> jax.Array:
+    """Masked GQA attention.  q: (B,Sq,H,hd), k/v: (B,Skv,KVH,hd).
+
+    chunk > 0 and Skv > chunk → scan over KV chunks with running
+    log-sum-exp (activation memory O(Sq·chunk) instead of O(Sq·Skv)).
+    k/v may be int8 with per-(token, head) ``k_scale``/``v_scale`` —
+    dequantisation then happens per chunk inside the scan, so the full
+    bf16/f32 cache copy is never materialised (the int8 KV memory win
+    survives buffer assignment).
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+
+    def deq(kb, vb, ks, vs):
+        if ks is None:
+            return kb, vb
+        kb = (kb.astype(jnp.bfloat16) * ks.astype(jnp.bfloat16))
+        vb = (vb.astype(jnp.bfloat16) * vs.astype(jnp.bfloat16))
+        return kb.astype(q.dtype), vb.astype(q.dtype)
+
+    if chunk and skv > chunk and skv % chunk == 0:
+        nc = skv // chunk
+        ks_ = k.reshape(b, nc, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+        vs_ = v.reshape(b, nc, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+        kposc = kpos.reshape(nc, chunk)
+        if k_scale is None:
+            xs = (ks_, vs_, kposc)
+        else:
+            ksc = k_scale.reshape(b, nc, chunk, kvh, 1).transpose(
+                1, 0, 2, 3, 4)
+            vsc = v_scale.reshape(b, nc, chunk, kvh, 1).transpose(
+                1, 0, 2, 3, 4)
+            xs = (ks_, vs_, kposc, ksc, vsc)
+
+        def step(carry, blk):
+            acc, m, l = carry
+            if k_scale is None:
+                kb, vb, kp = blk
+            else:
+                kb, vb, kp, ksb, vsb = blk
+                kb, vb = deq(kb, vb, ksb, vsb)
+            a2, m2, l2 = _attend_block(qg, kb, vb, qpos, kp, window)
+            m_new = jnp.maximum(m, m2)
+            c1 = jnp.exp(m - m_new)
+            c2 = jnp.exp(m2 - m_new)
+            acc = acc * c1[..., None] + a2 * c2[..., None]
+            l = l * c1 + l2 * c2
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, sq, kvh, g, hd), jnp.float32)
+        m0 = jnp.full((b, sq, kvh, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, sq, kvh, g), jnp.float32)
+        (acc, _, l), _ = jax.lax.scan(step, (acc0, m0, l0), xs)
+    else:
+        if k_scale is not None:
+            k, v = deq(k, v, k_scale, v_scale)
+        acc, _, l = _attend_block(qg, k, v, qpos, kpos, window)
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# layer forward (self / cross, with optional cache)
+# ---------------------------------------------------------------------------
+
+def attention_forward(
+    params: Dict, x: jax.Array, cfg: ModelConfig, *,
+    positions: jax.Array,                  # (S,) absolute positions of x
+    cache: Optional[kvc.KVCache] = None,   # decode/prefill cache
+    kv_source: Optional[jax.Array] = None,  # cross-attn memory (B, M, D)
+    is_cross: bool = False,
+    causal: bool = True,
+    update_cache: bool = True,
+    chunk: int = 0,
+) -> Tuple[jax.Array, Optional[kvc.KVCache]]:
+    """One attention layer (projections + attend + output).
+
+    Self-attention: kv_source is None (K/V from x, RoPE applied).
+    Cross-attention (is_cross): kv_source is the memory (causal=False);
+    at decode the memory K/V live in a pre-filled cache
+    (kv_source=None, update_cache=False).
+    Returns (output (B,S,D), updated cache or None).
+    """
+    if is_cross:
+        causal = False
+    # archs whose head count doesn't divide the model axis (yi: 56,
+    # whisper: 8) fall back to query-sequence sharding for attention —
+    # queries are independent, so this is exact (DESIGN.md §6).
+    tp_heads = nn.dim_shardable(cfg.n_heads, "heads")
+    seq_ax = "seq" if tp_heads else "seq_q"
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(q.dtype)
+    q = nn.shard_act(q, "batch", seq_ax, "heads", None)
+
+    k = v = None
+    if kv_source is not None or cache is None or update_cache:
+        src = x if kv_source is None else kv_source
+        k = jnp.einsum("bsd,dhk->bshk", src, params["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", src, params["wv"].astype(x.dtype))
+        if "bk" in params:
+            k = k + params["bk"].astype(k.dtype)
+            v = v + params["bv"].astype(v.dtype)
+        k = nn.shard_act(k, "batch", "seq", "kv_heads", None)
+        v = nn.shard_act(v, "batch", "seq", "kv_heads", None)
+
+    if not is_cross:
+        q = apply_rope(q, positions, cfg.rope_style, cfg.rope_theta)
+        if k is not None:
+            k = apply_rope(k, positions, cfg.rope_style, cfg.rope_theta)
+
+    window = (cfg.sliding_window or None) if causal else None
+    big = jnp.int32(2 ** 30)
+
+    if cache is not None:
+        if update_cache:
+            cache = kvc.update(cache, k, v)
+        qpos = positions if causal else jnp.full_like(positions, big)
+        kpos = kvc.key_positions(cache)
+        if cache.quantized:
+            # raw int8 KV + per-chunk dequant inside attend
+            out = attend(q, cache.k, cache.v, qpos=qpos, kpos=kpos,
+                         window=window, chunk=chunk,
+                         k_scale=cache.k_scale, v_scale=cache.v_scale)
+        else:
+            kd, vd, _ = kvc.read(cache, dtype=x.dtype)
+            out = attend(q, kd, vd, qpos=qpos, kpos=kpos, window=window,
+                         chunk=chunk)
+    else:
+        if causal:
+            qpos, kpos = positions, positions
+        else:
+            qpos = jnp.full((x.shape[1],), big, jnp.int32)
+            kpos = jnp.arange(k.shape[1], dtype=jnp.int32)
+        out = attend(q, k, v, qpos=qpos, kpos=kpos, window=window,
+                     chunk=chunk)
+
+    out = nn.shard_act(out, "batch", seq_ax, "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return nn.shard_act(y, "batch", "seq", "embed"), cache

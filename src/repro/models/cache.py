@@ -1,0 +1,130 @@
+"""KV / state caches for serving.
+
+Uniform pytree structure across variants so ``serve_step`` stays a single
+compiled function:
+
+* full cache      — (B, T, KV, hd) per layer-stack, bf16 or int8+scales.
+* sliding window  — ring buffer of ``window`` slots (mixtral SWA): O(window)
+  memory regardless of context length, which is what makes ``long_500k``
+  runnable for SWA models.
+* int8 quantised  — per-(token, head) symmetric scales; halves decode-shape
+  HBM so the 32k-context caches of the biggest dense archs fit a v5e.
+
+SSM state caches live in ``repro.models.ssm``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (..., T, KV, hd)   bf16 or int8
+    v: jax.Array
+    k_scale: jax.Array  # (..., T, KV, 1)    f32 (ones when unquantised)
+    v_scale: jax.Array
+    pos: jax.Array      # scalar int32: number of tokens written
+    window: jax.Array   # scalar int32: ring size; ==T means full cache
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[-3]
+
+    @property
+    def quantized(self) -> bool:
+        return self.k.dtype == jnp.int8
+
+
+def init_cache(batch: int, capacity: int, n_kv: int, hd: int, *,
+               stack: Tuple[int, ...] = (), dtype=jnp.bfloat16,
+               quantized: bool = False, window: int = 0) -> KVCache:
+    shape = (*stack, batch, capacity, n_kv, hd)
+    sshape = (*stack, batch, capacity, n_kv, 1)
+    kv_dtype = jnp.int8 if quantized else dtype
+    return KVCache(
+        k=jnp.zeros(shape, kv_dtype),
+        v=jnp.zeros(shape, kv_dtype),
+        k_scale=jnp.ones(sshape, jnp.float32),
+        v_scale=jnp.ones(sshape, jnp.float32),
+        pos=jnp.zeros(stack, jnp.int32),
+        window=jnp.full(stack, window or capacity, jnp.int32),
+    )
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True).astype(jnp.float32)
+    scale = jnp.maximum(scale, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def update(cache: KVCache, k_new: jax.Array, v_new: jax.Array) -> KVCache:
+    """Write S new tokens (k_new: (B, S, KV, hd)) at the ring cursor.
+
+    Ring semantics: token at absolute position p lives in slot p mod
+    window.  Three cases, chosen statically by S vs capacity:
+      * S >= capacity (prefill longer than an SWA window): only the last
+        ``capacity`` tokens survive — written as a roll;
+      * S == 1 (decode): single-slot dynamic update;
+      * otherwise: modular scatter (handles wrap-around mid-stream).
+    """
+    s = k_new.shape[-3]
+    cap = cache.capacity
+    if cache.quantized:
+        k_new, ks = _quantize(k_new)
+        v_new, vs = _quantize(v_new)
+    else:
+        k_new = k_new.astype(cache.k.dtype)
+        v_new = v_new.astype(cache.v.dtype)
+        ks = jnp.ones((*k_new.shape[:-1], 1), jnp.float32)
+        vs = ks
+
+    def put(buf, upd):
+        if s >= cap:
+            # keep the newest `cap` tokens; token (pos+s-cap+j) → slot
+            # (pos+s-cap+j) mod cap  ⇔ roll by (pos+s-cap)
+            tail = upd[..., s - cap:, :, :]
+            shift = (cache.pos + s - cap) % cache.window
+            return jnp.roll(tail, shift, axis=-3)
+        if s == 1:
+            start = cache.pos % cache.window
+            idx = (0,) * (buf.ndim - 4) + (0, start, 0, 0)
+            return jax.lax.dynamic_update_slice(buf, upd, idx)
+        slots = (cache.pos + jnp.arange(s)) % cache.window
+        if buf.ndim == 4:
+            return buf.at[:, slots].set(upd)
+        return buf.at[:, :, slots].set(upd)  # stacked (L, B, T, ...)
+
+    return cache._replace(
+        k=put(cache.k, k_new), v=put(cache.v, v_new),
+        k_scale=put(cache.k_scale, ks), v_scale=put(cache.v_scale, vs),
+        pos=cache.pos + s)
+
+
+def key_positions(cache: KVCache) -> jax.Array:
+    """Absolute token position held in each slot (-1 = empty).
+
+    Slot i holds position p with p ≡ i (mod window), the newest such
+    p < pos.  For never-wrapping full caches this reduces to p = i for
+    i < pos (same formula).
+    """
+    slots = jnp.arange(cache.capacity, dtype=jnp.int32)
+    last = cache.pos - 1
+    kpos = last - ((last - slots) % cache.window)
+    return jnp.where((slots < cache.window) & (kpos >= 0)
+                     & (cache.pos > 0), kpos, -1)
+
+
+def read(cache: KVCache, dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array,
+                                                      jax.Array]:
+    """Dequantised (k, v, key_positions).
+
+    NOTE: materialises the dequantised cache — prefer passing the raw
+    int8 cache + scales to ``attention.attend`` (per-chunk dequant) for
+    long contexts; kept for the unquantised/short path.
+    """
+    k = cache.k.astype(jnp.float32) * cache.k_scale
+    v = cache.v.astype(jnp.float32) * cache.v_scale
+    return k.astype(dtype), v.astype(dtype), key_positions(cache)

@@ -1,0 +1,64 @@
+"""MLP blocks: SwiGLU / squared-ReLU / GeLU / ReLU (+ dual-sparse mode).
+
+Squared-ReLU (nemotron) and ReLU (whisper) produce genuine activation
+zeros — these are the layers where the paper's dual-side SpGEMM applies at
+inference; ``sparse_stats`` exposes the measured activation sparsity and
+MXU step counts for the benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int = 0):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": nn.normal(ks[0], (d, f), ("embed", "mlp"), stddev=d ** -0.5),
+        "w_down": nn.normal(ks[1], (f, d), ("mlp", "embed"),
+                            stddev=f ** -0.5),
+    }
+    if cfg.mlp_type == "swiglu":
+        p["w_gate"] = nn.normal(ks[2], (d, f), ("embed", "mlp"),
+                                stddev=d ** -0.5)
+    return p
+
+
+def _activate(h: jax.Array, gate, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * h
+    if kind == "relu2":                      # nemotron squared-ReLU
+        r = jnp.maximum(h, 0.0)
+        return r * r
+    if kind == "gelu":
+        return jax.nn.gelu(h)
+    if kind == "relu":
+        return jnp.maximum(h, 0.0)
+    raise ValueError(kind)
+
+
+def mlp_forward(params: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w_up = params["w_up"].astype(x.dtype)
+    h = jnp.dot(x, w_up)
+    gate = jnp.dot(x, params["w_gate"].astype(x.dtype)) \
+        if "w_gate" in params else None
+    h = _activate(h, gate, cfg.mlp_type)
+    h = nn.shard_act(h, "batch", "seq", "mlp")
+    y = jnp.dot(h, params["w_down"].astype(x.dtype))
+    return nn.shard_act(y, "batch", "seq", "embed")
+
+
+def mlp_activation_sparsity(params: Dict, x: jax.Array,
+                            cfg: ModelConfig) -> jax.Array:
+    """Fraction of zeros in the post-activation tensor (dual-side input)."""
+    h = jnp.dot(x, params["w_up"].astype(x.dtype))
+    gate = jnp.dot(x, params["w_gate"].astype(x.dtype)) \
+        if "w_gate" in params else None
+    h = _activate(h, gate, cfg.mlp_type)
+    return jnp.mean(h == 0.0)

@@ -1,0 +1,64 @@
+"""Build models and input specs for every assigned architecture."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer
+
+
+def build_model(cfg: ModelConfig, seed: int = 0) -> Tuple[Dict, Dict]:
+    """(params, logical_specs) for an architecture config."""
+    return transformer.init_model(jax.random.PRNGKey(seed), cfg)
+
+
+def abstract_params(cfg: ModelConfig) -> Tuple[Any, Dict]:
+    """ShapeDtypeStruct params (no allocation) + logical specs."""
+    box = {}
+
+    def fn():
+        p, s = transformer.init_model(jax.random.PRNGKey(0), cfg)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(fn)
+    return shapes, box["specs"]
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    train:   tokens + labels (+ frontend stubs)
+    prefill: tokens (+ frontend stubs)
+    decode:  single-token step inputs (caches are built separately via
+             ``jax.eval_shape(init_caches, ...)`` in the launcher).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    specs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    else:  # decode: one new token against a cache of length s
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+    if cfg.frontend == "audio" and shape.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_len, cfg.d_model), bf16)
+    if cfg.frontend == "vision" and shape.kind != "decode":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_image_tokens, cfg.d_model), bf16)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                quantized: bool = False):
+    """Abstract cache pytree for a decode cell (capacity = seq_len)."""
+    return jax.eval_shape(
+        lambda: transformer.init_caches(
+            cfg, shape.global_batch, shape.seq_len, quantized=quantized))

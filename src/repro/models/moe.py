@@ -1,0 +1,263 @@
+"""Top-k mixture-of-experts with capacity-bounded scatter dispatch.
+
+Dispatch is scatter/gather-based (no (tokens × experts × capacity) one-hot
+einsum): token→expert assignment positions come from a cumulative-sum rank
+over the flattened (token, choice) list, tokens beyond an expert's
+capacity are dropped (standard "dropping" MoE), and expert FFNs run as one
+batched einsum over the stacked expert weights — the expert dim is the EP
+shard axis.  FLOPs therefore track 6·N_active·D, which keeps the roofline
+accounting honest (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+from repro.models.mlp import _activate
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": nn.normal(ks[0], (d, e), ("embed", "experts"),
+                            stddev=d ** -0.5),
+        "w_up": nn.normal(ks[1], (e, d, f), ("experts", "embed", "mlp"),
+                          stddev=d ** -0.5),
+        "w_down": nn.normal(ks[2], (e, f, d), ("experts", "mlp", "embed"),
+                            stddev=f ** -0.5),
+    }
+    if cfg.mlp_type == "swiglu":
+        p["w_gate"] = nn.normal(ks[3], (e, d, f),
+                                ("experts", "embed", "mlp"),
+                                stddev=d ** -0.5)
+    return p
+
+
+def moe_forward(params: Dict, x: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (y, aux_loss).  Dropping MoE with capacity factor.
+
+    On a mesh, dispatch runs as explicit expert parallelism under
+    ``shard_map``: local scatter into per-source capacity buffers, an
+    ``all_to_all`` over the expert (model) axis, batched expert FFNs on
+    local experts, reverse ``all_to_all``, local combine.  GSPMD's
+    scatter/gather partitioning would otherwise replicate (tokens × d)
+    f32 buffers and all-reduce them — hundreds of GiB/device at
+    prefill_32k scale (EXPERIMENTS.md §Perf).  Without a mesh (unit
+    tests), a single-device scatter/gather path runs instead.
+    """
+    if nn.current_mesh() is not None:
+        return _moe_shard_map(params, x, cfg)
+    return _moe_local(params, x, cfg)
+
+
+def _moe_local(params: Dict, x: jax.Array, cfg: ModelConfig
+               ) -> Tuple[jax.Array, jax.Array]:
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_active
+    t = b * s
+    cap = int(cfg.capacity_factor * t * k / e)
+    cap = max(8, -(-cap // 8) * 8)
+
+    xt = nn.shard_act(x.reshape(t, d), "tokens_flat", "embed")
+    logits = jnp.dot(xt, params["router"].astype(jnp.float32))  # (T, E)
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates = nn.shard_act(gates, "tokens_flat", None)
+    top_g, top_i = jax.lax.top_k(gates, k)                      # (T, k)
+    top_g = top_g / jnp.sum(top_g, axis=-1, keepdims=True)
+
+    # position of each (token, choice) inside its expert's queue —
+    # sort-based ranking, O(T·k) memory (a (T·k × E) one-hot cumsum is
+    # hundreds of GiB at prefill_32k scale)
+    tk = t * k
+    flat_e = top_i.reshape(-1)                                  # (T*k,)
+    perm = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[perm]
+    seg_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank_sorted = jnp.arange(tk, dtype=jnp.int32) - seg_start
+    flat_pos = jnp.zeros((tk,), jnp.int32).at[perm].set(
+        rank_sorted.astype(jnp.int32))
+    keep = flat_pos < cap
+    dest_e = jnp.where(keep, flat_e, e).reshape(t, k)  # e = trash row
+    dest_p = jnp.where(keep, flat_pos, 0).reshape(t, k)
+
+    # scatter tokens into (E, cap, D) expert buffers, one k-choice at a
+    # time: peak intermediate is (T, D), never (T·k, D)
+    xe = jnp.zeros((e + 1, cap, d), x.dtype)
+    for j in range(k):
+        xe = xe.at[dest_e[:, j], dest_p[:, j]].set(xt, mode="drop")
+    xe = nn.shard_act(xe[:e], "experts", "expert_cap", None)
+
+    # batched expert FFN over stacked weights (EP axis = experts)
+    h = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(x.dtype))
+    gate = jnp.einsum("ecd,edf->ecf", xe,
+                      params["w_gate"].astype(x.dtype)) \
+        if "w_gate" in params else None
+    h = _activate(h, gate, cfg.mlp_type)
+    h = nn.shard_act(h, "experts", "expert_cap", None)
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(x.dtype))
+    ye = nn.shard_act(ye, "experts", "expert_cap", None)
+
+    # gather back with gate weights, again one k-choice at a time
+    kept = keep.reshape(t, k)
+    y = jnp.zeros((t, d), x.dtype)
+    for j in range(k):
+        yj = ye[dest_e[:, j].clip(0, e - 1), dest_p[:, j]]      # (T, D)
+        yj = nn.shard_act(yj, "tokens_flat", None)
+        wj = jnp.where(kept[:, j], top_g[:, j], 0.0).astype(x.dtype)
+        y = y + yj * wj[:, None]
+
+    # load-balancing auxiliary loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(top_i[:, 0], e, dtype=jnp.float32),
+                       axis=0)
+    router_prob = jnp.mean(gates, axis=0)
+    aux = e * jnp.sum(density * router_prob)
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# shard_map expert parallelism
+# ---------------------------------------------------------------------------
+
+def _dispatch_local(xt, gates, e, k, cap):
+    """Local (per-device) top-k dispatch into (E+1, cap, D) buffers."""
+    t, d = xt.shape
+    top_g, top_i = jax.lax.top_k(gates, k)                   # (t, k)
+    top_g = top_g / jnp.sum(top_g, axis=-1, keepdims=True)
+    flat_e = top_i.reshape(-1)
+    perm = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[perm]
+    seg_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank = jnp.arange(t * k, dtype=jnp.int32) - seg_start
+    pos = jnp.zeros((t * k,), jnp.int32).at[perm].set(rank)
+    keep = pos < cap
+    dest_e = jnp.where(keep, flat_e, e).reshape(t, k)
+    dest_p = jnp.where(keep, pos, 0).reshape(t, k)
+    xe = jnp.zeros((e + 1, cap, d), xt.dtype)
+    for j in range(k):
+        xe = xe.at[dest_e[:, j], dest_p[:, j]].set(xt, mode="drop")
+    return xe[:e], dest_e, dest_p, keep.reshape(t, k), top_g, top_i
+
+
+def _combine_local(ye, dest_e, dest_p, kept, top_g, e, dtype):
+    t, k = dest_e.shape
+    d = ye.shape[-1]
+    y = jnp.zeros((t, d), dtype)
+    for j in range(k):
+        yj = ye[dest_e[:, j].clip(0, e - 1), dest_p[:, j]]
+        wj = jnp.where(kept[:, j], top_g[:, j], 0.0).astype(dtype)
+        y = y + yj * wj[:, None]
+    return y
+
+
+def _moe_shard_map(params: Dict, x: jax.Array, cfg: ModelConfig
+                   ) -> Tuple[jax.Array, jax.Array]:
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = nn.current_mesh()
+    rules = nn.current_rules()
+    e, k = cfg.n_experts, cfg.n_experts_active
+    b, s, d = x.shape
+    ep_axis = rules.get("experts")              # "model"
+    dp_axis = rules.get("batch")                # "data" or ("pod","data")
+    tp = nn.mesh_axis_size(ep_axis)
+    # divisibility fallback: largest dp sub-axis tuple that divides batch
+    # (e.g. b=16 on ("pod","data")=2×16 → ("data",))
+    if dp_axis is not None:
+        parts = tuple(dp_axis) if isinstance(dp_axis, (tuple, list)) \
+            else (dp_axis,)
+        sizes = {p: nn.mesh_axis_size(p) for p in parts}
+        parts = nn._best_divisible(parts, b, sizes)
+        dp_axis = (None if not parts
+                   else parts[0] if len(parts) == 1 else parts)
+    dp = nn.mesh_axis_size(dp_axis)
+    ep_mode = ep_axis is not None and e % tp == 0 and tp > 1
+    tp_axis_names = (tuple(ep_axis) if isinstance(ep_axis, (tuple, list))
+                     else (ep_axis,)) if ep_axis else ()
+    dp_axis_names = (tuple(dp_axis) if isinstance(dp_axis, (tuple, list))
+                     else (dp_axis,)) if dp_axis else ()
+
+    t_loc = (b // dp) * s
+    cap = max(8, -(-int(cfg.capacity_factor * t_loc * k / e) // 8) * 8)
+    f = cfg.d_ff
+    has_gate = "w_gate" in params
+
+    def block(x_blk, router, w_up, w_gate, w_down):
+        # x_blk: (b/dp, s, d); experts/ffn sharded per mode
+        xt = x_blk.reshape(-1, d)
+        # router weights arrive embed-sharded (FSDP): gather over dp
+        if dp_axis_names:
+            router = jax.lax.all_gather(router, dp_axis_names, axis=0,
+                                        tiled=True)
+            w_up = jax.lax.all_gather(w_up, dp_axis_names, axis=1,
+                                      tiled=True)
+            if w_gate is not None:
+                w_gate = jax.lax.all_gather(w_gate, dp_axis_names, axis=1,
+                                            tiled=True)
+        gates = jax.nn.softmax(
+            jnp.dot(xt, router.astype(jnp.float32)), axis=-1)
+        xe, dest_e, dest_p, kept, top_g, top_i = _dispatch_local(
+            xt, gates, e, k, cap)
+
+        if ep_mode:
+            # EP: all_to_all expert dim over the model axis
+            xr = jax.lax.all_to_all(xe, tp_axis_names[0], split_axis=0,
+                                    concat_axis=1, tiled=True)
+            # xr: (E/tp, tp*cap, d); local expert weights (E/tp, d, f)
+            h = jnp.einsum("ecd,edf->ecf", xr, w_up.astype(xr.dtype))
+            gate = jnp.einsum("ecd,edf->ecf", xr,
+                              w_gate.astype(xr.dtype)) \
+                if w_gate is not None else None
+            h = _activate(h, gate, cfg.mlp_type)
+            yr = jnp.einsum("ecf,efd->ecd", h, w_down.astype(xr.dtype))
+            ye = jax.lax.all_to_all(yr, tp_axis_names[0], split_axis=1,
+                                    concat_axis=0, tiled=True)
+        else:
+            # E ∤ tp: experts replicated, FFN dim tensor-parallel
+            h = jnp.einsum("ecd,edf->ecf", xe, w_up.astype(xe.dtype))
+            gate = jnp.einsum("ecd,edf->ecf", xe,
+                              w_gate.astype(xe.dtype)) \
+                if w_gate is not None else None
+            h = _activate(h, gate, cfg.mlp_type)
+            ye = jnp.einsum("ecf,efd->ecd", h, w_down.astype(xe.dtype))
+            if tp_axis_names:
+                ye = jax.lax.psum(ye, tp_axis_names)
+
+        y = _combine_local(ye, dest_e, dest_p, kept, top_g, e, xt.dtype)
+
+        density = jnp.mean(jax.nn.one_hot(top_i[:, 0], e,
+                                          dtype=jnp.float32), axis=0)
+        router_prob = jnp.mean(gates, axis=0)
+        aux = e * jnp.sum(density * router_prob)
+        if dp_axis_names:
+            aux = jax.lax.pmean(aux, dp_axis_names)
+        return y.reshape(x_blk.shape), aux
+
+    dpP = dp_axis if dp_axis else None
+    if ep_mode:
+        up_spec = P(ep_axis, dpP, None)
+        down_spec = P(ep_axis, None, None)
+    else:
+        up_spec = P(None, dpP, ep_axis)
+        down_spec = P(None, ep_axis, None)
+    in_specs = (P(dpP, None, None),              # x
+                P(dpP, None),                    # router (d, E)
+                up_spec,                         # w_up
+                up_spec if has_gate else P(),    # w_gate
+                down_spec)                       # w_down
+    out_specs = (P(dpP, None, None), P())
+
+    fn = shard_map(block, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    w_gate = params.get("w_gate")
+    if w_gate is None:
+        w_gate = jnp.zeros((), x.dtype)  # placeholder, unused
+    y, aux = fn(x, params["router"], params["w_up"], w_gate,
+                params["w_down"])
+    return nn.shard_act(y, "batch", "seq_res", "embed"), aux

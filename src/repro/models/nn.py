@@ -1,0 +1,241 @@
+"""Minimal functional NN toolkit (no flax dependency).
+
+Parameters are nested dicts of arrays.  Init functions build trees of
+:class:`P` leaves — (array, logical_axes) pairs — which :func:`unzip`
+splits into a value tree and a logical-spec tree, so the sharding rules in
+``repro.distributed.sharding`` can map every parameter without a separate
+hand-maintained spec table.
+
+Activation sharding is expressed with :func:`shard_act`, which resolves
+logical axis names against the rules installed by the launcher (no-op when
+no rules are active, so models run unmodified on a single device).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# parameter leaves with logical axes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class P:
+    """A parameter paired with logical axis names (one per dim)."""
+    value: jax.Array
+    axes: Tuple[Optional[str], ...]
+
+    def __post_init__(self):
+        if len(self.axes) != self.value.ndim:
+            raise ValueError(
+                f"axes {self.axes} rank != value rank {self.value.shape}")
+
+
+def _is_p(x) -> bool:
+    return isinstance(x, P)
+
+
+def unzip(tree) -> Tuple[Any, Any]:
+    """Tree of P leaves → (value tree, logical-axes tree)."""
+    values = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=_is_p)
+    specs = jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=_is_p)
+    return values, specs
+
+
+def normal(key, shape, axes, dtype=jnp.float32, stddev=0.02) -> P:
+    return P(jax.random.normal(key, shape, dtype) * jnp.asarray(stddev,
+                                                                dtype), axes)
+
+
+def zeros(shape, axes, dtype=jnp.float32) -> P:
+    return P(jnp.zeros(shape, dtype), axes)
+
+
+def ones(shape, axes, dtype=jnp.float32) -> P:
+    return P(jnp.ones(shape, dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# logical-axis rules context (activation sharding)
+# ---------------------------------------------------------------------------
+
+_RULES: contextvars.ContextVar[Optional[Dict[str, Any]]] = \
+    contextvars.ContextVar("logical_axis_rules", default=None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Dict[str, Any],
+               axis_sizes: Optional[Dict[str, int]] = None,
+               mesh: Optional[Any] = None):
+    """Install logical→mesh axis rules, e.g. {"batch": "data", ...}.
+
+    ``axis_sizes`` (mesh axis name → size) enables divisibility-aware
+    constraint resolution in :func:`shard_act`; ``mesh`` enables
+    shard_map-based blocks (expert-parallel MoE).
+    """
+    token = _RULES.set(rules)
+    token2 = _AXIS_SIZES.set(axis_sizes if axis_sizes is not None
+                             else (dict(mesh.shape) if mesh is not None
+                                   else None))
+    token3 = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+        _AXIS_SIZES.reset(token2)
+        _MESH.reset(token3)
+
+
+def resolve_spec(axes: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None):
+    """Logical axis names → jax PartitionSpec under the current rules.
+
+    * a mesh axis is assigned at most once per spec (first logical axis
+      wins; later collisions replicate) — e.g. with batch→data and
+      embed→data(FSDP), ("batch","seq","embed") → (data, None, None);
+    * with ``shape``, mesh axes that don't divide the dim evenly are
+      dropped (uneven constraints force inefficient GSPMD transitions —
+      e.g. kv_heads=2 over model=16 resolves to replicated).
+    """
+    from jax.sharding import PartitionSpec
+    rules = _RULES.get()
+    if rules is None:
+        return None
+    sizes = _AXIS_SIZES.get() or {}
+    used = set()
+    out = []
+    for i, a in enumerate(axes):
+        m = rules.get(a) if a is not None else None
+        if m is None:
+            out.append(None)
+            continue
+        parts = tuple(m) if isinstance(m, (tuple, list)) else (m,)
+        parts = tuple(p for p in parts if p not in used)
+        if shape is not None and sizes:
+            parts = _best_divisible(parts, shape[i], sizes)
+        used.update(parts)
+        out.append(None if not parts
+                   else parts[0] if len(parts) == 1 else parts)
+    return PartitionSpec(*out)
+
+
+def _best_divisible(parts, dim: int, sizes) -> tuple:
+    """Largest contiguous sub-tuple of mesh axes whose product divides
+    ``dim`` (e.g. batch=16 on ("pod","data")=2×16 → ("data",))."""
+    best, best_prod = (), 1
+    for i in range(len(parts)):
+        prod = 1
+        for j in range(i, len(parts)):
+            prod *= sizes.get(parts[j], 1)
+            if dim % prod == 0 and prod > best_prod:
+                best, best_prod = parts[i:j + 1], prod
+    return best
+
+
+_AXIS_SIZES: contextvars.ContextVar[Optional[Dict[str, int]]] = \
+    contextvars.ContextVar("mesh_axis_sizes", default=None)
+_MESH: contextvars.ContextVar[Optional[Any]] = \
+    contextvars.ContextVar("mesh", default=None)
+
+
+def current_mesh():
+    return _MESH.get()
+
+
+def current_rules() -> Optional[Dict[str, Any]]:
+    return _RULES.get()
+
+
+def mesh_axis_size(name) -> int:
+    sizes = _AXIS_SIZES.get() or {}
+    if name is None:
+        return 1
+    parts = tuple(name) if isinstance(name, (tuple, list)) else (name,)
+    prod = 1
+    for p in parts:
+        prod *= sizes.get(p, 1)
+    return prod
+
+
+def shard_act(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain activation sharding by logical names (no-op w/o rules)."""
+    spec = resolve_spec(axes, x.shape)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def dim_shardable(size: int, logical: str) -> bool:
+    """True if ``size`` divides evenly over the mesh axes of ``logical``
+    under the current rules (True when no rules are installed)."""
+    rules = _RULES.get()
+    sizes = _AXIS_SIZES.get()
+    if rules is None or sizes is None:
+        return True
+    m = rules.get(logical)
+    if m is None:
+        return True
+    parts = tuple(m) if isinstance(m, (tuple, list)) else (m,)
+    prod = 1
+    for p in parts:
+        prod *= sizes.get(p, 1)
+    return size % prod == 0
+
+
+# ---------------------------------------------------------------------------
+# norms & basic ops
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * scale.astype(dt) + bias.astype(dt)
+
+
+def init_norm(d: int, kind: str = "rms") -> Dict[str, P]:
+    if kind == "rms":
+        return {"scale": ones((d,), ("embed",))}
+    return {"scale": ones((d,), ("embed",)), "bias": zeros((d,), ("embed",))}
+
+
+def apply_norm(params: Dict[str, jax.Array], x: jax.Array,
+               eps: float) -> jax.Array:
+    if "bias" in params:
+        return layer_norm(x, params["scale"], params["bias"], eps)
+    return rms_norm(x, params["scale"], eps)
+
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None
+          ) -> jax.Array:
+    y = jnp.dot(x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def sinusoidal_positions(length: int, dim: int, dtype=jnp.float32
+                         ) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (-jnp.log(10000.0) / dim))
+    pe = jnp.zeros((length, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(dtype)

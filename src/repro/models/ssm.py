@@ -1,0 +1,234 @@
+"""Mamba2 / SSD (state-space duality) block — chunked, MXU-friendly.
+
+The SSD block-decomposition (Dao & Gu, 2024) computes the selective-SSM
+recurrence as: intra-chunk quadratic ("attention-like") matmuls + an
+inter-chunk state recurrence over chunk summaries — exactly the layout the
+MXU wants (L×L and N×P matmuls per chunk) with an O(S/L) sequential scan.
+Decode is the O(1) state update  h ← h·exp(dtA) + dt·B⊗x,  y = C·h + D·x.
+
+Used standalone for mamba2-370m and interleaved 1:7 with attention for
+jamba-1.5-large.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+
+
+class SSMState(NamedTuple):
+    state: jax.Array   # (B, H, P, N) SSM state
+    conv: jax.Array    # (B, K-1, conv_dim) causal-conv tail
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d, din = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    dproj = 2 * din + 2 * g * n + h
+    cdim = conv_dim(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": nn.normal(ks[0], (d, dproj), ("embed", "ssm_inner"),
+                             stddev=d ** -0.5),
+        "conv_w": nn.normal(ks[1], (cfg.ssm_conv, cdim),
+                            (None, "ssm_inner"), stddev=0.1),
+        "conv_b": nn.zeros((cdim,), ("ssm_inner",)),
+        "dt_bias": nn.zeros((h,), ("ssm_heads",)),
+        "A_log": nn.P(jnp.log(jnp.linspace(1.0, 16.0, h)), ("ssm_heads",)),
+        "D": nn.ones((h,), ("ssm_heads",)),
+        "norm": nn.ones((din,), ("ssm_inner",)),
+        "out_proj": nn.normal(ks[3], (din, d), ("ssm_inner", "embed"),
+                              stddev=din ** -0.5),
+    }
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: ModelConfig):
+    din, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:din + din + 2 * g * n]
+    dt = zxbcdt[..., -h:]
+    return z, xbc, dt
+
+
+def _split_xbc(xbc: jax.Array, cfg: ModelConfig):
+    din, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    x = xbc[..., :din]
+    bmat = xbc[..., din:din + g * n]
+    cmat = xbc[..., din + g * n:]
+    return x, bmat, cmat
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv1d. xbc: (B,S,Cd), w: (K,Cd), tail: (B,K-1,Cd)."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    padded = jnp.concatenate([tail.astype(xbc.dtype), xbc], axis=1)
+    out = jnp.zeros_like(xbc)
+    for i in range(k):  # K is 4: unrolled shift-and-add depthwise conv
+        out = out + padded[:, i:i + xbc.shape[1], :] * w[i].astype(xbc.dtype)
+    return jax.nn.silu(out + b.astype(xbc.dtype))
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, cfg: ModelConfig,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (B,S,H,P), dt: (B,S,H) (post-softplus), a: (H,) negative,
+    bmat/cmat: (B,S,G,N).  Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    hg = h // g
+    l = min(cfg.ssm_chunk, s)
+    assert s % l == 0, (s, l)
+    nc = s // l
+
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, l, g, hg, p).astype(f32)
+    dtc = dt.reshape(b, nc, l, g, hg).astype(f32)
+    bc = bmat.reshape(b, nc, l, g, n).astype(f32)
+    cc = cmat.reshape(b, nc, l, g, n).astype(f32)
+    da = dtc * a.reshape(g, hg)                       # (B,NC,L,G,Hg)
+    cums = jnp.cumsum(da, axis=2)                     # within-chunk
+    cums = nn.shard_act(cums, "batch", None, None, None, "ssm_heads")
+
+    # ---- intra-chunk (quadratic) term ----
+    # att[b,c,g,h,l,l'] = (C_l·B_l') · exp(cums_l - cums_l') · dt_l', l>=l'
+    cb = jnp.einsum("bclgn,bcmgn->bcglm", cc, bc)
+    # mask the decay EXPONENT (not the product): exp of the positive
+    # upper-triangle entries would overflow to inf and poison the
+    # backward with 0·inf = NaN
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    expo = (cums[:, :, :, :, :, None]
+            - jnp.moveaxis(cums, 2, 4)[:, :, None])  # (B,NC,L,G,Hg,L')
+    expo = jnp.where(mask[None, None, :, None, None, :], expo, -jnp.inf)
+    decay = jnp.exp(expo)
+    att = jnp.einsum("bcglm,bclghm->bclghm", cb, decay) \
+        * dtc.transpose(0, 1, 3, 4, 2)[:, :, None, :, :, :]
+    att = nn.shard_act(att, "batch", None, None, None, "ssm_heads", None)
+    y_diag = jnp.einsum("bclghm,bcmghp->bclghp", att, xc)
+
+    # ---- chunk state summaries ----
+    decay_to_end = jnp.exp(cums[:, :, -1:, :, :] - cums)      # (B,NC,L,G,Hg)
+    states = jnp.einsum("bclgh,bclgn,bclghp->bcghpn",
+                        decay_to_end * dtc, bc, xc)           # (B,NC,G,Hg,P,N)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(cums[:, :, -1]).reshape(b, nc, g, hg)
+
+    def step(carry, inp):
+        st_in = carry
+        dec, st_new = inp
+        st_out = st_in * dec[..., None, None] + st_new
+        return st_out, st_in
+
+    s0 = (jnp.zeros((b, g, hg, p, n), f32) if init_state is None
+          else init_state.reshape(b, g, hg, p, n).astype(f32))
+    final, st_ins = jax.lax.scan(
+        step, s0, (chunk_decay.transpose(1, 0, 2, 3),
+                   states.transpose(1, 0, 2, 3, 4, 5)))
+    st_ins = st_ins.transpose(1, 0, 2, 3, 4, 5)               # (B,NC,G,Hg,P,N)
+
+    # ---- off-diagonal contribution from incoming state ----
+    y_off = jnp.einsum("bclgn,bcghpn,bclgh->bclghp",
+                       cc, st_ins, jnp.exp(cums))
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final.reshape(b, h, p, n)
+
+
+def mamba_forward(
+    params: Dict, x: jax.Array, cfg: ModelConfig, *,
+    state: Optional[SSMState] = None, return_state: bool = False,
+) -> Tuple[jax.Array, Optional[SSMState]]:
+    """Full-sequence Mamba2 block. x: (B,S,D)."""
+    dt_limit = 20.0
+    zxbcdt = jnp.dot(x, params["in_proj"].astype(x.dtype))
+    z, xbc, dtr = _split_proj(zxbcdt, cfg)
+    tail = state.conv if state is not None else None
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"], tail)
+    xs, bmat, cmat = _split_xbc(xbc, cfg)
+    xs = nn.shard_act(xs, "batch", "seq", "ssm_inner")
+
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    bsz, s, _ = x.shape
+    dt = jnp.clip(jax.nn.softplus(
+        dtr.astype(jnp.float32) + params["dt_bias"]), 0.0, dt_limit)
+    dt = nn.shard_act(dt, "batch", "seq", "ssm_heads")
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = nn.shard_act(xs.reshape(bsz, s, h, p),
+                      "batch", "seq", "ssm_heads", None)
+    # pad S to a chunk multiple; padded steps get dt=0 (identity state
+    # transition, zero input) so outputs and the final state are exact.
+    pad = (-s) % min(cfg.ssm_chunk, max(s, 1))
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    y, final = ssd_chunked(xh, dt, a, bmat.reshape(bsz, s + pad, g, n),
+                           cmat.reshape(bsz, s + pad, g, n), cfg,
+                           init_state=state.state if state else None)
+    if pad:
+        y = y[:, :s]
+        xh = xh[:, :s]
+    y = y + xh * params["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, cfg.d_inner)
+    y = nn.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.dot(y, params["out_proj"].astype(x.dtype))
+    out = nn.shard_act(out, "batch", "seq", "embed")
+    new_state = None
+    if return_state:
+        k = cfg.ssm_conv
+        pre_conv = jnp.dot(x, params["in_proj"].astype(x.dtype))
+        _, xbc_raw, _ = _split_proj(pre_conv, cfg)
+        new_state = SSMState(state=final, conv=xbc_raw[:, -(k - 1):, :])
+    return out, new_state
+
+
+def mamba_step(
+    params: Dict, x: jax.Array, cfg: ModelConfig, state: SSMState,
+) -> Tuple[jax.Array, SSMState]:
+    """Single-token decode. x: (B,1,D) → (y (B,1,D), new state)."""
+    zxbcdt = jnp.dot(x, params["in_proj"].astype(x.dtype))
+    z, xbc_raw, dtr = _split_proj(zxbcdt, cfg)
+    conv = jnp.concatenate([state.conv.astype(x.dtype), xbc_raw], axis=1)
+    w, bconv = params["conv_w"], params["conv_b"]
+    xbc = jnp.einsum("bkc,kc->bc", conv.astype(jnp.float32),
+                     w.astype(jnp.float32))[:, None, :]
+    xbc = jax.nn.silu(xbc + bconv.astype(jnp.float32)).astype(x.dtype)
+    xs, bmat, cmat = _split_xbc(xbc, cfg)
+
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    bsz = x.shape[0]
+    hg = h // g
+    dt = jnp.clip(jax.nn.softplus(
+        dtr[:, 0].astype(jnp.float32) + params["dt_bias"]), 0.0, 20.0)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))        # (H,)
+    da = jnp.exp(dt * a)                                      # (B,H)
+    xh = xs[:, 0].reshape(bsz, h, p).astype(jnp.float32)
+    bm = bmat[:, 0].reshape(bsz, g, n).astype(jnp.float32)
+    cm = cmat[:, 0].reshape(bsz, g, n).astype(jnp.float32)
+    bm_h = jnp.repeat(bm, hg, axis=1)                         # (B,H,N)
+    cm_h = jnp.repeat(cm, hg, axis=1)
+    st = state.state.astype(jnp.float32)
+    st = st * da[..., None, None] + \
+        (dt[..., None] * xh)[..., None] * bm_h[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", st, cm_h)
+    y = y + xh * params["D"][None, :, None]
+    y = y.reshape(bsz, 1, cfg.d_inner).astype(x.dtype)
+    y = nn.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.dot(y, params["out_proj"].astype(x.dtype))
+    return out, SSMState(state=st, conv=conv[:, 1:, :])

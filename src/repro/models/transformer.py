@@ -1,0 +1,387 @@
+"""Model assembly: decoder-only / enc-dec / hybrid / MoE / VLM transformers.
+
+Layers are organised in *periods* — the repeating layer pattern of the
+architecture (1 for homogeneous stacks, 8 for jamba's attn:mamba 1:7,
+5 for llama-vision's cross:self 1:4, lcm with the MoE stride).  Parameters
+of each period position are stacked across periods and the forward pass is
+a single ``lax.scan`` over periods (with optional remat), which keeps the
+compiled HLO size O(period) instead of O(n_layers) — essential for the
+96-layer dry-runs on this container and for real compile times at scale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import attention as attn
+from repro.models import cache as kvc
+from repro.models import mlp as mlpm
+from repro.models import moe as moem
+from repro.models import nn
+from repro.models import ssm as ssmm
+
+
+class ModelOutputs(NamedTuple):
+    logits: jax.Array
+    caches: Optional[Dict[str, Any]]
+    aux_loss: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, pos: int, *, decoder: bool = True):
+    """One layer at period position ``pos`` (P-leaf tree)."""
+    ks = jax.random.split(key, 8)
+    kind = cfg.layer_kind(pos) if decoder else "attn"
+    p: Dict[str, Any] = {"norm1": nn.init_norm(cfg.d_model, cfg.norm_kind)}
+    if kind == "mamba":
+        p["mamba"] = ssmm.init_mamba(ks[0], cfg)
+    else:
+        p["attn"] = attn.init_attention(ks[0], cfg)
+    if kind == "cross":
+        p["gate_attn"] = nn.zeros((), ())
+    if decoder and cfg.is_encoder_decoder:
+        p["cross_attn"] = attn.init_attention(ks[1], cfg, cross=True)
+        p["norm_cross"] = nn.init_norm(cfg.d_model, cfg.norm_kind)
+    if kind != "mamba" or cfg.family != "ssm":
+        p["norm2"] = nn.init_norm(cfg.d_model, cfg.norm_kind)
+        if decoder and cfg.layer_is_moe(pos):
+            p["moe"] = moem.init_moe(ks[2], cfg)
+        else:
+            p["mlp"] = mlpm.init_mlp(ks[2], cfg)
+    if cfg.family == "ssm":
+        # mamba2 backbone: single block per layer, no separate MLP
+        p.pop("norm2", None)
+        p.pop("mlp", None)
+        p.pop("moe", None)
+    return p
+
+
+def _stack_layers(key, cfg: ModelConfig, n_periods: int, *, decoder=True):
+    """Stacked params for all period positions: values + specs trees."""
+    positions = range(cfg.period if decoder else 1)
+    stacked, specs = {}, {}
+    for pos in positions:
+        kpos = jax.random.fold_in(key, pos)
+        one = _init_layer(kpos, cfg, pos, decoder=decoder)
+        _, spec_tree = nn.unzip(one)
+        specs[f"pos{pos}"] = jax.tree_util.tree_map(
+            lambda axes: ("layers", *axes), spec_tree,
+            is_leaf=lambda x: isinstance(x, tuple))
+
+        def init_values(k):
+            vals, _ = nn.unzip(_init_layer(k, cfg, pos, decoder=decoder))
+            return vals
+
+        keys = jax.random.split(kpos, n_periods)
+        stacked[f"pos{pos}"] = jax.vmap(init_values)(keys)
+    return stacked, specs
+
+
+def init_model(key, cfg: ModelConfig) -> Tuple[Dict, Dict]:
+    """Build (params, logical_specs) for an architecture."""
+    ks = jax.random.split(key, 8)
+    tree: Dict[str, Any] = {
+        "embed": nn.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                           ("vocab", "embed")),
+        "final_norm": nn.init_norm(cfg.d_model, cfg.norm_kind),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = nn.normal(ks[1], (cfg.d_model, cfg.vocab_size),
+                                    ("embed", "vocab"))
+    params, specs = nn.unzip(tree)
+    dec_vals, dec_specs = _stack_layers(ks[2], cfg, cfg.n_periods)
+    params["layers"], specs["layers"] = dec_vals, dec_specs
+    if cfg.is_encoder_decoder:
+        enc_vals, enc_specs = _stack_layers(
+            ks[3], cfg, cfg.n_encoder_layers, decoder=False)
+        params["enc_layers"], specs["enc_layers"] = enc_vals, enc_specs
+        fn_vals, fn_specs = nn.unzip(
+            {"enc_final_norm": nn.init_norm(cfg.d_model, cfg.norm_kind)})
+        params.update(fn_vals)
+        specs.update(fn_specs)
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, capacity: int, *,
+                quantized: bool = False, dtype=jnp.bfloat16) -> Dict:
+    """Per-period-position stacked caches for serving."""
+    caches: Dict[str, Any] = {}
+    np_, kvh, hd = cfg.n_periods, cfg.n_kv_heads, cfg.hd
+    window = min(cfg.sliding_window or capacity, capacity)
+    for pos in range(cfg.period):
+        kind = cfg.layer_kind(pos)
+        c: Dict[str, Any] = {}
+        if kind in ("attn",):
+            c["kv"] = kvc.init_cache(
+                batch, window if cfg.sliding_window else capacity,
+                kvh, hd, stack=(np_,), dtype=dtype, quantized=quantized,
+                window=window)
+        if kind == "cross":
+            c["kv"] = kvc.init_cache(batch, cfg.num_image_tokens, kvh, hd,
+                                     stack=(np_,), dtype=dtype)
+        if kind == "mamba":
+            c["ssm"] = ssmm.SSMState(
+                state=jnp.zeros((np_, batch, cfg.ssm_heads,
+                                 cfg.ssm_head_dim, cfg.ssm_state),
+                                jnp.float32),
+                conv=jnp.zeros((np_, batch, cfg.ssm_conv - 1,
+                                ssmm.conv_dim(cfg)), dtype))
+        if cfg.is_encoder_decoder:
+            c["cross_kv"] = kvc.init_cache(batch, cfg.encoder_len, kvh, hd,
+                                           stack=(np_,), dtype=dtype)
+        caches[f"pos{pos}"] = c
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _apply_layer(lp, x, cfg: ModelConfig, pos: int, *, positions, cache,
+                 memory, mode: str, chunk: int):
+    """One layer forward. memory = encoder output / image embeddings."""
+    kind = cfg.layer_kind(pos)
+    new_cache: Dict[str, Any] = {}
+    aux = jnp.zeros((), jnp.float32)
+    h = nn.apply_norm(lp["norm1"], x, cfg.norm_eps)
+
+    if kind == "mamba":
+        st = cache.get("ssm") if cache else None
+        if mode == "decode":
+            y, st2 = ssmm.mamba_step(lp["mamba"], h, cfg, st)
+        else:
+            y, st2 = ssmm.mamba_forward(lp["mamba"], h, cfg, state=st,
+                                        return_state=mode == "prefill")
+        if st2 is not None:
+            new_cache["ssm"] = st2
+        elif cache and "ssm" in cache:
+            new_cache["ssm"] = st
+        x = x + y
+    elif kind == "cross":
+        # VLM cross-attention to image embeddings, tanh-gated
+        y, kv2 = attn.attention_forward(
+            lp["attn"], h, cfg, positions=positions,
+            cache=cache.get("kv") if cache else None,
+            kv_source=memory if mode != "decode" else None,
+            is_cross=True, update_cache=mode == "prefill", chunk=chunk)
+        if kv2 is not None:
+            new_cache["kv"] = kv2
+        x = x + jnp.tanh(lp["gate_attn"]).astype(x.dtype) * y
+    else:
+        y, kv2 = attn.attention_forward(
+            lp["attn"], h, cfg, positions=positions,
+            cache=cache.get("kv") if cache else None,
+            causal=mode != "encode", chunk=chunk)
+        if kv2 is not None:
+            new_cache["kv"] = kv2
+        x = x + y
+
+    if cfg.is_encoder_decoder and "cross_attn" in lp:
+        h = nn.apply_norm(lp["norm_cross"], x, cfg.norm_eps)
+        y, ckv = attn.attention_forward(
+            lp["cross_attn"], h, cfg, positions=positions,
+            cache=cache.get("cross_kv") if cache else None,
+            kv_source=memory if mode != "decode" else None,
+            is_cross=True, update_cache=mode == "prefill", chunk=chunk)
+        if ckv is not None:
+            new_cache["cross_kv"] = ckv
+        x = x + y
+
+    if "norm2" in lp:
+        h = nn.apply_norm(lp["norm2"], x, cfg.norm_eps)
+        if "moe" in lp:
+            y, aux = moem.moe_forward(lp["moe"], h, cfg)
+        else:
+            y = mlpm.mlp_forward(lp["mlp"], h, cfg)
+        x = x + y
+    return x, new_cache, aux
+
+
+def _remat_policy(rc: Optional[RunConfig]):
+    kind = rc.remat if rc else "full"
+    if kind == "none":
+        return None
+    if kind == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _scan_layers(params, x, cfg: ModelConfig, *, positions, caches, memory,
+                 mode: str, chunk: int, rc: Optional[RunConfig],
+                 encoder: bool = False):
+    """Scan over periods; heterogeneous positions unrolled inside."""
+    period = 1 if encoder else cfg.period
+
+    policy = _remat_policy(rc)
+    remat_layers = policy is not None and mode == "train" and period > 1
+
+    def body(x, per):
+        lp, cache = per
+        # sequence-sharded residual stream (Megatron-SP): the remat-saved
+        # per-period activation stack shards over the model axis; the
+        # attention/MLP internals re-gather via their own constraints.
+        x = nn.shard_act(x, "batch", "seq_res", "embed")
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = {}
+        for pos in range(period):
+            layer = functools.partial(
+                _apply_layer, cfg=cfg, pos=pos, positions=positions,
+                memory=memory, mode="encode" if encoder else mode,
+                chunk=chunk)
+            if remat_layers:
+                # per-layer remat inside multi-layer periods: keeps each
+                # layer's FSDP weight gather live only within its layer
+                # instead of hoisting all `period` gathers to body start
+                layer = jax.checkpoint(layer, policy=policy,
+                                       prevent_cse=False)
+            x, nc, aux = layer(
+                lp[f"pos{pos}"], x,
+                cache=cache.get(f"pos{pos}") if cache else None)
+            new_caches[f"pos{pos}"] = nc
+            aux_total += aux
+        return x, (new_caches, aux_total)
+
+    if policy is not None and mode == "train":
+        body = jax.checkpoint(body, policy=policy,
+                              prevent_cse=False)
+
+    if caches is None:
+        # empty cache dicts carry no arrays; scan length comes from params
+        xs = (params, {f"pos{p}": {} for p in range(period)})
+    else:
+        xs = (params, caches)
+    if rc is not None and rc.scan_unroll:
+        # python loop instead of lax.scan — used by the cost-model
+        # validation tests (cost_analysis counts while bodies once)
+        n = jax.tree_util.tree_leaves(params)[0].shape[0]
+        ys = []
+        for i in range(n):
+            per = jax.tree_util.tree_map(lambda a: a[i], xs)
+            x, y = body(x, per)
+            ys.append(y)
+        new_caches = jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls), *[y[0] for y in ys])
+        aux = jnp.stack([y[1] for y in ys])
+        return x, new_caches, jnp.sum(aux)
+    x, (new_caches, aux) = jax.lax.scan(body, x, xs)
+    return x, new_caches, jnp.sum(aux)
+
+
+def forward(
+    params: Dict, batch: Dict[str, jax.Array], cfg: ModelConfig, *,
+    mode: str = "train",                  # train | prefill | decode
+    caches: Optional[Dict] = None,
+    positions: Optional[jax.Array] = None,
+    rc: Optional[RunConfig] = None,
+) -> ModelOutputs:
+    """Full model forward.
+
+    batch: {"tokens": (B,S)} (+ "frames"/"image_embeds" (B,M,D) stubs).
+    decode: S==1, caches required, positions = current offset.
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    chunk = rc.attn_chunk if rc else 2048
+    emb_dtype = jnp.bfloat16 if (rc is None or rc.act_dtype == "bfloat16") \
+        else jnp.float32
+
+    x = params["embed"][tokens].astype(emb_dtype)
+    x = nn.shard_act(x, "batch", "seq", "embed")
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+
+    memory = None
+    if mode != "decode":  # at decode, memory K/V live in the cross caches
+        if cfg.frontend == "audio":
+            memory = batch["frames"].astype(emb_dtype)
+        elif cfg.frontend == "vision":
+            memory = batch["image_embeds"].astype(emb_dtype)
+
+    if cfg.is_encoder_decoder and mode != "decode":
+        # encoder stack over stub frame embeddings (+ sinusoidal positions)
+        enc_x = memory + nn.sinusoidal_positions(
+            memory.shape[1], cfg.d_model, memory.dtype)[None]
+        enc_x, _, _ = _scan_layers(
+            params["enc_layers"], enc_x, cfg, positions=jnp.arange(
+                memory.shape[1], dtype=jnp.int32),
+            caches=None, memory=None, mode="train", chunk=chunk, rc=rc,
+            encoder=True)
+        memory = nn.apply_norm(params["enc_final_norm"], enc_x,
+                               cfg.norm_eps)
+    if cfg.abs_positions:
+        # absolute sinusoidal positions, gathered so decode works too
+        pe_full = nn.sinusoidal_positions(65536, cfg.d_model, x.dtype)
+        x = x + pe_full[positions][None]
+
+    x, new_caches, aux = _scan_layers(
+        params["layers"], x, cfg, positions=positions, caches=caches,
+        memory=memory, mode=mode, chunk=chunk, rc=rc)
+
+    x = nn.apply_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.dot(x, head.astype(x.dtype))
+    logits = nn.shard_act(logits, "batch", "seq", "vocab")
+    return ModelOutputs(logits=logits,
+                        caches=new_caches if caches is not None else None,
+                        aux_loss=aux)
+
+
+# ---------------------------------------------------------------------------
+# losses / flop accounting
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, batch, cfg: ModelConfig, rc: Optional[RunConfig] = None
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross-entropy (labels = tokens shifted by caller)."""
+    out = forward(params, batch, cfg, mode="train", rc=rc)
+    logits = out.logits.astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + 0.01 * out.aux_loss
+    return total, {"loss": loss, "aux_loss": out.aux_loss,
+                   "tokens": jnp.sum(mask)}
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def active_params(cfg: ModelConfig, params) -> float:
+    """Parameter count with MoE experts scaled to the active fraction."""
+    total = count_params(params)
+    if not cfg.n_experts:
+        return float(total)
+    expert_leaves = jax.tree_util.tree_leaves(
+        {k: v for k, v in _collect_moe(params).items()})
+    e_params = sum(x.size for x in expert_leaves)
+    frac = cfg.n_experts_active / cfg.n_experts
+    return float(total - e_params + e_params * frac)
+
+
+def _collect_moe(params) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = {}
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        if "moe" in name and ("w_up" in name or "w_down" in name
+                              or "w_gate" in name):
+            out[name] = leaf
+    return out

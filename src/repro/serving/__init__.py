@@ -1,0 +1,4 @@
+"""Serving substrate: step functions + continuous-batching engine."""
+from repro.serving import engine, serve_loop
+
+__all__ = ["engine", "serve_loop"]

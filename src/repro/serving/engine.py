@@ -1,0 +1,123 @@
+"""Continuous-batching serving engine (slot-based, vLLM-lite).
+
+A fixed number of batch slots share one decode step; finished slots are
+refilled from the request queue without stopping decode for the others.
+Prefill runs per-request into the slot's cache region (padded to the slot
+capacity).  This is the host-side control plane around the jitted
+prefill/decode steps — on a real cluster it runs on the coordinator with
+steps dispatched to the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
+                 capacity: int = 256, rc: Optional[RunConfig] = None,
+                 eos_id: int = -1):
+        self.params = params
+        self.cfg = cfg
+        self.rc = rc
+        self.slots = slots
+        self.capacity = capacity
+        self.eos_id = eos_id
+        self.queue: Deque[Request] = deque()
+        self.active: Dict[int, Optional[Request]] = {
+            i: None for i in range(slots)}
+        # one cache per slot (batch=1) so slots prefill independently
+        self.caches = [
+            tfm.init_caches(cfg, 1, capacity,
+                            quantized=bool(rc and rc.kv_quant))
+            for _ in range(slots)]
+        self.pos = [0] * slots
+        self.last_tok = np.zeros((slots,), np.int32)
+
+        self._decode_one = jax.jit(self._decode_one_impl)
+
+    # -- jitted cores ------------------------------------------------
+    def _prefill_impl(self, tokens, caches):
+        s = tokens.shape[1]
+        out = tfm.forward(self.params, {"tokens": tokens}, self.cfg,
+                          mode="prefill", caches=caches,
+                          positions=jnp.arange(s, dtype=jnp.int32),
+                          rc=self.rc)
+        nxt = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
+        return out.caches, nxt
+
+    def _decode_one_impl(self, tok, pos, caches):
+        out = tfm.forward(self.params, {"tokens": tok[None, None]},
+                          self.cfg, mode="decode", caches=caches,
+                          positions=pos[None], rc=self.rc)
+        nxt = jnp.argmax(out.logits[0, 0], axis=-1).astype(jnp.int32)
+        return out.caches, nxt
+
+    # -- control plane ------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.slots):
+            if self.active[i] is None and self.queue:
+                req = self.queue.popleft()
+                toks = jnp.asarray(req.prompt, jnp.int32)[None]
+                self.caches[i] = tfm.init_caches(
+                    self.cfg, 1, self.capacity,
+                    quantized=bool(self.rc and self.rc.kv_quant))
+                caches, nxt = jax.jit(self._prefill_impl)(toks,
+                                                          self.caches[i])
+                self.caches[i] = caches
+                self.pos[i] = len(req.prompt)
+                self.last_tok[i] = int(nxt[0])
+                req.output.append(int(nxt[0]))
+                self.active[i] = req
+
+    def step(self) -> List[Request]:
+        """One engine tick: admit, decode all active slots, retire."""
+        self._admit()
+        finished = []
+        for i, req in self.active.items():
+            if req is None:
+                continue
+            caches, nxt = self._decode_one(
+                jnp.asarray(self.last_tok[i], jnp.int32),
+                jnp.asarray(self.pos[i], jnp.int32), self.caches[i])
+            self.caches[i] = caches
+            self.pos[i] += 1
+            tok = int(nxt)
+            req.output.append(tok)
+            self.last_tok[i] = tok
+            if (len(req.output) >= req.max_new_tokens
+                    or tok == self.eos_id
+                    or self.pos[i] >= self.capacity - 1):
+                req.done = True
+                finished.append(req)
+                self.active[i] = None
+        return finished
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_ticks):
+            done.extend(self.step())
+            if not self.queue and all(v is None
+                                      for v in self.active.values()):
+                break
+        return done

@@ -1,0 +1,69 @@
+"""Prefill / decode step functions for serving (jit-able, shardable)."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import transformer as tfm
+
+
+class DecodeState(NamedTuple):
+    caches: Any
+    last_token: jax.Array   # (B, 1)
+    pos: jax.Array          # scalar int32: next position to write
+
+
+def make_prefill_step(cfg: ModelConfig, rc: Optional[RunConfig] = None):
+    def prefill(params, batch: Dict[str, jax.Array], caches
+                ) -> Tuple[DecodeState, jax.Array]:
+        s = batch["tokens"].shape[1]
+        out = tfm.forward(params, batch, cfg, mode="prefill", caches=caches,
+                          positions=jnp.arange(s, dtype=jnp.int32), rc=rc)
+        next_tok = jnp.argmax(out.logits[:, -1:], axis=-1).astype(jnp.int32)
+        return DecodeState(caches=out.caches, last_token=next_tok,
+                           pos=jnp.asarray(s, jnp.int32)), out.logits
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, rc: Optional[RunConfig] = None, *,
+                     temperature: float = 0.0):
+    def decode(params, state: DecodeState, rng: Optional[jax.Array] = None
+               ) -> Tuple[DecodeState, jax.Array]:
+        out = tfm.forward(params, {"tokens": state.last_token}, cfg,
+                          mode="decode", caches=state.caches,
+                          positions=state.pos[None], rc=rc)
+        logits = out.logits[:, 0]
+        if temperature > 0.0 and rng is not None:
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        nxt = nxt.astype(jnp.int32)[:, None]
+        return DecodeState(caches=out.caches, last_token=nxt,
+                           pos=state.pos + 1), logits
+
+    return decode
+
+
+def generate(params, batch, cfg: ModelConfig, *, max_new_tokens: int,
+             capacity: Optional[int] = None,
+             rc: Optional[RunConfig] = None) -> jax.Array:
+    """Greedy generation driver (prefill + scan of decode steps)."""
+    b, s = batch["tokens"].shape
+    cap = capacity or (s + max_new_tokens)
+    caches = tfm.init_caches(cfg, b, cap,
+                             quantized=bool(rc and rc.kv_quant))
+    prefill = make_prefill_step(cfg, rc)
+    decode = make_decode_step(cfg, rc)
+    state, _ = prefill(params, batch, caches)
+
+    def step(state, _):
+        state, logits = decode(params, state)
+        return state, state.last_token[:, 0]
+
+    _, toks = jax.lax.scan(step, state, None, length=max_new_tokens - 1)
+    first = state.last_token[:, 0]
+    return jnp.concatenate([first[None], toks], axis=0).T  # (B, new)

@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, step, checkpoint, fault tolerance."""
+from repro.training import (checkpoint, fault_tolerance, optimizer,
+                            train_loop)
+
+__all__ = ["checkpoint", "fault_tolerance", "optimizer", "train_loop"]

@@ -1,0 +1,120 @@
+"""AdamW with warmup-cosine schedule and global-norm clipping (pure JAX).
+
+``adamw_bf16`` stores both moments in bfloat16 — a 50 % optimizer-state
+memory cut that is what lets the 340B-class archs train on a single
+16 GB/chip pod slice (DESIGN.md §6); update math still runs in f32.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def lr_schedule(step: jax.Array, rc: RunConfig,
+                total_steps: int = 100_000) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(rc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - rc.warmup_steps)
+                    / jnp.maximum(total_steps - rc.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return rc.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def init_opt_state(params: Any, rc: RunConfig) -> OptState:
+    if rc.optimizer == "adafactor":
+        return OptState(m=jax.tree_util.tree_map(_fact_init_m, params),
+                        v=jax.tree_util.tree_map(_fact_init_v, params),
+                        step=jnp.zeros((), jnp.int32))
+    dt = jnp.bfloat16 if rc.optimizer == "adamw_bf16" else jnp.float32
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(m=jax.tree_util.tree_map(z, params),
+                    v=jax.tree_util.tree_map(z, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment) — for the 340B+ archs where even
+# bf16 Adam moments don't fit 16 GB/chip (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def _fact_init_m(p):
+    # bf16 momentum (negligible precision loss, 2 bytes/param)
+    return jnp.zeros(p.shape, jnp.bfloat16)
+
+
+def _fact_init_v(p):
+    if p.ndim < 2:
+        return jnp.zeros(p.shape, jnp.float32)
+    # row/col factored second moment over the two trailing dims
+    row = jnp.zeros(p.shape[:-1], jnp.float32)
+    col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+    return {"row": row, "col": col}
+
+
+def _fact_update_v(v, g2, b2):
+    if isinstance(v, dict):
+        row = v["row"] * b2 + (1 - b2) * jnp.mean(g2, axis=-1)
+        col = v["col"] * b2 + (1 - b2) * jnp.mean(g2, axis=-2)
+        denom = jnp.maximum(jnp.mean(row, axis=-1, keepdims=True), 1e-30)
+        vhat = (row[..., None] * col[..., None, :]) / denom[..., None]
+        return {"row": row, "col": col}, vhat
+    vnew = v * b2 + (1 - b2) * g2
+    return vnew, vnew
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def apply_updates(params: Any, grads: Any, opt: OptState, rc: RunConfig,
+                  b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8
+                  ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    step = opt.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, rc.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = lr_schedule(step, rc)
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    factored = rc.optimizer == "adafactor"
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+        if factored:
+            v_new, vhat = _fact_update_v(v, g * g, b2)
+        else:
+            v_new = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+            vhat = v_new
+        mhat = m32 / c1
+        vhat = vhat / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + rc.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        if not factored:
+            v_new = v_new.astype(v.dtype)
+        return (newp.astype(p.dtype), m32.astype(m.dtype), v_new)
+
+    # flatten against the params treedef so factored-v dict leaves stay
+    # atomic (opt.v has {"row","col"} sub-dicts where params have arrays)
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt.m)
+    flat_v = treedef.flatten_up_to(opt.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [t[0] for t in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [t[1] for t in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [t[2] for t in out])
+    return new_p, OptState(m=new_m, v=new_v, step=step), {
+        "grad_norm": gnorm, "lr": lr}

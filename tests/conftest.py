@@ -1,0 +1,13 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def sparse_matrix(rng, shape, density, dtype=np.float32):
+    x = rng.normal(size=shape).astype(dtype)
+    x[rng.random(shape) >= density] = 0
+    return x

@@ -1,0 +1,123 @@
+"""Attention units: oracle equivalence, GQA, SWA, chunking, RoPE, caches."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import cache as kvc
+
+
+def naive_attention(q, k, v, causal=True, window=None):
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    kk = np.repeat(np.asarray(k), g, axis=2)
+    vv = np.repeat(np.asarray(v), g, axis=2)
+    scores = np.einsum("bqhd,bshd->bhqs", np.asarray(q), kk) / np.sqrt(hd)
+    mask = np.ones((sq, skv), bool)
+    if causal:
+        mask &= np.tril(np.ones((sq, skv), bool), k=skv - sq)
+    if window is not None:
+        qpos = np.arange(sq)[:, None] + (skv - sq)
+        kpos = np.arange(skv)[None, :]
+        mask &= kpos > qpos - window
+    scores = np.where(mask[None, None], scores, -1e30)
+    e = np.exp(scores - scores.max(-1, keepdims=True))
+    p = e / e.sum(-1, keepdims=True)
+    return np.einsum("bhqs,bshd->bqhd", p, vv)
+
+
+@pytest.mark.parametrize("h,kvh", [(8, 8), (8, 2), (4, 1)])
+@pytest.mark.parametrize("chunk", [0, 8])
+def test_attend_matches_naive(rng, h, kvh, chunk):
+    b, s, hd = 2, 32, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, hd)), jnp.float32)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    out = attn.attend(q, k, v, qpos=pos, kpos=pos, chunk=chunk)
+    ref = naive_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)
+
+
+def test_sliding_window_masks(rng):
+    b, s, h, hd = 1, 24, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    out = attn.attend(q, k, v, qpos=pos, kpos=pos, window=4)
+    ref = naive_attention(q, k, v, window=4)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)
+
+
+def test_rope_relative_property(rng):
+    """RoPE: <q_m, k_n> depends only on (m − n)."""
+    hd = 32
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, hd)), jnp.float32)
+
+    def dot_at(m, n):
+        qm = attn.apply_rope(q, jnp.asarray([m]), "half", 10000.0)
+        kn = attn.apply_rope(k, jnp.asarray([n]), "half", 10000.0)
+        return float(jnp.sum(qm * kn))
+
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4
+    assert abs(dot_at(7, 0) - dot_at(20, 13)) < 1e-4
+
+
+def test_rope_2d_rotates_half_dims(rng):
+    x = jnp.asarray(rng.normal(size=(1, 4, 2, 16)), jnp.float32)
+    pos = jnp.arange(4, dtype=jnp.int32)
+    out = attn.apply_rope(x, pos, "2d", 10000.0)
+    # chatglm-style: last half of head_dim passes through unrotated
+    np.testing.assert_array_equal(np.asarray(out[..., 8:]),
+                                  np.asarray(x[..., 8:]))
+    assert not np.allclose(np.asarray(out[..., :8]), np.asarray(x[..., :8]))
+
+
+def test_ring_cache_matches_full_for_swa(rng):
+    """Ring buffer of size=window gives the same SWA attention output."""
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=4, d_ff=64, vocab_size=64,
+                      sliding_window=8)
+    key = jax.random.PRNGKey(0)
+    from repro.models import nn
+    params, _ = nn.unzip(attn.init_attention(key, cfg))
+    s = 20
+    x = jnp.asarray(rng.normal(size=(1, s, 32)) * 0.3, jnp.float32)
+    # full cache
+    full_cache = kvc.init_cache(1, 32, 4, 8, dtype=jnp.float32)
+    outs_full = []
+    ring = kvc.init_cache(1, 8, 4, 8, dtype=jnp.float32, window=8)
+    outs_ring = []
+    for t in range(s):
+        pos = jnp.asarray([t], jnp.int32)
+        y, full_cache = attn.attention_forward(
+            params, x[:, t:t + 1], cfg, positions=pos, cache=full_cache)
+        outs_full.append(np.asarray(y))
+        y2, ring = attn.attention_forward(
+            params, x[:, t:t + 1], cfg, positions=pos, cache=ring)
+        outs_ring.append(np.asarray(y2))
+    np.testing.assert_allclose(np.concatenate(outs_ring, 1),
+                               np.concatenate(outs_full, 1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_quantized_cache_close_to_exact(rng):
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64)
+    from repro.models import nn
+    params, _ = nn.unzip(attn.init_attention(jax.random.PRNGKey(0), cfg))
+    x = jnp.asarray(rng.normal(size=(2, 8, 32)) * 0.3, jnp.float32)
+    pos = jnp.arange(8, dtype=jnp.int32)
+    exact = kvc.init_cache(2, 16, 2, 8, dtype=jnp.float32)
+    quant = kvc.init_cache(2, 16, 2, 8, quantized=True)
+    y1, _ = attn.attention_forward(params, x, cfg, positions=pos,
+                                   cache=exact)
+    y2, _ = attn.attention_forward(params, x, cfg, positions=pos,
+                                   cache=quant)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=0.1, atol=0.05)

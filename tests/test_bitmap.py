@@ -1,0 +1,86 @@
+"""Bitmap encoding invariants (paper Fig. 2b / Fig. 9) + property tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitmap as bm
+from tests.conftest import sparse_matrix
+
+
+@pytest.mark.parametrize("order", ["col", "row"])
+@pytest.mark.parametrize("density", [0.0, 0.1, 0.5, 1.0])
+def test_encode_decode_roundtrip(rng, order, density):
+    x = sparse_matrix(rng, (64, 96), density)
+    enc = bm.encode(jnp.asarray(x), order)
+    np.testing.assert_array_equal(np.asarray(bm.decode(enc)), x)
+
+
+def test_pack_unpack_roundtrip(rng):
+    mask = rng.random((7, 96)) < 0.3
+    packed = bm.pack_bits(jnp.asarray(mask), axis=1)
+    assert packed.dtype == jnp.uint32 and packed.shape == (7, 3)
+    np.testing.assert_array_equal(
+        np.asarray(bm.unpack_bits(packed, axis=1)), mask)
+
+
+def test_popcount_matches_numpy(rng):
+    words = jnp.asarray(rng.integers(0, 2 ** 32, (16,), dtype=np.uint32))
+    expect = np.array([bin(int(w)).count("1") for w in np.asarray(words)])
+    np.testing.assert_array_equal(np.asarray(bm.popcount(words)), expect)
+
+
+def test_condensed_values_front_packed(rng):
+    x = sparse_matrix(rng, (64, 32), 0.4)
+    enc = bm.encode(jnp.asarray(x), "col")
+    vals = np.asarray(enc.values)
+    counts = np.asarray(enc.counts)
+    for j in range(32):
+        col = x[:, j]
+        np.testing.assert_array_equal(vals[:counts[j], j], col[col != 0])
+        assert (vals[counts[j]:, j] == 0).all()
+
+
+def test_two_level_roundtrip_and_tile_bitmap(rng):
+    x = sparse_matrix(rng, (128, 128), 0.05)
+    x[:32, :64] = 0  # force empty tiles
+    enc = bm.encode_two_level(jnp.asarray(x), 32, 32, slice=32)
+    np.testing.assert_array_equal(np.asarray(bm.decode_two_level(enc)), x)
+    tiles = np.asarray(enc.tile_bitmap)
+    blocks = x.reshape(4, 32, 4, 32).transpose(0, 2, 1, 3)
+    np.testing.assert_array_equal(tiles, blocks.any(axis=(2, 3)))
+
+
+def test_bitmap_outer_is_bohmma(rng):
+    a = rng.random(32) < 0.4
+    b = rng.random(64) < 0.4
+    pa = bm.pack_bits(jnp.asarray(a), axis=0)
+    pb = bm.pack_bits(jnp.asarray(b), axis=0)
+    out = bm.bitmap_outer(pa, pb)
+    np.testing.assert_array_equal(
+        np.asarray(bm.unpack_bits(out, axis=1)), np.outer(a, b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 6), cols=st.integers(1, 5),
+       density=st.floats(0.0, 1.0), seed=st.integers(0, 2 ** 16),
+       order=st.sampled_from(["col", "row"]))
+def test_property_roundtrip(rows, cols, density, seed, order):
+    rng = np.random.default_rng(seed)
+    x = sparse_matrix(rng, (rows * 32, cols * 32), density)
+    enc = bm.encode(jnp.asarray(x), order)
+    np.testing.assert_array_equal(np.asarray(bm.decode(enc)), x)
+    # nnz invariant
+    assert int(enc.nnz) == int((x != 0).sum())
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), density=st.floats(0.0, 0.6))
+def test_property_two_level_counts(seed, density):
+    rng = np.random.default_rng(seed)
+    x = sparse_matrix(rng, (64, 64), density)
+    enc = bm.encode_two_level(jnp.asarray(x), 32, 32, slice=32)
+    # slice_counts equal the per-tile active-column counts
+    cols = (x.reshape(2, 32, 2, 32) != 0).transpose(0, 2, 1, 3).any(axis=2)
+    np.testing.assert_array_equal(
+        np.asarray(enc.slice_counts)[..., 0], cols.sum(-1))

@@ -1,0 +1,119 @@
+"""Checkpointing: roundtrip, atomicity, retention, async, elastic,
+deterministic restart."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.data.pipeline import SyntheticTokens
+from repro.training import checkpoint as ckpt
+from repro.training.fault_tolerance import (CheckpointManager,
+                                            StragglerMonitor,
+                                            run_with_restarts)
+
+
+def _tree(rng):
+    return {"a": jnp.asarray(rng.normal(size=(8, 16)), jnp.float32),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                       "c": jnp.asarray(rng.normal(size=(4,)),
+                                        jnp.bfloat16)}}
+
+
+def test_roundtrip(tmp_path, rng):
+    tree = _tree(rng)
+    path = str(tmp_path / "step_1")
+    ckpt.save(path, tree, step=1, extra={"note": "x"})
+    restored, manifest = ckpt.load(path, tree)
+    assert manifest["step"] == 1 and manifest["extra"]["note"] == "x"
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_shape_mismatch_rejected(tmp_path, rng):
+    tree = _tree(rng)
+    path = str(tmp_path / "c")
+    ckpt.save(path, tree, step=0)
+    bad = dict(tree)
+    bad["a"] = jnp.zeros((9, 16), jnp.float32)
+    with pytest.raises(ValueError):
+        ckpt.load(path, bad)
+
+
+def test_atomic_no_tmp_left(tmp_path, rng):
+    path = str(tmp_path / "c")
+    ckpt.save(path, _tree(rng), step=0)
+    assert not os.path.exists(path + ".tmp")
+    assert os.path.exists(os.path.join(path, "manifest.json"))
+
+
+def test_manager_retention_and_latest(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    tree = _tree(rng)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, jax.tree_util.tree_map(lambda x: x + s, tree))
+    assert mgr.steps() == [3, 4]
+    restored, manifest = mgr.restore_latest(tree)
+    assert manifest["step"] == 4
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.asarray(tree["a"]) + 4)
+
+
+def test_async_save(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    tree = _tree(rng)
+    mgr.save(7, tree)
+    mgr.wait()
+    assert mgr.steps() == [7]
+
+
+def test_elastic_restore_new_sharding(tmp_path, rng):
+    """Restore onto a different mesh: pure resharding of global arrays."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    tree = {"w": jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)}
+    path = str(tmp_path / "c")
+    ckpt.save(path, tree, step=0)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, PartitionSpec("data", None))}
+    restored, _ = ckpt.load(path, tree, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_deterministic_restart_stream():
+    d1 = SyntheticTokens(64, 4, 8, seed=3)
+    d2 = SyntheticTokens(64, 4, 8, seed=3)
+    for s in (0, 5, 17):
+        a, b = d1.batch_at(s), d2.batch_at(s)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_run_with_restarts(tmp_path):
+    attempts = {"n": 0}
+
+    def flaky():
+        attempts["n"] += 1
+        if attempts["n"] < 3:
+            raise RuntimeError("node failure")
+        return "done"
+
+    assert run_with_restarts(flaky, max_restarts=3) == "done"
+    assert attempts["n"] == 3
+    with pytest.raises(RuntimeError):
+        run_with_restarts(lambda: (_ for _ in ()).throw(
+            RuntimeError("always")), max_restarts=1)
+
+
+def test_straggler_monitor():
+    import time
+    mon = StragglerMonitor(window=8, ratio=1.5)
+    for _ in range(6):
+        with mon:
+            time.sleep(0.01)
+    with mon:
+        time.sleep(0.08)
+    assert mon.flags == 1

@@ -1,0 +1,86 @@
+"""im2col variants (paper §IV, Table III operands) + Pallas kernel."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import im2col as i2c
+from repro.kernels import ops
+from repro.kernels.ref import encode_ref
+from tests.conftest import sparse_matrix
+
+
+def _fm(rng, h, w, c, density):
+    x = rng.normal(size=(h, w, c)).astype(np.float32)
+    x[rng.random((h, w, c)) >= density] = 0
+    return x
+
+
+@pytest.mark.parametrize("kh,kw,s", [(3, 3, 1), (3, 3, 2), (1, 1, 1),
+                                     (5, 3, 2), (2, 4, 1)])
+def test_outer_is_transpose_of_inner(rng, kh, kw, s):
+    x = _fm(rng, 12, 14, 4, 0.4)
+    d = i2c.im2col_dense(jnp.asarray(x), kh, kw, s)
+    o = i2c.im2col_outer(jnp.asarray(x), kh, kw, s)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(d).T)
+
+
+@pytest.mark.parametrize("kh,kw,s", [(3, 3, 1), (3, 2, 2), (1, 1, 1)])
+@pytest.mark.parametrize("density", [0.0, 0.3, 1.0])
+def test_bitmap_im2col_matches_dense(rng, kh, kw, s, density):
+    x = _fm(rng, 10, 12, 3, density)
+    o = i2c.im2col_outer(jnp.asarray(x), kh, kw, s)
+    lb = i2c.im2col_bitmap(jnp.asarray(x), kh, kw, s)
+    np.testing.assert_allclose(np.asarray(lb.decode()), np.asarray(o))
+    # counts = nnz per lowered row
+    np.testing.assert_array_equal(
+        np.asarray(lb.counts), (np.asarray(o) != 0).sum(axis=1))
+
+
+def test_csr_im2col_matches(rng):
+    x = _fm(rng, 10, 12, 3, 0.35)
+    o = i2c.im2col_outer(jnp.asarray(x), 3, 3, 1)
+    np.testing.assert_allclose(
+        np.asarray(i2c.im2col_csr(jnp.asarray(x), 3, 3, 1)), np.asarray(o))
+
+
+def test_encode_kernel_vs_ref(rng):
+    x = rng.normal(size=(3, 9, 40)).astype(np.float32)
+    x[rng.random(x.shape) < 0.6] = 0
+    bits, cond = ops.bitmap_encode(jnp.asarray(x), interpret=True)
+    for c in range(3):
+        pb, pc, _, _ = encode_ref(jnp.asarray(x[c]))
+        np.testing.assert_array_equal(np.asarray(bits[c]), np.asarray(pb))
+        np.testing.assert_allclose(np.asarray(cond[c]), np.asarray(pc))
+
+
+@pytest.mark.parametrize("kh,kw", [(3, 3), (1, 1), (2, 3)])
+@pytest.mark.parametrize("density", [0.0, 0.4, 1.0])
+def test_sparse_im2col_kernel_vs_jnp_ref(rng, kh, kw, density):
+    x = _fm(rng, 11, 13, 2, density)
+    ref = i2c.im2col_bitmap(jnp.asarray(x), kh, kw, 1)
+    out = ops.sparse_im2col(jnp.asarray(x), kh, kw, 1, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out.bitmap),
+                                  np.asarray(ref.bitmap))
+    np.testing.assert_allclose(np.asarray(out.values),
+                               np.asarray(ref.values))
+    np.testing.assert_array_equal(np.asarray(out.counts),
+                                  np.asarray(ref.counts))
+
+
+def test_sparse_im2col_stride_fallback(rng):
+    x = _fm(rng, 12, 12, 2, 0.4)
+    out = ops.sparse_im2col(jnp.asarray(x), 3, 3, 2, interpret=True)
+    o = i2c.im2col_outer(jnp.asarray(x), 3, 3, 2)
+    np.testing.assert_allclose(np.asarray(out.decode()), np.asarray(o))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), h=st.integers(6, 12),
+       w=st.integers(6, 14), density=st.floats(0.0, 1.0))
+def test_property_kernel_im2col(seed, h, w, density):
+    rng = np.random.default_rng(seed)
+    x = _fm(rng, h, w, 2, density)
+    ref = i2c.im2col_outer(jnp.asarray(x), 3, 3, 1)
+    out = ops.sparse_im2col(jnp.asarray(x), 3, 3, 1, interpret=True)
+    np.testing.assert_allclose(np.asarray(out.decode()), np.asarray(ref))

@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests (reduced configs, required by the brief):
+one forward + one train step on CPU, shape and NaN checks, plus
+prefill/decode == full-forward consistency for every family.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import list_archs, smoke_config
+from repro.configs.base import RunConfig
+from repro.models import transformer as tfm
+from repro.training import optimizer as opt
+from repro.training.train_loop import make_train_step
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, rng, b=2, s=16):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                   jnp.int32)}
+    if cfg.frontend == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.encoder_len, cfg.d_model)) * 0.1,
+            jnp.bfloat16)
+    if cfg.frontend == "vision":
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.num_image_tokens, cfg.d_model)) * 0.1,
+            jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nan(arch, rng):
+    cfg = smoke_config(arch)
+    params, specs = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, rng)
+    out = tfm.forward(params, batch, cfg, mode="train")
+    assert out.logits.shape == (2, 16, cfg.vocab_size)
+    assert not np.any(np.isnan(np.asarray(out.logits, np.float32)))
+    # spec tree structurally matches the param tree (same key paths) and
+    # every spec has one axis name per param dim
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    p_flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    s_flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=is_axes)[0]
+    p_paths = [jax.tree_util.keystr(p) for p, _ in p_flat]
+    s_paths = [jax.tree_util.keystr(p) for p, _ in s_flat]
+    assert p_paths == s_paths
+    for (_, leaf), (_, axes) in zip(p_flat, s_flat):
+        assert len(axes) == leaf.ndim
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_no_nan(arch, rng):
+    cfg = smoke_config(arch)
+    rc = RunConfig(microbatches=2, learning_rate=1e-3)
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    ostate = opt.init_opt_state(params, rc)
+    step = jax.jit(make_train_step(cfg, rc))
+    params, ostate, _, m = step(params, ostate, None, _batch(cfg, rng))
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(m["grad_norm"])) and float(m["grad_norm"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_full(arch, rng):
+    cfg = smoke_config(arch)
+    if cfg.n_experts:  # dropping MoE: use no-drop capacity for exactness
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    B, S, P = 2, 12, 8
+    batch = _batch(cfg, rng, B, S)
+    del batch["labels"]
+    full = tfm.forward(params, batch, cfg, mode="train").logits
+    caches = tfm.init_caches(cfg, B, 16)
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :P]
+    out = tfm.forward(params, pre, cfg, mode="prefill", caches=caches,
+                      positions=jnp.arange(P, dtype=jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(out.logits, np.float32),
+        np.asarray(full[:, :P], np.float32), atol=2.5e-2, rtol=1e-2)
+    caches = out.caches
+    for t in range(P, S):
+        o = tfm.forward(params, {"tokens": batch["tokens"][:, t:t + 1]},
+                        cfg, mode="decode", caches=caches,
+                        positions=jnp.asarray([t], jnp.int32))
+        caches = o.caches
+        np.testing.assert_allclose(
+            np.asarray(o.logits[:, 0], np.float32),
+            np.asarray(full[:, t], np.float32), atol=2.5e-2, rtol=1e-2)
+
+
+def test_full_configs_have_exact_assigned_dims():
+    from repro.configs import get_config
+    expect = {
+        "mamba2-370m": (48, 1024, 0, 50280),
+        "qwen1.5-110b": (80, 8192, 49152, 152064),
+        "yi-34b": (60, 7168, 20480, 64000),
+        "chatglm3-6b": (28, 4096, 13696, 65024),
+        "nemotron-4-340b": (96, 18432, 73728, 256000),
+        "whisper-base": (6, 512, 2048, 51865),
+        "mixtral-8x7b": (32, 4096, 14336, 32000),
+        "qwen3-moe-235b-a22b": (94, 4096, 1536, 151936),
+        "llama-3.2-vision-90b": (100, 8192, 28672, 128256),
+        "jamba-1.5-large-398b": (72, 8192, 24576, 65536),
+    }
+    for name, (l, d, ff, v) in expect.items():
+        cfg = get_config(name)
+        assert (cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size) == \
+            (l, d, ff, v), name
+
+
+def test_param_count_magnitudes():
+    """Full-config parameter counts are in the advertised ballpark."""
+    from repro.configs import get_config
+    from repro.launch.costmodel import _param_counts
+    expect_b = {"qwen1.5-110b": 111, "yi-34b": 34, "nemotron-4-340b": 341,
+                "mixtral-8x7b": 47, "qwen3-moe-235b-a22b": 235,
+                "llama-3.2-vision-90b": 88, "jamba-1.5-large-398b": 398,
+                "chatglm3-6b": 6.4, "mamba2-370m": 0.37,
+                "whisper-base": 0.072}
+    for name, target in expect_b.items():
+        total = _param_counts(get_config(name))["total"] / 1e9
+        assert 0.7 * target < total < 1.35 * target, (name, total, target)

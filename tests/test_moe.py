@@ -1,0 +1,88 @@
+"""MoE units: dispatch correctness vs dense per-token reference,
+capacity drops, shard_map EP path on a host mesh."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import moe, nn
+
+
+def dense_reference(params, x, cfg):
+    gates = jax.nn.softmax(
+        x.reshape(-1, cfg.d_model) @ params["router"].astype(jnp.float32))
+    tg, ti = jax.lax.top_k(gates, cfg.n_experts_active)
+    tg = tg / tg.sum(-1, keepdims=True)
+    t = x.shape[0] * x.shape[1]
+    xt = np.asarray(x.reshape(t, -1), np.float32)
+    ref = np.zeros((t, cfg.d_model), np.float32)
+    for tok in range(t):
+        for j in range(cfg.n_experts_active):
+            eid = int(ti[tok, j])
+            g = float(tg[tok, j])
+            h = xt[tok] @ np.asarray(params["w_up"][eid])
+            gate = xt[tok] @ np.asarray(params["w_gate"][eid])
+            act = (gate / (1 + np.exp(-gate))) * h
+            ref[tok] += g * (act @ np.asarray(params["w_down"][eid]))
+    return ref.reshape(x.shape[0], x.shape[1], -1)
+
+
+@pytest.fixture
+def setup(rng):
+    cfg = dataclasses.replace(smoke_config("mixtral-8x7b"),
+                              capacity_factor=16.0)
+    params, _ = nn.unzip(moe.init_moe(jax.random.PRNGKey(0), cfg))
+    x = jnp.asarray(rng.normal(size=(2, 8, cfg.d_model)) * 0.3, jnp.float32)
+    return cfg, params, x
+
+
+def test_local_path_matches_dense(setup):
+    cfg, params, x = setup
+    y, aux = moe.moe_forward(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), dense_reference(params, x,
+                                                              cfg),
+                               rtol=2e-3, atol=2e-3)
+    assert float(aux) > 0
+
+
+def test_capacity_drops_bounded(setup, rng):
+    cfg, params, x = setup
+    tight = dataclasses.replace(cfg, capacity_factor=0.5)
+    y, _ = moe.moe_forward(params, x, tight)
+    ref = dense_reference(params, x, cfg)
+    # dropped tokens make outputs differ but stay finite and bounded
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.abs(np.asarray(y)).max() <= np.abs(ref).max() * 4 + 1.0
+
+
+def test_shard_map_path_matches_local(setup):
+    cfg, params, x = setup
+    y_local, _ = moe.moe_forward(params, x, cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = {"experts": "model", "batch": "data", "mlp": "model"}
+    with mesh, nn.axis_rules(rules, mesh=mesh):
+        assert nn.current_mesh() is mesh
+        y_sm, _ = jax.jit(lambda p, xx: moe.moe_forward(p, xx, cfg))(
+            params, x)
+    np.testing.assert_allclose(np.asarray(y_sm), np.asarray(y_local),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_shard_map_grads_flow(setup):
+    cfg, params, x = setup
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = {"experts": "model", "batch": "data", "mlp": "model"}
+
+    def loss(p):
+        with nn.axis_rules(rules, mesh=mesh):
+            y, aux = moe.moe_forward(p, x, cfg)
+        return jnp.sum(y.astype(jnp.float32) ** 2) + 0.01 * aux
+
+    with mesh:
+        g = jax.jit(jax.grad(loss))(params)
+    gn = sum(float(jnp.sum(jnp.abs(v))) for v in
+             jax.tree_util.tree_leaves(g))
+    assert np.isfinite(gn) and gn > 0

@@ -1,0 +1,60 @@
+"""Pruning mask invariants (weight-side sparsity producers)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pruning
+
+
+def test_magnitude_ratio(rng):
+    w = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+    for s in [0.0, 0.25, 0.5, 0.9]:
+        m = pruning.magnitude_mask(w, s)
+        got = 1.0 - float(jnp.mean(m))
+        assert abs(got - s) < 0.02
+        # kept entries are the largest-magnitude ones
+        if 0 < s < 1:
+            kept_min = float(jnp.min(jnp.abs(w[m])))
+            dropped_max = float(jnp.max(jnp.abs(w[~m]))) if (~m).any() \
+                else 0.0
+            assert kept_min >= dropped_max
+
+
+def test_structured_24(rng):
+    w = jnp.asarray(rng.normal(size=(32, 64)).astype(np.float32))
+    m = np.asarray(pruning.structured_24_mask(w))
+    groups = m.reshape(32, 16, 4)
+    assert (groups.sum(-1) == 2).all()
+
+
+def test_vectorwise(rng):
+    w = jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))
+    m = np.asarray(pruning.vectorwise_mask(w, 0.75, vec=32))
+    assert (m.reshape(16, 2, 32).sum(-1) == 8).all()
+
+
+def test_agp_schedule_monotone():
+    vals = [pruning.agp_sparsity(t, s_final=0.9, t_end=100)
+            for t in range(0, 120, 10)]
+    assert vals[0] == 0.0
+    assert abs(vals[-1] - 0.9) < 1e-9
+    assert all(b >= a - 1e-12 for a, b in zip(vals, vals[1:]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), s=st.floats(0.0, 0.95))
+def test_property_masked_weights_subset(seed, s):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(32, 32)).astype(np.float32))
+    m = pruning.magnitude_mask(w, s)
+    wp = w * m
+    # pruning never creates values, only zeros
+    assert set(np.asarray(wp).ravel()) <= set(np.asarray(w).ravel()) | {0.0}
+
+
+def test_prune_tree_skips_vectors(rng):
+    params = {"w": jnp.asarray(rng.normal(size=(16, 16)), jnp.float32),
+              "b": jnp.ones((16,), jnp.float32)}
+    masks = pruning.prune_tree(params, 0.5)
+    assert bool(jnp.all(masks["b"]))
+    assert float(jnp.mean(masks["w"])) < 0.6

@@ -1,0 +1,80 @@
+"""Mamba2/SSD units: chunked scan vs naive recurrence, decode step."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import nn
+from repro.models import ssm
+
+
+def naive_ssd(x, dt, a, bmat, cmat):
+    """Sequential reference: h_t = h·exp(dt_t a) + dt_t B_t x_t^T."""
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    hg = h // g
+    y = np.zeros_like(np.asarray(x), dtype=np.float64)
+    st = np.zeros((b, h, p, n), np.float64)
+    xa, dta = np.asarray(x, np.float64), np.asarray(dt, np.float64)
+    ba, ca = np.asarray(bmat, np.float64), np.asarray(cmat, np.float64)
+    aa = np.asarray(a, np.float64)
+    for t in range(s):
+        for hh in range(h):
+            gg = hh // hg
+            decay = np.exp(dta[:, t, hh] * aa[hh])
+            st[:, hh] = st[:, hh] * decay[:, None, None] + \
+                dta[:, t, hh][:, None, None] * \
+                xa[:, t, hh][:, :, None] * ba[:, t, gg][:, None, :]
+            y[:, t, hh] = np.einsum("bpn,bn->bp", st[:, hh], ca[:, t, gg])
+    return y, st
+
+
+@pytest.mark.parametrize("s,chunk", [(16, 8), (24, 8), (12, 16)])
+def test_ssd_chunked_matches_recurrence(rng, s, chunk):
+    cfg = smoke_config("mamba2-370m")
+    cfg = cfg.__class__(**{**cfg.__dict__, "ssm_chunk": chunk})
+    b, h, p, g, n = 2, 4, 8, 1, 16
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.random((b, s, h)) * 0.5 + 0.1, jnp.float32)
+    a = -jnp.asarray(rng.random(h) + 0.5, jnp.float32)
+    bmat = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32)
+    cmat = jnp.asarray(rng.normal(size=(b, s, g, n)), jnp.float32)
+    if s % chunk:
+        pytest.skip("ssd_chunked is exercised via mamba_forward padding")
+    y, final = ssm.ssd_chunked(x, dt, a, bmat, cmat, cfg)
+    y_ref, st_ref = naive_ssd(x, dt, a, bmat, cmat)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(final), st_ref.astype(np.float32), rtol=1e-3, atol=1e-3)
+
+
+def test_mamba_forward_then_step_continuity(rng):
+    """prefill(S) + step == forward(S+1) for the mamba block."""
+    cfg = smoke_config("mamba2-370m")
+    params, _ = nn.unzip(ssm.init_mamba(jax.random.PRNGKey(1), cfg))
+    s = 11
+    x = jnp.asarray(rng.normal(size=(1, s + 1, cfg.d_model)) * 0.3,
+                    jnp.float32)
+    y_full, _ = ssm.mamba_forward(params, x, cfg)
+    y_pre, st = ssm.mamba_forward(params, x[:, :s], cfg, return_state=True)
+    np.testing.assert_allclose(np.asarray(y_pre), np.asarray(y_full[:, :s]),
+                               rtol=2e-3, atol=2e-3)
+    y_step, _ = ssm.mamba_step(params, x[:, s:s + 1], cfg, st)
+    np.testing.assert_allclose(np.asarray(y_step),
+                               np.asarray(y_full[:, s:s + 1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_state_passing_across_segments(rng):
+    """forward(x) == forward(x1) ; forward(x2 | state)."""
+    cfg = smoke_config("mamba2-370m")
+    params, _ = nn.unzip(ssm.init_mamba(jax.random.PRNGKey(2), cfg))
+    x = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)) * 0.3,
+                    jnp.float32)
+    y_full, _ = ssm.mamba_forward(params, x, cfg)
+    y1, st = ssm.mamba_forward(params, x[:, :8], cfg, return_state=True)
+    y2, _ = ssm.mamba_forward(params, x[:, 8:], cfg, state=st)
+    np.testing.assert_allclose(
+        np.concatenate([np.asarray(y1), np.asarray(y2)], 1),
+        np.asarray(y_full), rtol=2e-3, atol=2e-3)
