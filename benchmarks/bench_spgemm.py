@@ -7,6 +7,8 @@ Two measurements:
 * wall-clock of the Pallas kernel (interpret mode) vs XLA matmul for
   block-structured sparsity — shows real block/slice skipping.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -20,15 +22,19 @@ GRID_B = [0.0, 0.50, 0.75, 0.99]
 N = 1024  # step-count model is size-insensitive; 1024 keeps CPU time sane
 
 
-def run():
+def run(smoke: bool = False):
+    """``smoke`` shrinks the grid/sizes for the CI quick job."""
+    grid_a = [0.0, 0.25, 0.50, 0.99, 0.999] if smoke else GRID_A
+    grid_b = [0.0, 0.99] if smoke else GRID_B
+    n = 256 if smoke else N
     rng = np.random.default_rng(0)
     print("# Fig 21 reproduction: theoretical OHMMA speedup (paper model)"
           " and MXU-adapted model")
     rows = []
-    for sb in GRID_B:
-        b = jnp.asarray(sparse(rng, (N, N), sb))
-        for sa in GRID_A:
-            a = jnp.asarray(sparse(rng, (N, N), sa))
+    for sb in grid_b:
+        b = jnp.asarray(sparse(rng, (n, n), sb))
+        for sa in grid_a:
+            a = jnp.asarray(sparse(rng, (n, n), sa))
             sc = stats.ohmma_steps(a, b)
             mc = stats.mxu_steps(a, b, 256, 256, 256, 128)
             sp_paper = float(sc.speedup)
@@ -66,4 +72,7 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grid/sizes for CI")
+    run(smoke=ap.parse_args().smoke)

@@ -3,6 +3,7 @@
     PYTHONPATH=src python examples/serve_lm.py --requests 6 --slots 2
 """
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -20,9 +21,14 @@ def main():
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--sparse-mode", default="dense",
+                    choices=["dense", "weight", "dual"],
+                    help="route projections through repro.sparse; prints "
+                         "the per-layer StepCounts profile")
     args = ap.parse_args()
 
-    cfg = smoke_config(args.arch)
+    cfg = dataclasses.replace(smoke_config(args.arch),
+                              sparse_mode=args.sparse_mode)
     params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
     rc = RunConfig(kv_quant=args.kv_quant)
     engine = Engine(params, cfg, slots=args.slots, capacity=128, rc=rc)
@@ -33,6 +39,11 @@ def main():
                               max_new_tokens=args.max_new))
     done = engine.run_to_completion()
     dt = time.time() - t0
+    if args.sparse_mode != "dense":
+        print(f"per-layer MXU steps ({args.sparse_mode} mode, prefill):")
+        for e in engine.profile_sparsity([1, 2, 3, 4]):
+            print(f"  {e['name']:10s} {e['sparse_steps']}/"
+                  f"{e['dense_steps']} ({e['speedup']:.2f}x)")
     total_toks = sum(len(r.output) for r in done)
     for r in sorted(done, key=lambda r: r.uid):
         print(f"req {r.uid}: {r.output}")

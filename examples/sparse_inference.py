@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.core import pruning, spconv, stats
 from repro.core.layers import (SparseLinearConfig, apply_sparse_linear,
-                               init_sparse_linear)
+                               init_sparse_linear, plan_sparse_linear)
 
 
 def main():
@@ -44,6 +44,7 @@ def main():
                              block_m=64, block_n=64, block_k=64)
     params = init_sparse_linear(jax.random.PRNGKey(0), cfg)
     params["mask"] = pruning.magnitude_mask(params["w"], 0.8)
+    params = plan_sparse_linear(params, cfg)   # weight-side plan: built once
     act = jnp.maximum(jnp.asarray(
         rng.normal(size=(64, 256)).astype(np.float32)), 0.0)
     y, st = apply_sparse_linear(params, act, cfg)
@@ -53,6 +54,30 @@ def main():
           f"steps={int(st.sparse)}/{int(st.dense)}")
     sc2 = stats.ohmma_steps(act, params["w"] * params["mask"])
     print(f"  paper OHMMA model speedup: {float(sc2.speedup):.2f}x")
+
+    # --- model-zoo dispatch: a squared-ReLU MLP block in dual mode ------
+    import dataclasses
+    from repro import sparse as sp
+    from repro.configs import smoke_config
+    from repro.models import mlp as mlpm
+    from repro.models import nn as mnn
+    cfg_m = dataclasses.replace(
+        smoke_config("nemotron-4-340b"), sparse_mode="dual",
+        sparse_use_kernel=True, sparse_block_m=8, sparse_block_n=16,
+        sparse_slice_k=16)
+    mp, _ = mnn.unzip(mlpm.init_mlp(jax.random.PRNGKey(1), cfg_m))
+    for key in ("w_up", "w_down"):
+        mask = pruning.block_mask(mp[key], 0.5, block=(16, 16))
+        mp[key] = mp[key] * mask.astype(mp[key].dtype)
+    plans = sp.weights.plan_layer_weights(mp, slice_k=cfg_m.sparse_slice_k)
+    xm = jnp.asarray(rng.normal(size=(1, 32, cfg_m.d_model))
+                     .astype(np.float32))
+    with sp.tape.collect() as entries:
+        mlpm.mlp_forward(mp, xm, cfg_m, plans=plans)
+    print("MLP block (relu2, dual mode) per-layer MXU steps:")
+    for e in sp.tape.summarize(entries):
+        print(f"  {e['name']:10s} {e['sparse_steps']}/{e['dense_steps']} "
+              f"({e['speedup']:.2f}x)")
 
 
 if __name__ == "__main__":

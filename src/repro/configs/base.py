@@ -46,6 +46,14 @@ class ModelConfig:
     cross_attn_every: int = 0      # vlm: cross-attn at p % cross_attn_every == 0
     num_image_tokens: int = 0
     frontend: str = "none"         # none | audio | vision (always a stub)
+    # dual-side sparsity dispatch (repro.sparse, DESIGN.md §4): default
+    # dense preserves numerics/compile exactly; weight/dual route every
+    # projection through the sparse dispatch layer.
+    sparse_mode: str = "dense"     # dense | weight | dual
+    sparse_use_kernel: bool = False  # Pallas block-skip kernel (2-D paths)
+    sparse_block_m: int = 128
+    sparse_block_n: int = 128
+    sparse_slice_k: int = 128
     # norms / embeddings
     norm_kind: str = "rms"         # rms | layer
     norm_eps: float = 1e-5

@@ -13,6 +13,12 @@ technique and the model zoo.
 All modes are numerically identical to ``act @ (w * mask)`` — sparsity
 changes the schedule, not the math — so models can enable them per-layer
 at inference without retraining glue.
+
+The heavy lifting lives in :mod:`repro.sparse.dispatch` (DESIGN.md §4);
+this module adapts the functional params-dict convention on top of it.
+:func:`plan_sparse_linear` caches the static weight-side plan in the
+params once at init/load so per-step planning reduces to the
+activation-side AND.
 """
 from __future__ import annotations
 
@@ -23,6 +29,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import stats
+from repro.sparse import dispatch as spd
+from repro.sparse import weights as spw
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,7 +41,7 @@ class SparseLinearConfig:
     use_bias: bool = False
     block_m: int = 128
     block_n: int = 128
-    block_k: int = 128
+    block_k: int = 128             # k-slice granularity of the skip unit
     use_kernel: bool = False       # Pallas path (interpret-mode on CPU)
     collect_stats: bool = False
 
@@ -52,33 +60,39 @@ def init_sparse_linear(key: jax.Array, cfg: SparseLinearConfig,
     return params
 
 
+def plan_sparse_linear(params, cfg: SparseLinearConfig):
+    """Cache the static weight-side plan in the params (call once, after
+    the mask is final).  Returns a new params dict with a ``plan`` entry;
+    :func:`apply_sparse_linear` then skips weight-side re-planning on
+    every forward call."""
+    out = dict(params)
+    # plan at the granularity the dispatch will clamp to, so the cached
+    # activity hits the fast path even when in_features < block_k
+    from repro.sparse import plan as pln
+    out["plan"] = spw.plan_weight(
+        params["w"], mask=params["mask"],
+        slice_k=pln.effective_slice_k(cfg.in_features, cfg.block_k))
+    return out
+
+
 def apply_sparse_linear(
     params, x: jax.Array, cfg: SparseLinearConfig,
 ) -> Tuple[jax.Array, Optional[stats.StepCounts]]:
     """x: (..., in_features) → (..., out_features)[, step stats]."""
-    w = params["w"]
     if cfg.mode in ("weight", "dual"):
-        w = w * params["mask"].astype(w.dtype)
-
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, cfg.in_features)
-
-    counts = None
-    if cfg.mode == "dual" and cfg.use_kernel:
-        from repro.core import spgemm as sg
-        res = sg.spgemm(x2, w, block_m=cfg.block_m, block_n=cfg.block_n,
-                        block_k=cfg.block_k, use_kernel=True)
-        y, counts = res.out, res.steps
+        w = params.get("plan")
+        if w is None:  # unplanned fallback: mask + plan on the fly
+            w = params["w"] * params["mask"].astype(params["w"].dtype)
     else:
-        y = x2 @ w
-        if cfg.collect_stats:
-            if cfg.mode == "dual":
-                counts = stats.mxu_steps(x2, w, cfg.block_m, cfg.block_n,
-                                         cfg.block_k)
-            elif cfg.mode == "weight":
-                counts = stats.mxu_steps(jnp.ones_like(x2), w, cfg.block_m,
-                                         cfg.block_n, cfg.block_k)
+        w = params["w"]
+
+    # dual+kernel always returned stats historically; keep that contract.
+    collect = cfg.collect_stats or (cfg.mode == "dual" and cfg.use_kernel)
+    y, counts = spd.matmul(
+        x, w, mode=cfg.mode, block_m=cfg.block_m, block_n=cfg.block_n,
+        slice_k=cfg.block_k, use_kernel=cfg.use_kernel and cfg.mode == "dual",
+        collect_stats=collect, name="dual_sparse_linear")
 
     if cfg.use_bias:
         y = y + params["b"]
-    return y.reshape(*lead, cfg.out_features), counts
+    return y, counts

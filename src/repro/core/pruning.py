@@ -6,6 +6,9 @@ provides the schedules and masks needed to *produce* that weight sparsity
 inside the framework:
 
 * :func:`magnitude_mask`      — global magnitude pruning at a target ratio.
+* :func:`block_mask`          — block pruning at the TPU kernel's skip
+  granularity (k-slice × output block), the structured weight sparsity
+  the level-2 bitmap schedule exploits directly.
 * :func:`agp_sparsity`        — Automated Gradual Pruning schedule s(t).
 * :func:`structured_24_mask`  — 2:4 fine-grained structural pruning (the
   A100 sparse-tensor-core scheme the paper compares against).
@@ -15,7 +18,7 @@ inside the framework:
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +41,34 @@ def agp_sparsity(step: int, *, s_init: float = 0.0, s_final: float = 0.9,
     t = min(max(step, t_start), t_end)
     frac = (t - t_start) / max(t_end - t_start, 1)
     return s_final + (s_init - s_final) * (1.0 - frac) ** 3
+
+
+def block_mask(w: jax.Array, sparsity: float,
+               block: Tuple[int, int] = (128, 128)) -> jax.Array:
+    """Block pruning: drop whole (bk × bn) tiles by Frobenius norm.
+
+    The structured counterpart of :func:`magnitude_mask` at the skip
+    granularity of the TPU kernel (k-slice × output block): a pruned tile
+    removes an entire entry from the two-level bitmap schedule, so the
+    weight-side speedup is realised by the block-skip kernel rather than
+    only by element-level condensation.  w: (K, N).
+    """
+    if not 0.0 <= sparsity < 1.0:
+        raise ValueError(f"sparsity must be in [0,1), got {sparsity}")
+    k, n = w.shape
+    bk, bn = block
+    kt, nt = -(-k // bk), -(-n // bn)
+    padded = jnp.pad(jnp.square(w), ((0, kt * bk - k), (0, nt * bn - n)))
+    norms = jnp.sum(padded.reshape(kt, bk, nt, bn), axis=(1, 3))  # (Kt,Nt)
+    keep = int(round(kt * nt * (1.0 - sparsity)))
+    if keep >= kt * nt:
+        return jnp.ones_like(w, dtype=bool)
+    # rank-based keep (not a threshold compare): tied tile norms —
+    # constant/quantized weights — must still keep exactly `keep` tiles
+    rank = jnp.argsort(jnp.argsort(norms.reshape(-1)))
+    tile_keep = (rank >= kt * nt - keep).reshape(kt, nt)          # (Kt,Nt)
+    full = jnp.repeat(jnp.repeat(tile_keep, bk, axis=0), bn, axis=1)
+    return full[:k, :n]
 
 
 def structured_24_mask(w: jax.Array, axis: int = -1) -> jax.Array:

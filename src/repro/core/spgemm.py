@@ -103,19 +103,19 @@ def plan_blocks(
     a_tiles: (Mt, Kt) bool, b_tiles: (Kt, Nt) bool.
     Returns (indices, counts):
       indices: (Mt, Nt, Kt_cap) int32 — for output block (i, j), the
-               ordered list of active k-block indices (padded with 0).
+               ordered list of active k-block indices; the inactive tail
+               repeats the last active index (all zeros when the block has
+               none) so skipped grid steps re-map to an already-resident
+               block and trigger no spurious DMA.
       counts:  (Mt, Nt) int32 — number of valid entries.
-    This is the warp-bitmap skip list the Pallas kernel prefetches.
+    This is the warp-bitmap skip list the Pallas kernel prefetches;
+    front-packing is shared with the slice-level planner
+    (:func:`repro.sparse.plan.front_pack`).
     """
-    mt, kt = a_tiles.shape
-    _, nt = b_tiles.shape
+    from repro.sparse import plan as pln
     act = bm.tile_activity_outer(a_tiles, b_tiles)  # (Mt, Nt, Kt)
-    counts = jnp.sum(act, axis=-1, dtype=jnp.int32)
-    cap = int(max_active) if max_active is not None else kt
-    # stable-front-pack the active k indices
-    order = jnp.argsort(~act, axis=-1, stable=True)
-    indices = order[..., :cap].astype(jnp.int32)
-    return indices, counts
+    cap = int(max_active) if max_active is not None else None
+    return pln.front_pack(act, cap=cap)
 
 
 def spgemm(

@@ -20,7 +20,9 @@ from repro.core.bitmap import WORD
 
 
 def _encode_kernel(x_ref, bits_ref, cond_ref, *, h: int, wp: int):
-    x = x_ref[0]                               # (H, Wp)
+    # full-block loads/stores (no bare-int ref indices: the interpret-mode
+    # discharge rule rejects scalar indexers on this jax version)
+    x = x_ref[...][0]                          # (H, Wp)
     mask = x != 0
 
     # pack bits: (H, Ww, 32) · 2^lane → (H, Ww) uint32
@@ -28,7 +30,7 @@ def _encode_kernel(x_ref, bits_ref, cond_ref, *, h: int, wp: int):
     m3 = mask.reshape(h, ww, WORD).astype(jnp.uint32)
     weights = (jnp.uint32(1) << jax.lax.broadcasted_iota(
         jnp.uint32, (1, 1, WORD), 2))
-    bits_ref[0, :, :] = jnp.sum(m3 * weights, axis=-1, dtype=jnp.uint32)
+    bits_ref[...] = jnp.sum(m3 * weights, axis=-1, dtype=jnp.uint32)[None]
 
     # condense values row by row via one-hot selection matmul
     cum = (jnp.cumsum(mask, axis=1) - mask).astype(jnp.int32)  # exclusive
@@ -41,8 +43,8 @@ def _encode_kernel(x_ref, bits_ref, cond_ref, *, h: int, wp: int):
         sel = ((crow[0][:, None] == lane[0][None, :]) & mrow[0][:, None])
         cond = jnp.dot(row.astype(jnp.float32), sel.astype(jnp.float32),
                        preferred_element_type=jnp.float32)
-        pl.store(cond_ref, (0, pl.ds(i, 1), slice(None)),
-                 cond.astype(cond_ref.dtype))
+        pl.store(cond_ref, (pl.ds(0, 1), pl.ds(i, 1), slice(None)),
+                 cond[None].astype(cond_ref.dtype))
         return 0
 
     jax.lax.fori_loop(0, h, body, 0)

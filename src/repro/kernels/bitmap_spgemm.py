@@ -52,6 +52,11 @@ def plan_slices(
 ) -> Tuple[jax.Array, jax.Array]:
     """Build the condensed active-slice schedule from operand bitmaps.
 
+    Thin wrapper over the unified planner in :mod:`repro.sparse.plan`
+    (slice activity → block reduction → front-pack with repeat-last tail);
+    kept as the kernel-local name because the schedule layout is the
+    kernel's scalar-prefetch contract.
+
     Returns:
       ks:     (Mt, Nt, S) int32 — front-packed active k-slice indices for
               each output block; inactive tail repeats the last active
@@ -59,30 +64,11 @@ def plan_slices(
               block (no DMA).
       counts: (Mt, Nt) int32 — number of active slices per output block.
     Fully jittable; cost is a cheap reduction over the operands (in the
-    serving path the bitmaps come from the previous layer's encode).
+    serving path the activation-side activity comes cached from the
+    previous layer's :class:`repro.sparse.SparseActivation`).
     """
-    m, k = a.shape
-    _, n = b.shape
-    mt = pl.cdiv(m, block_m)
-    nt = pl.cdiv(n, block_n)
-    s = pl.cdiv(k, slice_k)
-    pad_m, pad_n, pad_k = mt * block_m - m, nt * block_n - n, s * slice_k - k
-    am = jnp.pad(a != 0, ((0, pad_m), (0, pad_k)))
-    bm_ = jnp.pad(b != 0, ((0, pad_k), (0, pad_n)))
-    # column activity of A per (block-row, slice); row activity of B per
-    # (slice, block-col) — the 1-bit "multiply-bitmap" reduction.
-    col = jnp.any(am.reshape(mt, block_m, s, slice_k), axis=(1, 3))  # (Mt,S)
-    row = jnp.any(bm_.reshape(s, slice_k, nt, block_n), axis=(1, 3))  # (S,Nt)
-    act = col[:, None, :] & row.T[None, :, :]                         # (Mt,Nt,S)
-    counts = jnp.sum(act, axis=-1, dtype=jnp.int32)
-    # front-pack active slice indices (stable): the "condensing" push.
-    order = jnp.argsort(~act, axis=-1, stable=True).astype(jnp.int32)
-    arange = jnp.arange(s, dtype=jnp.int32)
-    # repeat last valid index in the tail (counts==0 → all zeros).
-    last = jnp.maximum(counts - 1, 0)[..., None]
-    ks = jnp.where(arange[None, None, :] < counts[..., None],
-                   order, jnp.take_along_axis(order, last, axis=-1))
-    return ks, counts
+    from repro.sparse import plan as pln
+    return pln.plan_operands(a, b, block_m, block_n, slice_k)
 
 
 # ---------------------------------------------------------------------------

@@ -39,8 +39,11 @@ def _im2col_kernel(vals_ref, bits_ref, out_bits_ref, out_vals_ref, *,
     dy = pl.program_id(1)
     dx = pl.program_id(2)
 
-    vals_rows = vals_ref[0, pl.ds(dy, oh), :]        # (OH, Wp) condensed
-    words = bits_ref[0, pl.ds(dy, oh), :]            # (OH, Wwp) packed
+    # slice-only ref indexers (interpret-mode discharge rejects bare ints)
+    vals_rows = pl.load(
+        vals_ref, (pl.ds(0, 1), pl.ds(dy, oh), slice(None)))[0]
+    words = pl.load(
+        bits_ref, (pl.ds(0, 1), pl.ds(dy, oh), slice(None)))[0]
 
     q = (dx // WORD).astype(jnp.int32)
     r = (dx % WORD).astype(jnp.uint32)
@@ -58,7 +61,7 @@ def _im2col_kernel(vals_ref, bits_ref, out_bits_ref, out_vals_ref, *,
                               jnp.uint32((1 << tail) - 1),
                               jnp.uint32(0xFFFFFFFF))
         lowered = lowered & tail_mask
-    out_bits_ref[0, :, :] = lowered
+    out_bits_ref[...] = lowered[None]
 
     # ---- S3: offsets = accumulated shifted-out popcount ----
     pc = jax.lax.population_count(words).astype(jnp.int32)   # (OH, Wwp)
@@ -71,7 +74,7 @@ def _im2col_kernel(vals_ref, bits_ref, out_bits_ref, out_vals_ref, *,
     # ---- S4: popcount window lengths + condensed value gather ----
     seg_lens = jnp.sum(jax.lax.population_count(lowered).astype(jnp.int32),
                        axis=1)                                # (OH,)
-    out_vals_ref[0, :] = jnp.zeros_like(out_vals_ref[0, :])
+    out_vals_ref[...] = jnp.zeros_like(out_vals_ref)
     lane = jax.lax.iota(jnp.int32, ow)
 
     def body(oy, off_run):
@@ -79,7 +82,7 @@ def _im2col_kernel(vals_ref, bits_ref, out_bits_ref, out_vals_ref, *,
         seg = jax.lax.dynamic_slice(vals_rows, (oy, start), (1, ow))[0]
         ln = jax.lax.dynamic_slice(seg_lens, (oy,), (1,))[0]
         seg = jnp.where(lane < ln, seg, 0)
-        pl.store(out_vals_ref, (0, pl.ds(off_run, ow)), seg)
+        pl.store(out_vals_ref, (pl.ds(0, 1), pl.ds(off_run, ow)), seg[None])
         return off_run + ln
 
     jax.lax.fori_loop(0, oh, body, jnp.int32(0))

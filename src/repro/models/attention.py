@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import cache as kvc
 from repro.models import nn
+from repro import sparse as sp
 
 NEG_INF = -1e30
 
@@ -167,6 +168,26 @@ def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(b, sq, h, hd).astype(q.dtype)
 
 
+def _proj(x: jax.Array, w: jax.Array, cfg: ModelConfig, name: str,
+          n_contract: int = 1, plan_act=None) -> jax.Array:
+    """Head projection through the sparse dispatch layer.
+
+    Equivalent to ``einsum("bsd,dhk->bshk")`` (n_contract=1) /
+    ``einsum("bshk,hkd->bsd")`` (n_contract=2); with a non-dense
+    ``cfg.sparse_mode`` the dispatch plans activation-side skips and
+    records StepCounts.  ``plan_act`` is the cached weight-side slice
+    activity over the flattened contraction axis (from
+    ``transformer.plan_weight_activities``) — without it the weight side
+    is re-reduced on the fly every call.
+    """
+    if cfg.sparse_mode == "dense":
+        eq = "bsd,dhk->bshk" if n_contract == 1 else "bshk,hkd->bsd"
+        return jnp.einsum(eq, x, w)
+    y, _ = sp.project(x, w, n_contract=n_contract, plan_act=plan_act,
+                      name=name, **sp.dispatch.kwargs_from_config(cfg))
+    return y
+
+
 # ---------------------------------------------------------------------------
 # layer forward (self / cross, with optional cache)
 # ---------------------------------------------------------------------------
@@ -180,6 +201,7 @@ def attention_forward(
     causal: bool = True,
     update_cache: bool = True,
     chunk: int = 0,
+    plans: Optional[Dict] = None,
 ) -> Tuple[jax.Array, Optional[kvc.KVCache]]:
     """One attention layer (projections + attend + output).
 
@@ -187,6 +209,8 @@ def attention_forward(
     Cross-attention (is_cross): kv_source is the memory (causal=False);
     at decode the memory K/V live in a pre-filled cache
     (kv_source=None, update_cache=False).
+    ``plans``: cached weight-side slice activities for wq/wk/wv/wo
+    (sparse dispatch; optional).
     Returns (output (B,S,D), updated cache or None).
     """
     if is_cross:
@@ -196,7 +220,9 @@ def attention_forward(
     # queries are independent, so this is exact (DESIGN.md §6).
     tp_heads = nn.dim_shardable(cfg.n_heads, "heads")
     seq_ax = "seq" if tp_heads else "seq_q"
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    plans = plans or {}
+    q = _proj(x, params["wq"].astype(x.dtype), cfg, "attn.q",
+              plan_act=plans.get("wq"))
     if "bq" in params:
         q = q + params["bq"].astype(q.dtype)
     q = nn.shard_act(q, "batch", seq_ax, "heads", None)
@@ -204,8 +230,10 @@ def attention_forward(
     k = v = None
     if kv_source is not None or cache is None or update_cache:
         src = x if kv_source is None else kv_source
-        k = jnp.einsum("bsd,dhk->bshk", src, params["wk"].astype(x.dtype))
-        v = jnp.einsum("bsd,dhk->bshk", src, params["wv"].astype(x.dtype))
+        k = _proj(src, params["wk"].astype(x.dtype), cfg, "attn.k",
+                  plan_act=plans.get("wk"))
+        v = _proj(src, params["wv"].astype(x.dtype), cfg, "attn.v",
+                  plan_act=plans.get("wv"))
         if "bk" in params:
             k = k + params["bk"].astype(k.dtype)
             v = v + params["bv"].astype(v.dtype)
@@ -244,5 +272,6 @@ def attention_forward(
                      chunk=chunk)
 
     out = nn.shard_act(out, "batch", seq_ax, "heads", None)
-    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    y = _proj(out, params["wo"].astype(x.dtype), cfg, "attn.out",
+              n_contract=2, plan_act=plans.get("wo"))
     return nn.shard_act(y, "batch", "seq", "embed"), cache

@@ -2,18 +2,23 @@
 
 Squared-ReLU (nemotron) and ReLU (whisper) produce genuine activation
 zeros — these are the layers where the paper's dual-side SpGEMM applies at
-inference; ``sparse_stats`` exposes the measured activation sparsity and
-MXU step counts for the benchmarks.
+inference.  With ``cfg.sparse_mode != "dense"`` both projections route
+through :mod:`repro.sparse.dispatch`: the post-activation tensor is a
+:class:`repro.sparse.SparseActivation` whose bitmap is produced once, at
+activation time, and consumed by the down-projection's planner instead of
+re-deriving ``a != 0`` (DESIGN.md §4.2).  ``sparse_stats`` exposes the
+measured activation sparsity and MXU step counts for the benchmarks.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import nn
+from repro import sparse as sp
 
 
 def init_mlp(key, cfg: ModelConfig, d_ff: int = 0):
@@ -43,14 +48,43 @@ def _activate(h: jax.Array, gate, kind: str) -> jax.Array:
     raise ValueError(kind)
 
 
-def mlp_forward(params: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
-    w_up = params["w_up"].astype(x.dtype)
-    h = jnp.dot(x, w_up)
-    gate = jnp.dot(x, params["w_gate"].astype(x.dtype)) \
-        if "w_gate" in params else None
-    h = _activate(h, gate, cfg.mlp_type)
-    h = nn.shard_act(h, "batch", "seq", "mlp")
-    y = jnp.dot(h, params["w_down"].astype(x.dtype))
+def mlp_forward(params: Dict, x: jax.Array, cfg: ModelConfig,
+                plans: Optional[Dict] = None) -> jax.Array:
+    if cfg.sparse_mode == "dense":
+        h = jnp.dot(x, params["w_up"].astype(x.dtype))
+        gate = jnp.dot(x, params["w_gate"].astype(x.dtype)) \
+            if "w_gate" in params else None
+        h = _activate(h, gate, cfg.mlp_type)
+        h = nn.shard_act(h, "batch", "seq", "mlp")
+        y = jnp.dot(h, params["w_down"].astype(x.dtype))
+        return nn.shard_act(y, "batch", "seq", "embed")
+
+    # sparse dispatch path: up-projection plans from the (mostly dense)
+    # residual stream; the activation's bitmap is built once here and
+    # reused by the down-projection planner.
+    kw = sp.dispatch.kwargs_from_config(cfg)
+    h, _ = sp.matmul(
+        x, sp.weights.planned_or_array(params["w_up"], plans, "w_up",
+                                       x.dtype, cfg.sparse_slice_k),
+        name="mlp.up", **kw)
+    gate = None
+    if "w_gate" in params:
+        gate, _ = sp.matmul(
+            x, sp.weights.planned_or_array(params["w_gate"], plans,
+                                           "w_gate", x.dtype,
+                                           cfg.sparse_slice_k),
+            name="mlp.gate", **kw)
+    h = sp.activate(h, gate, cfg.mlp_type,
+                    slice_k=sp.plan.effective_slice_k(
+                        h.shape[-1], cfg.sparse_slice_k))
+    if isinstance(h, sp.SparseActivation):
+        h = h.map_values(lambda v: nn.shard_act(v, "batch", "seq", "mlp"))
+    else:
+        h = nn.shard_act(h, "batch", "seq", "mlp")
+    y, _ = sp.matmul(
+        h, sp.weights.planned_or_array(params["w_down"], plans, "w_down",
+                                       x.dtype, cfg.sparse_slice_k),
+        name="mlp.down", **kw)
     return nn.shard_act(y, "batch", "seq", "embed")
 
 

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import nn
 from repro.models.mlp import _activate
+from repro import sparse as sp
 
 
 def init_moe(key, cfg: ModelConfig):
@@ -38,8 +39,58 @@ def init_moe(key, cfg: ModelConfig):
     return p
 
 
-def moe_forward(params: Dict, x: jax.Array, cfg: ModelConfig
-                ) -> Tuple[jax.Array, jax.Array]:
+def _expert_ffn(params: Dict, xe: jax.Array, cfg: ModelConfig,
+                plans=None) -> jax.Array:
+    """Batched expert FFN over stacked weights (EP axis = experts).
+
+    With a non-dense ``cfg.sparse_mode`` the per-expert matmuls route
+    through :func:`repro.sparse.grouped_matmul`: the capacity buffers'
+    empty slots are genuine zero rows (dynamic sparsity born from the
+    gating itself), and relu/relu2 experts additionally carry the
+    post-activation bitmap into the down-projection (DESIGN.md §4.4).
+    """
+    dt = xe.dtype
+    if cfg.sparse_mode == "dense":
+        h = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(dt))
+        gate = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(dt)) \
+            if "w_gate" in params else None
+        h = _activate(h, gate, cfg.mlp_type)
+        h = nn.shard_act(h, "experts", "expert_cap", None)
+        return jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(dt))
+
+    kw = sp.dispatch.kwargs_from_config(cfg)
+    sk = sp.plan.effective_slice_k(xe.shape[-1], cfg.sparse_slice_k)
+    # weight mode never reads activation metadata, so skip the encode
+    x_in = sp.sparsify(xe, slice_k=sk) if cfg.sparse_mode == "dual" else xe
+    h, _ = sp.grouped_matmul(
+        x_in,
+        sp.weights.planned_or_array(params["w_up"], plans, "w_up", dt,
+                                    cfg.sparse_slice_k),
+        name="moe.up", **kw)
+    gate = None
+    if "w_gate" in params:
+        gate, _ = sp.grouped_matmul(
+            x_in,
+            sp.weights.planned_or_array(params["w_gate"], plans, "w_gate",
+                                        dt, cfg.sparse_slice_k),
+            name="moe.gate", **kw)
+    h = sp.activate(h, gate, cfg.mlp_type,
+                    slice_k=sp.plan.effective_slice_k(
+                        h.shape[-1], cfg.sparse_slice_k))
+    if isinstance(h, sp.SparseActivation):
+        h = h.map_values(
+            lambda v: nn.shard_act(v, "experts", "expert_cap", None))
+    else:
+        h = nn.shard_act(h, "experts", "expert_cap", None)
+    ye, _ = sp.grouped_matmul(
+        h, sp.weights.planned_or_array(params["w_down"], plans, "w_down",
+                                       dt, cfg.sparse_slice_k),
+        name="moe.down", **kw)
+    return ye
+
+
+def moe_forward(params: Dict, x: jax.Array, cfg: ModelConfig,
+                plans=None) -> Tuple[jax.Array, jax.Array]:
     """x: (B, S, D) → (y, aux_loss).  Dropping MoE with capacity factor.
 
     On a mesh, dispatch runs as explicit expert parallelism under
@@ -50,13 +101,17 @@ def moe_forward(params: Dict, x: jax.Array, cfg: ModelConfig
     f32 buffers and all-reduce them — hundreds of GiB/device at
     prefill_32k scale (EXPERIMENTS.md §Perf).  Without a mesh (unit
     tests), a single-device scatter/gather path runs instead.
+
+    ``plans`` carries cached weight-side slice activities (sparse
+    dispatch); the shard_map path currently ignores them and runs dense —
+    sharded sparse expert matmul is ROADMAP follow-on work.
     """
     if nn.current_mesh() is not None:
         return _moe_shard_map(params, x, cfg)
-    return _moe_local(params, x, cfg)
+    return _moe_local(params, x, cfg, plans=plans)
 
 
-def _moe_local(params: Dict, x: jax.Array, cfg: ModelConfig
+def _moe_local(params: Dict, x: jax.Array, cfg: ModelConfig, plans=None
                ) -> Tuple[jax.Array, jax.Array]:
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.n_experts_active
@@ -92,15 +147,7 @@ def _moe_local(params: Dict, x: jax.Array, cfg: ModelConfig
     for j in range(k):
         xe = xe.at[dest_e[:, j], dest_p[:, j]].set(xt, mode="drop")
     xe = nn.shard_act(xe[:e], "experts", "expert_cap", None)
-
-    # batched expert FFN over stacked weights (EP axis = experts)
-    h = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(x.dtype))
-    gate = jnp.einsum("ecd,edf->ecf", xe,
-                      params["w_gate"].astype(x.dtype)) \
-        if "w_gate" in params else None
-    h = _activate(h, gate, cfg.mlp_type)
-    h = nn.shard_act(h, "experts", "expert_cap", None)
-    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(x.dtype))
+    ye = _expert_ffn(params, xe, cfg, plans=plans)
     ye = nn.shard_act(ye, "experts", "expert_cap", None)
 
     # gather back with gate weights, again one k-choice at a time

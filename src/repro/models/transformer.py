@@ -16,6 +16,7 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import sparse
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models import attention as attn
 from repro.models import cache as kvc
@@ -110,6 +111,66 @@ def init_model(key, cfg: ModelConfig) -> Tuple[Dict, Dict]:
 
 
 # ---------------------------------------------------------------------------
+# cached weight-side sparse plans (DESIGN.md §4.3)
+# ---------------------------------------------------------------------------
+
+def plan_weight_activities(params: Dict, cfg: ModelConfig
+                           ) -> Optional[Dict]:
+    """Precompute weight-side slice activities for the whole model.
+
+    Weights are static at inference, so their half of the two-level
+    bitmap never changes: build it once at init/load and thread it
+    through the layer scan — per-step planning then reduces to the AND
+    with the activation bitmap.  Returns a plans pytree mirroring the
+    layer-stacked params layout ({"layers": {"posN": {"mlp": {...},
+    "attn": {...}}}}, plus a top-level "lm_head" entry), or None in
+    dense mode.  Covers every dispatch-routed projection: MLP and MoE
+    up/down, attention wq/wk/wv/wo (flattened to their dispatch 2-D
+    shapes), and the LM head (untied only — a tied head is the embed
+    transpose, recomputed per call).
+    """
+    if cfg.sparse_mode == "dense":
+        return None
+    sk = cfg.sparse_slice_k
+
+    def plan_of(w: jax.Array) -> jax.Array:
+        return sparse.weights.stacked_slice_activity(
+            w, sparse.plan.effective_slice_k(w.shape[-2], sk))
+
+    def attn_plans(a: Dict) -> Dict:
+        # flatten head dims to the 2-D shapes the projections dispatch as
+        out: Dict[str, Any] = {}
+        for key in ("wq", "wk", "wv"):          # (np, d, h, hd)
+            w = a[key]
+            out[key] = plan_of(w.reshape(*w.shape[:-2], -1))
+        wo = a["wo"]                             # (np, h, hd, d)
+        out["wo"] = plan_of(wo.reshape(wo.shape[0], -1, wo.shape[-1]))
+        return out
+
+    def layer_plans(stack: Dict) -> Dict:
+        out: Dict[str, Any] = {}
+        for blk in ("mlp", "moe"):
+            if blk in stack:
+                out[blk] = sparse.weights.plan_layer_weights(
+                    stack[blk], slice_k=sk)
+        for blk in ("attn", "cross_attn"):
+            if blk in stack:
+                out[blk] = attn_plans(stack[blk])
+        return out
+
+    plans: Dict[str, Any] = {
+        "layers": {pos: layer_plans(stack)
+                   for pos, stack in params["layers"].items()}}
+    if "enc_layers" in params:
+        plans["enc_layers"] = {pos: layer_plans(stack)
+                               for pos, stack in
+                               params["enc_layers"].items()}
+    if "lm_head" in params:
+        plans["lm_head"] = plan_of(params["lm_head"])
+    return plans
+
+
+# ---------------------------------------------------------------------------
 # caches
 # ---------------------------------------------------------------------------
 
@@ -149,8 +210,14 @@ def init_caches(cfg: ModelConfig, batch: int, capacity: int, *,
 # ---------------------------------------------------------------------------
 
 def _apply_layer(lp, x, cfg: ModelConfig, pos: int, *, positions, cache,
-                 memory, mode: str, chunk: int):
-    """One layer forward. memory = encoder output / image embeddings."""
+                 memory, mode: str, chunk: int, plans=None):
+    """One layer forward. memory = encoder output / image embeddings.
+
+    ``plans`` holds this layer's cached weight-side slice activities
+    (built once by :func:`plan_weight_activities`); with
+    ``cfg.sparse_mode != "dense"`` the MLP/MoE projections consume them
+    through the sparse dispatch layer.
+    """
     kind = cfg.layer_kind(pos)
     new_cache: Dict[str, Any] = {}
     aux = jnp.zeros((), jnp.float32)
@@ -174,7 +241,8 @@ def _apply_layer(lp, x, cfg: ModelConfig, pos: int, *, positions, cache,
             lp["attn"], h, cfg, positions=positions,
             cache=cache.get("kv") if cache else None,
             kv_source=memory if mode != "decode" else None,
-            is_cross=True, update_cache=mode == "prefill", chunk=chunk)
+            is_cross=True, update_cache=mode == "prefill", chunk=chunk,
+            plans=plans.get("attn") if plans else None)
         if kv2 is not None:
             new_cache["kv"] = kv2
         x = x + jnp.tanh(lp["gate_attn"]).astype(x.dtype) * y
@@ -182,7 +250,8 @@ def _apply_layer(lp, x, cfg: ModelConfig, pos: int, *, positions, cache,
         y, kv2 = attn.attention_forward(
             lp["attn"], h, cfg, positions=positions,
             cache=cache.get("kv") if cache else None,
-            causal=mode != "encode", chunk=chunk)
+            causal=mode != "encode", chunk=chunk,
+            plans=plans.get("attn") if plans else None)
         if kv2 is not None:
             new_cache["kv"] = kv2
         x = x + y
@@ -193,7 +262,8 @@ def _apply_layer(lp, x, cfg: ModelConfig, pos: int, *, positions, cache,
             lp["cross_attn"], h, cfg, positions=positions,
             cache=cache.get("cross_kv") if cache else None,
             kv_source=memory if mode != "decode" else None,
-            is_cross=True, update_cache=mode == "prefill", chunk=chunk)
+            is_cross=True, update_cache=mode == "prefill", chunk=chunk,
+            plans=plans.get("cross_attn") if plans else None)
         if ckv is not None:
             new_cache["cross_kv"] = ckv
         x = x + y
@@ -201,9 +271,13 @@ def _apply_layer(lp, x, cfg: ModelConfig, pos: int, *, positions, cache,
     if "norm2" in lp:
         h = nn.apply_norm(lp["norm2"], x, cfg.norm_eps)
         if "moe" in lp:
-            y, aux = moem.moe_forward(lp["moe"], h, cfg)
+            y, aux = moem.moe_forward(
+                lp["moe"], h, cfg,
+                plans=plans.get("moe") if plans else None)
         else:
-            y = mlpm.mlp_forward(lp["mlp"], h, cfg)
+            y = mlpm.mlp_forward(
+                lp["mlp"], h, cfg,
+                plans=plans.get("mlp") if plans else None)
         x = x + y
     return x, new_cache, aux
 
@@ -219,7 +293,7 @@ def _remat_policy(rc: Optional[RunConfig]):
 
 def _scan_layers(params, x, cfg: ModelConfig, *, positions, caches, memory,
                  mode: str, chunk: int, rc: Optional[RunConfig],
-                 encoder: bool = False):
+                 encoder: bool = False, plans=None):
     """Scan over periods; heterogeneous positions unrolled inside."""
     period = 1 if encoder else cfg.period
 
@@ -227,7 +301,7 @@ def _scan_layers(params, x, cfg: ModelConfig, *, positions, caches, memory,
     remat_layers = policy is not None and mode == "train" and period > 1
 
     def body(x, per):
-        lp, cache = per
+        lp, cache, plan = per
         # sequence-sharded residual stream (Megatron-SP): the remat-saved
         # per-period activation stack shards over the model axis; the
         # attention/MLP internals re-gather via their own constraints.
@@ -247,7 +321,8 @@ def _scan_layers(params, x, cfg: ModelConfig, *, positions, caches, memory,
                                        prevent_cse=False)
             x, nc, aux = layer(
                 lp[f"pos{pos}"], x,
-                cache=cache.get(f"pos{pos}") if cache else None)
+                cache=cache.get(f"pos{pos}") if cache else None,
+                plans=plan.get(f"pos{pos}") if plan else None)
             new_caches[f"pos{pos}"] = nc
             aux_total += aux
         return x, (new_caches, aux_total)
@@ -258,9 +333,12 @@ def _scan_layers(params, x, cfg: ModelConfig, *, positions, caches, memory,
 
     if caches is None:
         # empty cache dicts carry no arrays; scan length comes from params
-        xs = (params, {f"pos{p}": {} for p in range(period)})
+        caches_xs = {f"pos{p}": {} for p in range(period)}
     else:
-        xs = (params, caches)
+        caches_xs = caches
+    plans_xs = plans if plans is not None \
+        else {f"pos{p}": {} for p in range(period)}
+    xs = (params, caches_xs, plans_xs)
     if rc is not None and rc.scan_unroll:
         # python loop instead of lax.scan — used by the cost-model
         # validation tests (cost_analysis counts while bodies once)
@@ -284,11 +362,15 @@ def forward(
     caches: Optional[Dict] = None,
     positions: Optional[jax.Array] = None,
     rc: Optional[RunConfig] = None,
+    weight_plans: Optional[Dict] = None,
 ) -> ModelOutputs:
     """Full model forward.
 
     batch: {"tokens": (B,S)} (+ "frames"/"image_embeds" (B,M,D) stubs).
     decode: S==1, caches required, positions = current offset.
+    weight_plans: cached weight-side sparse plans from
+    :func:`plan_weight_activities` (build once at load; optional — without
+    them non-dense sparse modes re-plan the weight side on the fly).
     """
     tokens = batch["tokens"]
     b, s = tokens.shape
@@ -316,7 +398,8 @@ def forward(
             params["enc_layers"], enc_x, cfg, positions=jnp.arange(
                 memory.shape[1], dtype=jnp.int32),
             caches=None, memory=None, mode="train", chunk=chunk, rc=rc,
-            encoder=True)
+            encoder=True,
+            plans=weight_plans.get("enc_layers") if weight_plans else None)
         memory = nn.apply_norm(params["enc_final_norm"], enc_x,
                                cfg.norm_eps)
     if cfg.abs_positions:
@@ -326,13 +409,23 @@ def forward(
 
     x, new_caches, aux = _scan_layers(
         params["layers"], x, cfg, positions=positions, caches=caches,
-        memory=memory, mode=mode, chunk=chunk, rc=rc)
+        memory=memory, mode=mode, chunk=chunk, rc=rc,
+        plans=weight_plans.get("layers") if weight_plans else None)
 
     x = nn.apply_norm(params["final_norm"], x, cfg.norm_eps)
     head = params.get("lm_head")
     if head is None:
         head = params["embed"].T
-    logits = jnp.dot(x, head.astype(x.dtype))
+    if cfg.sparse_mode == "dense":
+        logits = jnp.dot(x, head.astype(x.dtype))
+    else:
+        head_plans = weight_plans if (weight_plans
+                                      and "lm_head" in params) else None
+        logits, _ = sparse.matmul(
+            x, sparse.weights.planned_or_array(
+                head, head_plans, "lm_head", x.dtype, cfg.sparse_slice_k),
+            name="lm_head",
+            **sparse.dispatch.kwargs_from_config(cfg))
     logits = nn.shard_act(logits, "batch", "seq", "vocab")
     return ModelOutputs(logits=logits,
                         caches=new_caches if caches is not None else None,

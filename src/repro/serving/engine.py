@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sparse
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models import transformer as tfm
 
@@ -50,6 +51,10 @@ class Engine:
             for _ in range(slots)]
         self.pos = [0] * slots
         self.last_tok = np.zeros((slots,), np.int32)
+        # static weight-side sparse plans: built exactly once per engine
+        # (weights don't change at inference), reused by every prefill
+        # and decode step (DESIGN.md §4.3).
+        self.weight_plans = tfm.plan_weight_activities(params, cfg)
 
         self._decode_one = jax.jit(self._decode_one_impl)
 
@@ -59,16 +64,43 @@ class Engine:
         out = tfm.forward(self.params, {"tokens": tokens}, self.cfg,
                           mode="prefill", caches=caches,
                           positions=jnp.arange(s, dtype=jnp.int32),
-                          rc=self.rc)
+                          rc=self.rc, weight_plans=self.weight_plans)
         nxt = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
         return out.caches, nxt
 
     def _decode_one_impl(self, tok, pos, caches):
         out = tfm.forward(self.params, {"tokens": tok[None, None]},
                           self.cfg, mode="decode", caches=caches,
-                          positions=pos[None], rc=self.rc)
+                          positions=pos[None], rc=self.rc,
+                          weight_plans=self.weight_plans)
         nxt = jnp.argmax(out.logits[0, 0], axis=-1).astype(jnp.int32)
         return out.caches, nxt
+
+    # -- sparsity accounting ------------------------------------------
+    def profile_sparsity(self, tokens) -> List[dict]:
+        """Per-layer MXU StepCounts for one forward over ``tokens``.
+
+        Runs a single eager, scan-unrolled prefill with the stats tape
+        active, so every dispatch-routed projection (QKV/out, MLP up/
+        down, MoE FFNs, LM head) reports its dense vs. scheduled step
+        counts.  Diagnostic path — the jitted serving steps are
+        untouched.  Returns ``[] `` in dense mode (nothing is routed).
+        """
+        if self.cfg.sparse_mode == "dense":
+            return []
+        toks = jnp.asarray(tokens, jnp.int32)
+        if toks.ndim == 1:
+            toks = toks[None]
+        rc = dataclasses.replace(self.rc or RunConfig(), scan_unroll=True)
+        with sparse.tape.collect() as entries:
+            tfm.forward(self.params, {"tokens": toks}, self.cfg,
+                        mode="prefill",
+                        caches=tfm.init_caches(self.cfg, toks.shape[0],
+                                               self.capacity),
+                        positions=jnp.arange(toks.shape[1],
+                                             dtype=jnp.int32),
+                        rc=rc, weight_plans=self.weight_plans)
+        return sparse.tape.summarize(entries)
 
     # -- control plane ------------------------------------------------
     def submit(self, req: Request):

@@ -1,0 +1,47 @@
+"""``repro.sparse`` — the dual-side sparsity dispatch layer.
+
+The single integration point between the paper's two-level bitmap SpGEMM
+and the model zoo (DESIGN.md §4):
+
+* :mod:`~repro.sparse.plan`       — the unified planner (slice activity →
+  block reduction → front-pack), shared by the Pallas kernel wrappers and
+  the step-count accounting.
+* :mod:`~repro.sparse.activation` — :class:`SparseActivation`, the
+  bitmap-carrying activation pytree produced once at activation time.
+* :mod:`~repro.sparse.weights`    — :class:`PlannedWeight`, the cached
+  static weight-side plan built once at init/load.
+* :mod:`~repro.sparse.dispatch`   — :func:`matmul` / :func:`grouped_matmul`
+  / :func:`project`, the batched mode-selectable entry points.
+* :mod:`~repro.sparse.tape`       — per-layer StepCounts collection for
+  serving and benchmarks.
+"""
+from repro.sparse import tape  # noqa: F401
+from repro.sparse.activation import (  # noqa: F401
+    SparseActivation,
+    activate,
+    relu,
+    relu2,
+    sparsify,
+)
+from repro.sparse.dispatch import (  # noqa: F401
+    MODES,
+    grouped_matmul,
+    matmul,
+    project,
+)
+from repro.sparse.plan import (  # noqa: F401
+    SLICE_K,
+    block_reduce_lhs,
+    block_reduce_rhs,
+    counts_to_steps,
+    front_pack,
+    plan_from_activity,
+    plan_operands,
+    slice_activity_lhs,
+    slice_activity_rhs,
+)
+from repro.sparse.weights import (  # noqa: F401
+    PlannedWeight,
+    as_planned,
+    plan_weight,
+)

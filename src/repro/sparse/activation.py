@@ -1,0 +1,139 @@
+"""Bitmap-carrying activations (DESIGN.md §4.2).
+
+The activation functions that create genuine zeros (ReLU, squared-ReLU,
+MoE capacity-slot padding) are the *only* places where the dynamic side of
+dual-side sparsity is born.  :class:`SparseActivation` captures the
+non-zero structure right there — a packed element bitmap plus per-row
+k-slice activity — so the next projection's planner consumes cached
+metadata instead of re-deriving ``a != 0`` from the value tensor (which
+the two pre-refactor planners both did, on every matmul).  The planner's
+fast path reads only ``slice_act``; the packed ``bitmap`` is the exact
+element mask, kept for re-planning at a different slice granularity and
+for future element-granular consumers (kernel-side K-condensation,
+DESIGN.md §8).
+
+The pytree is shape-polymorphic in its leading axes: ``(B, S, F)``
+activations flatten to ``(B·S, F)`` at dispatch with the bitmap and
+slice-activity flattening alongside, so batched model code never
+hand-reshapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+from repro.sparse import plan as pln
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SparseActivation:
+    """An activation tensor plus its sparsity metadata.
+
+    values    : (..., K) the activation values themselves.
+    bitmap    : (..., ceil(K/32)) packed uint32 element bitmap over the
+                trailing (contraction) axis — the paper's encode output,
+                produced once per activation.
+    slice_act : (..., S) bool per-row k-slice activity at ``slice_k``
+                granularity — the level-1 planning input.
+    slice_k   : static slice granularity of ``slice_act``.
+    """
+    values: jax.Array
+    bitmap: jax.Array
+    slice_act: jax.Array
+    slice_k: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.values.shape
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def map_values(self, fn: Callable[[jax.Array], jax.Array]
+                   ) -> "SparseActivation":
+        """Apply a sparsity-preserving transform (sharding constraint,
+        dtype cast, reshape of leading dims) to the values."""
+        return dataclasses.replace(self, values=fn(self.values))
+
+    def flatten_leading(self) -> "SparseActivation":
+        """Collapse all leading axes: (..., K) → (T, K)."""
+        return SparseActivation(
+            values=self.values.reshape(-1, self.values.shape[-1]),
+            bitmap=self.bitmap.reshape(-1, self.bitmap.shape[-1]),
+            slice_act=self.slice_act.reshape(-1, self.slice_act.shape[-1]),
+            slice_k=self.slice_k)
+
+    def row_slice_activity(self, slice_k: int) -> jax.Array:
+        """Per-row activity at an arbitrary slice granularity.
+
+        Served from the cached ``slice_act`` when granularities match
+        (the fast path), otherwise re-derived from the packed bitmap —
+        never from the values, so the encode happens exactly once.
+        """
+        if slice_k == self.slice_k:
+            return self.slice_act
+        k = self.values.shape[-1]
+        mask = bm.unpack_bits(self.bitmap, axis=-1)[..., :k]
+        return pln.slice_activity_lhs(mask, slice_k)
+
+
+def _pack_mask(mask: jax.Array) -> jax.Array:
+    """Pack a (..., K) bool mask along K, padding to a word multiple."""
+    k = mask.shape[-1]
+    pad = (-k) % bm.WORD
+    if pad:
+        mask = jnp.pad(mask, [(0, 0)] * (mask.ndim - 1) + [(0, pad)])
+    return bm.pack_bits(mask, axis=-1)
+
+
+def sparsify(x: jax.Array, mask: Optional[jax.Array] = None,
+             slice_k: int = pln.SLICE_K) -> SparseActivation:
+    """Wrap a tensor whose zeros are already in place.
+
+    ``mask`` lets callers that *know* the zero structure (e.g. ReLU
+    gating) skip the ``x != 0`` compare.
+    """
+    if mask is None:
+        mask = x != 0
+    return SparseActivation(
+        values=x,
+        bitmap=_pack_mask(mask),
+        slice_act=pln.slice_activity_lhs(mask, slice_k),
+        slice_k=slice_k)
+
+
+def relu(x: jax.Array, slice_k: int = pln.SLICE_K) -> SparseActivation:
+    """ReLU with the sparsity bitmap derived from the gating compare."""
+    return sparsify(jnp.maximum(x, 0.0), mask=x > 0, slice_k=slice_k)
+
+
+def relu2(x: jax.Array, slice_k: int = pln.SLICE_K) -> SparseActivation:
+    """Squared-ReLU (nemotron): same zero structure as ReLU."""
+    r = jnp.maximum(x, 0.0)
+    return sparsify(r * r, mask=x > 0, slice_k=slice_k)
+
+
+def activate(h: jax.Array, gate: Optional[jax.Array], kind: str,
+             slice_k: int = pln.SLICE_K):
+    """Sparsity-aware mirror of ``repro.models.mlp._activate``.
+
+    relu / relu2 produce genuine zeros → returns a
+    :class:`SparseActivation`; swiglu / gelu are dense almost surely →
+    returns a plain array (the dispatch layer treats it as an unplanned
+    operand).
+    """
+    if kind == "relu":
+        return relu(h, slice_k)
+    if kind == "relu2":
+        return relu2(h, slice_k)
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * h
+    if kind == "gelu":
+        return jax.nn.gelu(h)
+    raise ValueError(kind)

@@ -1,0 +1,281 @@
+"""The single dispatch point for sparse matmuls (DESIGN.md §4.4).
+
+Every projection in the model stack — MLP up/down, attention QKV/output,
+MoE expert FFNs, the LM head, and ``DualSparseLinear`` — routes through
+:func:`matmul` (2-D weights) or :func:`grouped_matmul` (stacked per-expert
+weights).  The dispatch
+
+* accepts any leading batch shape ``(..., K)`` and flattens it for the
+  kernel (vmap-free: the flattened matmul *is* the batched matmul);
+* accepts a :class:`~repro.sparse.activation.SparseActivation` on the
+  activation side and a :class:`~repro.sparse.weights.PlannedWeight` on
+  the weight side, in which case per-step planning is the cached-metadata
+  AND of :func:`repro.sparse.plan.plan_from_activity`;
+* falls back to on-the-fly planning from dense operands (bit-identical —
+  see :func:`repro.sparse.plan.plan_operands`) when metadata is absent;
+* records per-call :class:`~repro.core.stats.StepCounts` to the active
+  :mod:`repro.sparse.tape` so serving/benchmarks can report per-layer
+  skipped work.
+
+Modes mirror ``DualSparseLinear``:
+
+* ``dense``  — plain matmul, dense schedule accounting.
+* ``weight`` — static weight-side skips only (activation assumed dense).
+* ``dual``   — weight AND activation skips; with ``use_kernel`` the
+  Pallas block-skip kernel executes the condensed schedule.
+
+All modes compute exactly ``x @ w`` — sparsity changes the schedule, not
+the math.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stats
+from repro.sparse import plan as pln
+from repro.sparse import tape
+from repro.sparse.activation import SparseActivation
+from repro.sparse.weights import PlannedWeight
+
+Operand = Union[jax.Array, SparseActivation]
+Weight = Union[jax.Array, PlannedWeight]
+
+MODES = ("dense", "weight", "dual")
+
+
+def kwargs_from_config(cfg) -> dict:
+    """Dispatch kwargs from a ``ModelConfig``'s sparse_* fields."""
+    return dict(mode=cfg.sparse_mode, block_m=cfg.sparse_block_m,
+                block_n=cfg.sparse_block_n, slice_k=cfg.sparse_slice_k,
+                use_kernel=cfg.sparse_use_kernel)
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return bool(interpret)
+
+
+def _values(x: Operand) -> jax.Array:
+    return x.values if isinstance(x, SparseActivation) else x
+
+
+def _weight_array(w: Weight) -> jax.Array:
+    return w.w if isinstance(w, PlannedWeight) else w
+
+
+def _lhs_activity(x: Operand, x2: jax.Array, block_m: int, slice_k: int,
+                  mode: str) -> jax.Array:
+    """(Mt, S) block-row slice activity of the activation side."""
+    mt = pln._cdiv(x2.shape[0], block_m)
+    s = pln._cdiv(x2.shape[1], slice_k)
+    if mode == "weight":  # activation treated as dense
+        return jnp.ones((mt, s), dtype=bool)
+    if isinstance(x, SparseActivation):
+        rows = x.flatten_leading().row_slice_activity(slice_k)
+    else:
+        rows = pln.slice_activity_lhs(x2, slice_k)
+    return pln.block_reduce_lhs(rows, block_m)
+
+
+def _rhs_activity(w: Weight, block_n: int, slice_k: int) -> jax.Array:
+    """(S, Nt) block-col slice activity of the weight side."""
+    if isinstance(w, PlannedWeight):
+        cols = w.col_slice_activity(slice_k)
+    else:
+        cols = pln.slice_activity_rhs(w, slice_k)
+    return pln.block_reduce_rhs(cols, block_n)
+
+
+def matmul(
+    x: Operand,
+    w: Weight,
+    *,
+    mode: str = "dense",
+    block_m: int = 128,
+    block_n: int = 128,
+    slice_k: int = pln.SLICE_K,
+    use_kernel: bool = False,
+    interpret: Optional[bool] = None,
+    collect_stats: bool = False,
+    name: str = "matmul",
+) -> Tuple[jax.Array, Optional[stats.StepCounts]]:
+    """y = x @ w with mode-selectable dual-side sparse scheduling.
+
+    x: (..., K) array or SparseActivation; w: (K, N) array or
+    PlannedWeight.  Returns (y (..., N), StepCounts or None).  Stats are
+    computed when ``collect_stats`` or a stats tape is active.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    w_arr = _weight_array(w)
+    if w_arr.ndim != 2:
+        raise ValueError(f"matmul expects 2-D weights, got {w_arr.shape}; "
+                         "use grouped_matmul for stacked experts")
+    xv = _values(x)
+    lead = xv.shape[:-1]
+    k = xv.shape[-1]
+    x2 = xv.reshape(-1, k)
+    t = x2.shape[0]
+    n = w_arr.shape[1]
+    w_arr = w_arr.astype(xv.dtype)
+
+    interp = _auto_interpret(interpret)
+    block_m, block_n, slice_k = pln.clamp_geometry(
+        t, n, k, block_m, block_n, slice_k, interp)
+    mt, nt, s = (pln._cdiv(t, block_m), pln._cdiv(n, block_n),
+                 pln._cdiv(k, slice_k))
+
+    want_stats = collect_stats or tape.active()
+    steps = None
+    if mode == "dense":
+        y = x2 @ w_arr
+        if want_stats:
+            dense = jnp.asarray(mt * nt * s)
+            steps = stats.StepCounts(dense=dense, sparse=dense,
+                                     tiles_skipped=jnp.asarray(0))
+    else:
+        # plan only when something consumes it: the kernel's schedule or
+        # the stats accounting (under jit XLA would DCE a dead plan, but
+        # eager callers would pay the argsort for nothing)
+        if use_kernel or want_stats:
+            col = _lhs_activity(x, x2, block_m, slice_k, mode)
+            row = _rhs_activity(w, block_n, slice_k)
+            if use_kernel:
+                ks, counts = pln.plan_from_activity(col, row)
+            else:  # stats only: skip the schedule's argsort
+                counts = pln.counts_from_activity(col, row)
+            if want_stats:
+                steps = pln.counts_to_steps(counts, s)
+        if use_kernel:
+            from repro.kernels import bitmap_spgemm as bsk
+            y = bsk.bitmap_spgemm_planned(
+                x2, w_arr, ks, counts, block_m=block_m, block_n=block_n,
+                slice_k=slice_k, interpret=interp)
+        else:
+            y = x2 @ w_arr
+    if steps is not None:
+        tape.record(name, steps)
+    return y.reshape(*lead, n), steps
+
+
+def grouped_matmul(
+    x: Operand,
+    w: Weight,
+    *,
+    mode: str = "dense",
+    block_m: int = 128,
+    block_n: int = 128,
+    slice_k: int = pln.SLICE_K,
+    use_kernel: bool = False,      # accepted for signature parity; the
+    interpret: Optional[bool] = None,  # grouped path always runs via XLA
+    collect_stats: bool = False,
+    name: str = "grouped_matmul",
+) -> Tuple[jax.Array, Optional[stats.StepCounts]]:
+    """Batched-weights matmul: x (E, C, K) @ w (E, K, N) → (E, C, N).
+
+    The MoE expert-FFN pattern: each expert has its own weight matrix and
+    its own capacity buffer (whose empty slots are genuine zero rows —
+    dynamic sparsity from the gating itself).  Compute runs as one einsum;
+    scheduling stats come from a vmapped plan over experts.  The Pallas
+    kernel is 2-D, so this path always computes via XLA — per-expert
+    kernel dispatch is listed as follow-on work in ROADMAP.md.
+    """
+    del use_kernel, interpret
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    w_arr = _weight_array(w)
+    xv = _values(x)
+    if xv.ndim != 3 or w_arr.ndim != 3:
+        raise ValueError(f"grouped_matmul expects (E,C,K)×(E,K,N), got "
+                         f"{xv.shape} × {w_arr.shape}")
+    e, c, k = xv.shape
+    n = w_arr.shape[-1]
+    w_arr = w_arr.astype(xv.dtype)
+
+    steps = None
+    if mode != "dense" and (collect_stats or tape.active()):
+        block_m, block_n, slice_k = pln.clamp_geometry(
+            c, n, k, block_m, block_n, slice_k, True)
+        s = pln._cdiv(k, slice_k)
+        if mode == "weight":
+            rows = jnp.ones((e, pln._cdiv(c, block_m), s), dtype=bool)
+        elif isinstance(x, SparseActivation):
+            rows = jax.vmap(
+                lambda r: pln.block_reduce_lhs(r, block_m))(
+                    x.row_slice_activity(slice_k))
+        else:
+            rows = jax.vmap(lambda xi: pln.block_reduce_lhs(
+                pln.slice_activity_lhs(xi, slice_k), block_m))(xv)
+        if isinstance(w, PlannedWeight):
+            cols = jax.vmap(
+                lambda a: pln.block_reduce_rhs(a, block_n))(
+                    w.col_slice_activity(slice_k))
+        else:
+            cols = jax.vmap(lambda wi: pln.block_reduce_rhs(
+                pln.slice_activity_rhs(wi, slice_k), block_n))(w_arr)
+        counts = jax.vmap(pln.counts_from_activity)(rows, cols)
+        per = jax.vmap(lambda cnt: pln.counts_to_steps(cnt, s))(counts)
+        steps = stats.StepCounts(dense=jnp.sum(per.dense),
+                                 sparse=jnp.sum(per.sparse),
+                                 tiles_skipped=jnp.sum(per.tiles_skipped))
+        tape.record(name, steps)
+    elif mode == "dense" and (collect_stats or tape.active()):
+        block_m, block_n, slice_k = pln.clamp_geometry(
+            c, n, k, block_m, block_n, slice_k, True)
+        dense = jnp.asarray(
+            e * pln._cdiv(c, block_m) * pln._cdiv(n, block_n)
+            * pln._cdiv(k, slice_k))
+        steps = stats.StepCounts(dense=dense, sparse=dense,
+                                 tiles_skipped=jnp.asarray(0))
+        tape.record(name, steps)
+
+    y = jnp.einsum("eck,ekn->ecn", xv, w_arr)
+    return y, steps
+
+
+def project(
+    x: Operand,
+    w: Weight,
+    *,
+    n_contract: int = 1,
+    plan_act: Optional[jax.Array] = None,
+    **kwargs,
+) -> Tuple[jax.Array, Optional[stats.StepCounts]]:
+    """Tensor projection through :func:`matmul`.
+
+    Contracts the last ``n_contract`` axes of ``x`` with the first
+    ``n_contract`` axes of ``w`` and restores the remaining weight axes on
+    the output — the attention einsums ``bsd,dhk->bshk`` (n_contract=1)
+    and ``bshk,hkd->bsd`` (n_contract=2) without hand-reshaping at the
+    call sites.  ``plan_act`` is an optional cached weight-side slice
+    activity over the *flattened* contraction axis (shape (S, prod(out
+    dims))); without it the weight side is re-reduced on the fly.
+    """
+    w_arr = _weight_array(w)
+    k_dims = w_arr.shape[:n_contract]
+    out_dims = w_arr.shape[n_contract:]
+    kflat = 1
+    for d in k_dims:
+        kflat *= d
+    if isinstance(x, SparseActivation):
+        if n_contract != 1:
+            raise ValueError("SparseActivation carries metadata over one "
+                             "contraction axis only")
+        x_in: Operand = x
+    else:
+        x_in = x.reshape(*x.shape[:x.ndim - n_contract], kflat)
+    if isinstance(w, PlannedWeight) and n_contract == 1 and not out_dims[1:]:
+        w_in: Weight = w
+    else:
+        w_in = w_arr.reshape(kflat, -1)
+        if plan_act is not None:
+            w_in = PlannedWeight(
+                w=w_in, slice_act=plan_act,
+                slice_k=pln.effective_slice_k(
+                    kflat, kwargs.get("slice_k", pln.SLICE_K)))
+    y, steps = matmul(x_in, w_in, **kwargs)
+    return y.reshape(*y.shape[:-1], *out_dims), steps

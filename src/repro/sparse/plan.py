@@ -1,0 +1,193 @@
+"""The unified two-level bitmap planner (DESIGN.md §4.1).
+
+Every sparse matmul in the repo schedules work from the same three-step
+recipe:
+
+1. *slice activity* — reduce each operand's non-zero mask to k-slice
+   granularity (``slice_k`` contraction positions per slice, the MXU-depth
+   analogue of the paper's OHMMA step);
+2. *block reduction* — reduce slice activity to output-block granularity
+   (``block_m`` rows of A / ``block_n`` cols of B per block);
+3. *front-pack* — for each output block, stably push the indices of
+   active slices (A-side AND B-side, the paper's condensing bitmap AND,
+   Fig. 4c) to the front of the schedule, repeating the last active index
+   in the inactive tail so that skipped grid steps re-map to an
+   already-resident block and cost no DMA.
+
+Historically ``kernels/bitmap_spgemm.plan_slices`` and
+``core/spgemm.plan_blocks`` each implemented their own copy of this (and
+``plan_blocks`` padded the tail with whatever ``argsort`` left behind,
+causing spurious DMA on skipped steps).  Both now delegate here.
+
+The functions are pure jnp on the last axes, so they are vmap-safe and
+jit-friendly; the activation side can be cached in a
+:class:`repro.sparse.activation.SparseActivation` and the weight side in a
+:class:`repro.sparse.weights.PlannedWeight`, reducing per-step planning to
+the AND in :func:`plan_from_activity`.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import stats
+
+SLICE_K = 128  # MXU-native contraction depth = unit of sparsity skip
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+# ---------------------------------------------------------------------------
+# step 1: slice activity
+# ---------------------------------------------------------------------------
+
+def slice_activity_lhs(a: jax.Array, slice_k: int) -> jax.Array:
+    """Per-row k-slice activity of a left operand.
+
+    a: (..., K) values (or bool mask).  Returns (..., S) bool with
+    S = ceil(K / slice_k): slice s is active for a row iff the row has a
+    non-zero in columns [s*slice_k, (s+1)*slice_k).
+    """
+    *lead, k = a.shape
+    s = _cdiv(k, slice_k)
+    mask = jnp.pad(a != 0, [(0, 0)] * len(lead) + [(0, s * slice_k - k)])
+    return jnp.any(mask.reshape(*lead, s, slice_k), axis=-1)
+
+
+def slice_activity_rhs(b: jax.Array, slice_k: int) -> jax.Array:
+    """Per-column k-slice activity of a right operand.
+
+    b: (K, N) values (or bool mask).  Returns (S, N) bool: slice s is
+    active for a column iff the column has a non-zero in rows
+    [s*slice_k, (s+1)*slice_k).
+    """
+    k, n = b.shape
+    s = _cdiv(k, slice_k)
+    mask = jnp.pad(b != 0, ((0, s * slice_k - k), (0, 0)))
+    return jnp.any(mask.reshape(s, slice_k, n), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# step 2: block reduction
+# ---------------------------------------------------------------------------
+
+def block_reduce_lhs(row_act: jax.Array, block_m: int) -> jax.Array:
+    """(M, S) per-row activity → (Mt, S) per-block-row activity."""
+    m, s = row_act.shape
+    mt = _cdiv(m, block_m)
+    padded = jnp.pad(row_act, ((0, mt * block_m - m), (0, 0)))
+    return jnp.any(padded.reshape(mt, block_m, s), axis=1)
+
+
+def block_reduce_rhs(col_act: jax.Array, block_n: int) -> jax.Array:
+    """(S, N) per-column activity → (S, Nt) per-block-col activity."""
+    s, n = col_act.shape
+    nt = _cdiv(n, block_n)
+    padded = jnp.pad(col_act, ((0, 0), (0, nt * block_n - n)))
+    return jnp.any(padded.reshape(s, nt, block_n), axis=2)
+
+
+# ---------------------------------------------------------------------------
+# step 3: front-pack ("condensing")
+# ---------------------------------------------------------------------------
+
+def front_pack(act: jax.Array, cap: Optional[int] = None
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Stable-front-pack active indices along the last axis.
+
+    act: (..., S) bool.  Returns (indices (..., cap), counts (...)): the
+    active indices of each fiber pushed to the front in ascending order;
+    the inactive tail repeats the last active index (all-zeros for fibers
+    with no active entry) so skipped grid steps re-map to an
+    already-resident block and trigger no DMA.
+    """
+    s = act.shape[-1]
+    counts = jnp.sum(act, axis=-1, dtype=jnp.int32)
+    order = jnp.argsort(~act, axis=-1, stable=True).astype(jnp.int32)
+    arange = jnp.arange(s, dtype=jnp.int32)
+    last = jnp.maximum(counts - 1, 0)[..., None]
+    idx = jnp.where(arange < counts[..., None],
+                    order, jnp.take_along_axis(order, last, axis=-1))
+    if cap is not None:
+        idx = idx[..., :cap]
+    return idx, counts
+
+
+def plan_from_activity(col: jax.Array, row: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Combine the two sides' block-level activity into a schedule.
+
+    col: (Mt, S) A-side block-row slice activity;
+    row: (S, Nt) B-side block-col slice activity.
+    Returns (ks (Mt, Nt, S), counts (Mt, Nt)) for
+    :func:`repro.kernels.bitmap_spgemm.bitmap_spgemm_planned`.  This AND +
+    front-pack is the *entire* per-step planning cost when both sides'
+    activities are cached.
+    """
+    act = col[:, None, :] & row.T[None, :, :]   # (Mt, Nt, S)
+    return front_pack(act)
+
+
+def counts_from_activity(col: jax.Array, row: jax.Array) -> jax.Array:
+    """Per-block active-slice counts without building the schedule.
+
+    Same AND as :func:`plan_from_activity` but a plain sum — for
+    stats-only callers that never feed a kernel, sparing the
+    front-pack's argsort/gather.
+    """
+    act = col[:, None, :] & row.T[None, :, :]   # (Mt, Nt, S)
+    return jnp.sum(act, axis=-1, dtype=jnp.int32)
+
+
+def plan_operands(a: jax.Array, b: jax.Array, block_m: int, block_n: int,
+                  slice_k: int = SLICE_K) -> Tuple[jax.Array, jax.Array]:
+    """Plan directly from dense 2-D operands (on-the-fly path).
+
+    Exactly equivalent to planning from cached
+    ``SparseActivation``/``PlannedWeight`` activities at the same
+    geometry — the caches are bit-identical reformulations, not
+    approximations.
+    """
+    col = block_reduce_lhs(slice_activity_lhs(a, slice_k), block_m)
+    row = block_reduce_rhs(slice_activity_rhs(b, slice_k), block_n)
+    return plan_from_activity(col, row)
+
+
+# ---------------------------------------------------------------------------
+# step-count accounting (shared by all dispatch modes)
+# ---------------------------------------------------------------------------
+
+def counts_to_steps(counts: jax.Array, n_slices: int) -> stats.StepCounts:
+    """Schedule counts → the repo's machine-independent StepCounts.
+
+    counts: (Mt, Nt) active slices per output block; dense work is
+    Mt · Nt · S slice-matmuls.
+    """
+    mt, nt = counts.shape
+    return stats.StepCounts(
+        dense=jnp.asarray(mt * nt * n_slices),
+        sparse=jnp.sum(counts),
+        tiles_skipped=jnp.sum(counts == 0))
+
+
+def effective_slice_k(k: int, slice_k: int = SLICE_K) -> int:
+    """The slice granularity the dispatch will actually use for a
+    contraction of depth ``k`` (cached plans must be built at this
+    granularity to hit the fast path)."""
+    return min(slice_k, max(8, k))
+
+
+def clamp_geometry(m: int, n: int, k: int, block_m: int, block_n: int,
+                   slice_k: int, interpret: bool) -> Tuple[int, int, int]:
+    """Clamp block sizes for small problems, keeping lane alignment.
+
+    Mirrors the clamping inside ``bitmap_spgemm`` so externally built
+    plans agree with the kernel's grid.
+    """
+    block_m = min(block_m, max(8, m))
+    block_n = min(block_n, max(8 if interpret else 128, n))
+    return block_m, block_n, effective_slice_k(k, slice_k)

@@ -1,0 +1,61 @@
+"""Per-layer StepCounts collection (DESIGN.md §4.5).
+
+A tiny tape so the serving engine and the benchmarks can see which layers
+skipped how much work without threading stats through every model return
+value.  The dispatch layer records one entry per routed matmul while a
+tape is active; with no tape installed recording is a no-op, so the hot
+path pays a single ``None`` check.
+
+The tape appends Python-side, so activate it around *eager* execution
+(e.g. ``RunConfig(scan_unroll=True)`` forwards, or un-jitted benchmark
+blocks).  Inside ``jit``/``scan`` traces the recorded values would be
+tracers — the engine's profile path therefore runs unrolled and eager.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import List, Optional, Tuple
+
+from repro.core import stats
+
+Entry = Tuple[str, stats.StepCounts]
+
+_TAPE: contextvars.ContextVar[Optional[List[Entry]]] = \
+    contextvars.ContextVar("sparse_stats_tape", default=None)
+
+
+@contextlib.contextmanager
+def collect():
+    """Install a fresh tape; yields the list entries are appended to."""
+    entries: List[Entry] = []
+    token = _TAPE.set(entries)
+    try:
+        yield entries
+    finally:
+        _TAPE.reset(token)
+
+
+def active() -> bool:
+    return _TAPE.get() is not None
+
+
+def record(name: str, steps: stats.StepCounts) -> None:
+    entries = _TAPE.get()
+    if entries is not None:
+        entries.append((name, steps))
+
+
+def summarize(entries: List[Entry]) -> List[dict]:
+    """Concrete per-entry dicts (name, dense, sparse, speedup)."""
+    out = []
+    for name, sc in entries:
+        dense, sparse = int(sc.dense), int(sc.sparse)
+        out.append({
+            "name": name,
+            "dense_steps": dense,
+            "sparse_steps": sparse,
+            "tiles_skipped": int(sc.tiles_skipped),
+            "speedup": dense / max(sparse, 1),
+        })
+    return out

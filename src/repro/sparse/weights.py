@@ -1,0 +1,132 @@
+"""Cached weight-side plans (DESIGN.md §4.3).
+
+At inference the weight matrix (and its pruning mask) is static, so its
+half of the two-level bitmap — per-column k-slice activity — never
+changes.  :class:`PlannedWeight` computes it once, at init/load time; each
+forward step then only ANDs it with the activation-side bitmap
+(:func:`repro.sparse.plan.plan_from_activity`), which is the whole point
+of reusing static weight metadata across steps (cf. Griffin,
+arXiv:2107.12922).
+
+``PLAN_BUILDS`` counts constructions so tests can assert the plan is built
+exactly once per layer, not per forward call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse import plan as pln
+
+# Python-level construction counter: plan_weight() is expected to run at
+# init/load (eagerly or once per trace), never inside the per-step path.
+PLAN_BUILDS = 0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PlannedWeight:
+    """A (masked) weight matrix plus its precomputed slice activity.
+
+    w         : (K, N) weights with the pruning mask already applied, or
+                (E, K, N) stacked per-expert weights.
+    slice_act : (S, N) bool per-column k-slice activity (or (E, S, N)).
+    slice_k   : static granularity of ``slice_act``.
+    """
+    w: jax.Array
+    slice_act: jax.Array
+    slice_k: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def shape(self):
+        return self.w.shape
+
+    @property
+    def dtype(self):
+        return self.w.dtype
+
+    def col_slice_activity(self, slice_k: int) -> jax.Array:
+        """(S', N) activity at an arbitrary granularity (cached fast path
+        when granularities match)."""
+        if slice_k == self.slice_k:
+            return self.slice_act
+        if self.w.ndim == 2:
+            return pln.slice_activity_rhs(self.w, slice_k)
+        return jax.vmap(lambda w: pln.slice_activity_rhs(w, slice_k))(self.w)
+
+
+def plan_weight(w: jax.Array, mask: Optional[jax.Array] = None,
+                slice_k: int = pln.SLICE_K) -> PlannedWeight:
+    """Build the static weight-side plan (call once per layer).
+
+    w: (K, N) or (E, K, N); mask (same shape, optional) is the pruning
+    mask — applied to the stored values so downstream compute never
+    re-multiplies it.
+    """
+    global PLAN_BUILDS
+    PLAN_BUILDS += 1
+    if mask is not None:
+        w = w * mask.astype(w.dtype)
+    if w.ndim == 2:
+        act = pln.slice_activity_rhs(w, slice_k)
+    elif w.ndim == 3:
+        act = jax.vmap(lambda wi: pln.slice_activity_rhs(wi, slice_k))(w)
+    else:
+        raise ValueError(f"plan_weight expects 2-D or 3-D, got {w.shape}")
+    return PlannedWeight(w=w, slice_act=act, slice_k=slice_k)
+
+
+def stacked_slice_activity(w: jax.Array, slice_k: int = pln.SLICE_K
+                           ) -> jax.Array:
+    """Weight-side slice activity for arbitrarily stacked weights.
+
+    w: (..., K, N) — e.g. layer-stacked (L, K, N) or layer-and-expert
+    stacked (L, E, K, N).  Returns (..., S, N) bool.  Counts as one plan
+    build (the whole stack is planned in one shot at init/load).
+    """
+    global PLAN_BUILDS
+    PLAN_BUILDS += 1
+    fn = functools.partial(pln.slice_activity_rhs, slice_k=slice_k)
+    for _ in range(w.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(w)
+
+
+def as_planned(w, slice_k: int = pln.SLICE_K) -> PlannedWeight:
+    """Coerce an array to a PlannedWeight; pass PlannedWeights through."""
+    if isinstance(w, PlannedWeight):
+        return w
+    return plan_weight(jnp.asarray(w), slice_k=slice_k)
+
+
+def plan_layer_weights(params, keys=("w_up", "w_down", "w_gate"),
+                       slice_k: int = pln.SLICE_K) -> dict:
+    """Build the plans dict for one layer's params (the glue every
+    caller of ``mlp_forward(..., plans=...)`` needs): slice activities at
+    the effective granularity the dispatch will clamp to, keyed like the
+    params, so :func:`planned_or_array` hits the cached fast path."""
+    return {
+        k: stacked_slice_activity(
+            params[k], pln.effective_slice_k(params[k].shape[-2], slice_k))
+        for k in keys if k in params}
+
+
+def planned_or_array(w: jax.Array, plans, key: str, dtype, slice_k: int):
+    """Attach a cached slice activity (``plans[key]``) to a weight.
+
+    The shared model-side glue: casts ``w`` to the activation dtype
+    (casting never changes zero structure) and, when the plans pytree
+    carries ``key``, wraps it as a :class:`PlannedWeight` at the
+    effective granularity the dispatch will clamp to — otherwise returns
+    the bare array and the dispatch re-plans on the fly.
+    """
+    w = w.astype(dtype)
+    if plans is not None and key in plans:
+        return PlannedWeight(
+            w=w, slice_act=plans[key],
+            slice_k=pln.effective_slice_k(w.shape[-2], slice_k))
+    return w

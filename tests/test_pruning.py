@@ -1,6 +1,9 @@
 """Pruning mask invariants (weight-side sparsity producers)."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import pruning

@@ -1,0 +1,280 @@
+"""The repro.sparse dispatch layer: planner unification, bitmap reuse,
+batched dispatch, cached weight plans, and model-level mode equivalence."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import sparse as sp
+from repro.configs import smoke_config
+from repro.core import pruning
+from repro.core import spgemm as sg
+from repro.kernels.bitmap_spgemm import plan_slices
+from repro.models import mlp as mlpm
+from repro.models import nn
+from tests.conftest import sparse_matrix
+
+
+# ---------------------------------------------------------------------------
+# planner unification
+# ---------------------------------------------------------------------------
+
+def test_plan_blocks_tail_repeats_last_index():
+    """Regression: the inactive tail must repeat the last active index
+    (not argsort leftovers) so skipped grid steps cost no DMA."""
+    a_tiles = jnp.asarray([[True, False, True, False]])   # (Mt=1, Kt=4)
+    b_tiles = jnp.ones((4, 1), dtype=bool)                # (Kt=4, Nt=1)
+    idx, counts = sg.plan_blocks(a_tiles, b_tiles)
+    assert int(counts[0, 0]) == 2
+    np.testing.assert_array_equal(np.asarray(idx[0, 0]), [0, 2, 2, 2])
+    # a block with no active entries maps to index 0 throughout
+    idx0, counts0 = sg.plan_blocks(jnp.zeros((1, 4), bool), b_tiles)
+    assert int(counts0[0, 0]) == 0
+    np.testing.assert_array_equal(np.asarray(idx0[0, 0]), [0, 0, 0, 0])
+
+
+def test_front_pack_cap():
+    act = jnp.asarray([[False, True, True, True]])
+    idx, counts = sp.front_pack(act, cap=2)
+    assert idx.shape == (1, 2)
+    np.testing.assert_array_equal(np.asarray(idx[0]), [1, 2])
+    assert int(counts[0]) == 3
+
+
+def test_unified_planner_matches_kernel_planner(rng):
+    a = sparse_matrix(rng, (56, 120), 0.4)
+    b = sparse_matrix(rng, (120, 40), 0.5)
+    ks0, c0 = plan_slices(jnp.asarray(a), jnp.asarray(b), 32, 32, 32)
+    ks1, c1 = sp.plan_operands(jnp.asarray(a), jnp.asarray(b), 32, 32, 32)
+    np.testing.assert_array_equal(np.asarray(ks0), np.asarray(ks1))
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+
+
+# ---------------------------------------------------------------------------
+# SparseActivation bitmap reuse
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("density", [0.0, 0.3, 1.0])
+def test_cached_bitmaps_plan_bit_identical(rng, density):
+    """Planning from cached SparseActivation/PlannedWeight metadata must
+    equal on-the-fly planning from the dense operands bit-for-bit."""
+    a = sparse_matrix(rng, (48, 96), density)
+    b = sparse_matrix(rng, (96, 64), 0.5)
+    ks0, c0 = plan_slices(jnp.asarray(a), jnp.asarray(b), 16, 16, 32)
+    sa = sp.sparsify(jnp.asarray(a), slice_k=32)
+    pw = sp.plan_weight(jnp.asarray(b), slice_k=32)
+    col = sp.block_reduce_lhs(sa.row_slice_activity(32), 16)
+    row = sp.block_reduce_rhs(pw.col_slice_activity(32), 16)
+    ks1, c1 = sp.plan_from_activity(col, row)
+    np.testing.assert_array_equal(np.asarray(ks0), np.asarray(ks1))
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+
+
+def test_cached_bitmap_other_granularity(rng):
+    """Re-deriving activity at a different slice_k goes through the packed
+    bitmap and still matches the dense-operand reduction."""
+    a = sparse_matrix(rng, (24, 100), 0.3)  # K=100: exercises bit padding
+    sa = sp.sparsify(jnp.asarray(a), slice_k=32)
+    got = sa.row_slice_activity(16)
+    want = sp.slice_activity_lhs(jnp.asarray(a), 16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sparse_activation_matches_plain_relu(rng):
+    x = jnp.asarray(sparse_matrix(rng, (4, 8, 64), 1.0))
+    sa = sp.relu(x, slice_k=32)
+    np.testing.assert_array_equal(np.asarray(sa.values),
+                                  np.asarray(jnp.maximum(x, 0)))
+    r2 = sp.relu2(x, slice_k=32)
+    r = jnp.maximum(x, 0)
+    np.testing.assert_allclose(np.asarray(r2.values), np.asarray(r * r),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# batched dispatch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["dense", "weight", "dual"])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_batched_matches_2d(rng, mode, use_kernel):
+    if mode == "dense" and use_kernel:
+        pytest.skip("dense mode has no kernel path")
+    x = sparse_matrix(rng, (2, 3, 7, 64), 0.6)
+    w = sparse_matrix(rng, (64, 32), 0.5)
+    kw = dict(mode=mode, block_m=16, block_n=16, slice_k=16,
+              use_kernel=use_kernel)
+    y3, _ = sp.matmul(jnp.asarray(x), jnp.asarray(w), **kw)
+    y2, _ = sp.matmul(jnp.asarray(x).reshape(-1, 64), jnp.asarray(w), **kw)
+    assert y3.shape == (2, 3, 7, 32)
+    np.testing.assert_array_equal(np.asarray(y3).reshape(-1, 32),
+                                  np.asarray(y2))
+    np.testing.assert_allclose(np.asarray(y3),
+                               np.asarray(x @ np.asarray(w)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dual_kernel_with_cached_metadata(rng):
+    """SparseActivation + PlannedWeight through the kernel equals dense."""
+    x = sparse_matrix(rng, (3, 16, 96), 0.4)
+    w = sparse_matrix(rng, (96, 48), 0.5)
+    sa = sp.sparsify(jnp.asarray(x), slice_k=32)
+    pw = sp.plan_weight(jnp.asarray(w), slice_k=32)
+    y, st = sp.matmul(sa, pw, mode="dual", block_m=16, block_n=16,
+                      slice_k=32, use_kernel=True, collect_stats=True)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(x.reshape(-1, 96) @ np.asarray(w)
+                                          ).reshape(3, 16, 48),
+                               rtol=1e-4, atol=1e-4)
+    assert int(st.sparse) <= int(st.dense)
+
+
+def test_grouped_matmul_and_stats(rng):
+    xe = sparse_matrix(rng, (4, 24, 64), 0.5)
+    xe[:, 16:, :] = 0  # empty capacity slots
+    we = sparse_matrix(rng, (4, 64, 32), 1.0)
+    y, st = sp.grouped_matmul(
+        sp.sparsify(jnp.asarray(xe), slice_k=16), sp.plan_weight(
+            jnp.asarray(we), slice_k=16),
+        mode="dual", block_m=8, block_n=16, slice_k=16, collect_stats=True)
+    np.testing.assert_allclose(
+        np.asarray(y), np.einsum("eck,ekn->ecn", xe, we),
+        rtol=1e-4, atol=1e-4)
+    assert int(st.sparse) < int(st.dense)  # empty slots actually skip
+
+
+def test_project_matches_einsum(rng):
+    x = jnp.asarray(sparse_matrix(rng, (2, 5, 32), 1.0))
+    w = jnp.asarray(sparse_matrix(rng, (32, 4, 8), 1.0))
+    y, _ = sp.project(x, w, mode="dual", block_m=8, block_n=8, slice_k=8)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(jnp.einsum("bsd,dhk->bshk", x, w)),
+        rtol=1e-5, atol=1e-5)
+    wo = jnp.asarray(sparse_matrix(rng, (4, 8, 32), 1.0))
+    z, _ = sp.project(y, wo, n_contract=2, mode="dual", block_m=8,
+                      block_n=8, slice_k=8)
+    np.testing.assert_allclose(
+        np.asarray(z), np.asarray(jnp.einsum("bshk,hkd->bsd", y, wo)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_tape_records_routed_matmuls(rng):
+    x = jnp.asarray(sparse_matrix(rng, (8, 32), 0.5))
+    w = jnp.asarray(sparse_matrix(rng, (32, 16), 0.5))
+    with sp.tape.collect() as entries:
+        sp.matmul(x, w, mode="dual", block_m=8, block_n=8, slice_k=8,
+                  name="probe")
+    assert [e[0] for e in entries] == ["probe"]
+    summary = sp.tape.summarize(entries)
+    assert summary[0]["dense_steps"] >= summary[0]["sparse_steps"] > 0
+    # no tape active → nothing recorded, stats not computed
+    _, st = sp.matmul(x, w, mode="dual", block_m=8, block_n=8, slice_k=8)
+    assert st is None
+
+
+# ---------------------------------------------------------------------------
+# cached weight plans: built once per layer, never per forward
+# ---------------------------------------------------------------------------
+
+def test_planned_weight_built_once_per_layer(rng):
+    from repro.core.layers import (SparseLinearConfig, apply_sparse_linear,
+                                   init_sparse_linear, plan_sparse_linear)
+    cfg = SparseLinearConfig(64, 32, mode="dual", block_m=16, block_n=16,
+                             block_k=16, use_kernel=True)
+    params = init_sparse_linear(jax.random.PRNGKey(0), cfg)
+    params["mask"] = pruning.magnitude_mask(params["w"], 0.5)
+
+    builds0 = sp.weights.PLAN_BUILDS
+    params = plan_sparse_linear(params, cfg)        # the one build
+    assert sp.weights.PLAN_BUILDS - builds0 == 1
+
+    masked = params["w"] * params["mask"].astype(params["w"].dtype)
+    for i in range(5):                              # forwards don't re-plan
+        x = jnp.asarray(sparse_matrix(np.random.default_rng(i), (16, 64),
+                                      0.5))
+        y, _ = apply_sparse_linear(params, x, cfg)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ masked),
+                                   rtol=1e-4, atol=1e-4)
+    assert sp.weights.PLAN_BUILDS - builds0 == 1
+
+
+def test_model_plans_built_once_per_model(rng):
+    from repro.models import transformer as tfm
+    cfg = dataclasses.replace(smoke_config("nemotron-4-340b"),
+                              sparse_mode="dual")
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    builds0 = sp.weights.PLAN_BUILDS
+    plans = tfm.plan_weight_activities(params, cfg)
+    built = sp.weights.PLAN_BUILDS - builds0
+    assert built > 0
+    batch = {"tokens": jnp.zeros((1, 4), jnp.int32)}
+    for _ in range(2):
+        tfm.forward(params, batch, cfg, mode="train", weight_plans=plans)
+    assert sp.weights.PLAN_BUILDS - builds0 == built
+
+
+# ---------------------------------------------------------------------------
+# model-level mode equivalence (whisper relu / nemotron relu2 MLP blocks)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,mlp_type", [
+    ("whisper-base", "relu"),
+    ("nemotron-4-340b", "relu2"),
+])
+def test_mlp_block_dual_matches_dense(rng, arch, mlp_type):
+    base = smoke_config(arch)
+    cfg_d = dataclasses.replace(base, mlp_type=mlp_type,
+                                sparse_mode="dense")
+    params, _ = nn.unzip(mlpm.init_mlp(jax.random.PRNGKey(1), cfg_d))
+    # prune at the kernel's block granularity so dual actually skips
+    for key in ("w_up", "w_down"):
+        mask = pruning.block_mask(params[key], 0.5, block=(16, 16))
+        params[key] = params[key] * mask.astype(params[key].dtype)
+    x = jnp.asarray(sparse_matrix(rng, (2, 16, cfg_d.d_model), 1.0))
+
+    y_dense = mlpm.mlp_forward(params, x, cfg_d)
+    for use_kernel in (False, True):
+        cfg_s = dataclasses.replace(
+            cfg_d, sparse_mode="dual", sparse_use_kernel=use_kernel,
+            sparse_block_m=8, sparse_block_n=16, sparse_slice_k=16)
+        plans = sp.weights.plan_layer_weights(
+            params, slice_k=cfg_s.sparse_slice_k)
+        with sp.tape.collect() as entries:
+            y_dual = mlpm.mlp_forward(params, x, cfg_s, plans=plans)
+        np.testing.assert_allclose(np.asarray(y_dual), np.asarray(y_dense),
+                                   rtol=1e-4, atol=1e-4)
+        summary = sp.tape.summarize(entries)
+        assert {e["name"] for e in summary} == {"mlp.up", "mlp.down"}
+        assert all(e["sparse_steps"] < e["dense_steps"] for e in summary)
+
+
+def test_full_model_dual_matches_dense(rng):
+    """Whole-model smoke: dual dispatch (XLA path) is bit-identical."""
+    from repro.models import transformer as tfm
+    cfg = smoke_config("nemotron-4-340b")
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 8)),
+        jnp.int32)}
+    out_d = tfm.forward(params, batch, cfg, mode="train")
+    cfg_s = dataclasses.replace(cfg, sparse_mode="dual")
+    plans = tfm.plan_weight_activities(params, cfg_s)
+    out_s = tfm.forward(params, batch, cfg_s, mode="train",
+                        weight_plans=plans)
+    np.testing.assert_array_equal(np.asarray(out_d.logits),
+                                  np.asarray(out_s.logits))
+
+
+def test_engine_profile_sparsity(rng):
+    from repro.models import transformer as tfm
+    from repro.serving.engine import Engine
+    cfg = dataclasses.replace(smoke_config("nemotron-4-340b"),
+                              sparse_mode="dual")
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, slots=1, capacity=16)
+    report = eng.profile_sparsity([1, 2, 3])
+    names = {r["name"] for r in report}
+    assert {"attn.q", "mlp.up", "mlp.down", "lm_head"} <= names
+    assert all(r["sparse_steps"] <= r["dense_steps"] for r in report)
