@@ -14,6 +14,9 @@ Part 2 (``run_dispatch``): whisper-base (ReLU) and nemotron-style
 cached ``PlannedWeight`` activities, partially-occupied (padded) serving
 batches as the dynamic activation side, per-layer MXU StepCounts from the
 stats tape, and a numerics check of the Pallas dual path against dense.
+Part 2 ends with ``run_dispatch_moe``: MoE expert FFNs with ragged
+gating-born occupancy through the grouped Pallas kernel, asserting the
+executed step count equals the tape's counted steps (DESIGN.md §9).
 """
 import argparse
 import dataclasses
@@ -28,6 +31,7 @@ from repro.configs.base import ModelConfig
 from repro.core import im2col as i2c
 from repro.core import pruning, stats
 from repro.models import mlp as mlpm
+from repro.models import moe as moem
 from repro.models import nn
 from benchmarks.bench_utils import emit, sparse
 
@@ -153,6 +157,7 @@ def run_dispatch(smoke: bool = False):
             for e in per_layer:
                 emit(f"dispatch/{name}/{mode}/{e['name']}", 0.0,
                      f"dense={e['dense_steps']};sparse={e['sparse_steps']};"
+                     f"executed={e['executed_steps']};"
                      f"speedup={e['speedup']:.2f}")
 
         # dense mode bypasses the dispatch tape; its schedule is the
@@ -170,6 +175,76 @@ def run_dispatch(smoke: bool = False):
         assert err <= 1e-4, (name, err)
     print("# OK: dual < weight < dense scheduled steps; "
           "dual matches dense to <=1e-4")
+    run_dispatch_moe(smoke=smoke)
+
+
+def run_dispatch_moe(smoke: bool = False):
+    """MoE expert FFNs through the ragged grouped kernel (DESIGN.md §9).
+
+    The dynamic side here is the gating itself: each expert's capacity
+    buffer fills to a different row count, so whole block-rows of the
+    stacked (E, C, K) operand are zero.  Weight side: 50% block-pruned
+    expert weights.  In dual mode with ``sparse_use_kernel`` the grouped
+    Pallas kernel executes the per-expert condensed schedules — the
+    check below is that the *executed* step count equals the tape's
+    *counted* steps for every MoE projection, while the XLA fallback
+    executes the full dense schedule.
+    """
+    d, f, e_experts = (64, 128, 4) if smoke else (256, 512, 8)
+    seq = 32 if smoke else 128
+    # interpret-mode grids pay per grid step: keep blocks coarse enough
+    # that the non-smoke sweep stays interactive on CPU
+    bm, bn, sk = (8, 16, 16) if smoke else (16, 32, 32)
+    cfg = ModelConfig(
+        name="moe_relu_bench", family="moe", n_layers=1, d_model=d,
+        n_heads=8, n_kv_heads=8, d_ff=f, vocab_size=1024, mlp_type="relu",
+        n_experts=e_experts, n_experts_active=1, capacity_factor=2.0,
+        sparse_block_m=bm, sparse_block_n=bn, sparse_slice_k=sk)
+    params, _ = nn.unzip(moem.init_moe(jax.random.PRNGKey(0), cfg))
+    for key in ("w_up", "w_down"):
+        w = params[key]
+        mask = jnp.stack([pruning.block_mask(
+            w[i], 0.5, block=(cfg.sparse_slice_k, cfg.sparse_block_n))
+            for i in range(e_experts)])
+        params[key] = w * mask.astype(w.dtype)
+    plans = sp.weights.plan_layer_weights(params,
+                                          slice_k=cfg.sparse_slice_k)
+    x = jnp.asarray(RNG.normal(size=(1, seq, d)).astype(np.float32))
+
+    print("# MoE grouped dispatch: executed vs counted steps "
+          "(dense | weight | dual; kernel on non-dense)")
+    results = {}
+    for mode in ("dense", "weight", "dual"):
+        mcfg = dataclasses.replace(cfg, sparse_mode=mode,
+                                   sparse_use_kernel=mode != "dense")
+        with sp.tape.collect() as entries:
+            y, _ = moem.moe_forward(params, x, mcfg, plans=plans)
+        y.block_until_ready()
+        per_layer = [e for e in sp.tape.summarize(entries)
+                     if e["name"].startswith("moe.")]
+        results[mode] = (y, per_layer)
+        for e in per_layer:
+            emit(f"dispatch/moe_relu_bench/{mode}/{e['name']}", 0.0,
+                 f"dense={e['dense_steps']};sparse={e['sparse_steps']};"
+                 f"executed={e['executed_steps']};"
+                 f"speedup={e['speedup']:.2f}")
+        # kernel path: executed steps == the tape's counted steps; the
+        # XLA/dense path executes the dense schedule
+        for e in per_layer:
+            want = e["sparse_steps"] if mode != "dense" \
+                else e["dense_steps"]
+            assert e["executed_steps"] == want, (mode, e)
+
+    dense_total = sum(e["dense_steps"] for e in results["weight"][1])
+    w_total = sum(e["sparse_steps"] for e in results["weight"][1])
+    d_total = sum(e["sparse_steps"] for e in results["dual"][1])
+    err = float(jnp.abs(results["dual"][0] - results["dense"][0]).max())
+    print(f"#   moe_relu_bench steps: dense={dense_total} "
+          f"weight={w_total} dual={d_total}  max|dual-dense|={err:.2e}")
+    assert d_total < w_total < dense_total, (d_total, w_total, dense_total)
+    assert err <= 1e-4, err
+    print("# OK: MoE executed == counted on the kernel path; "
+          "dual < weight < dense")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,15 @@
 """Paper Fig. 21: SpGEMM speedup across sparsity ratios (4096×4096).
 
-Two measurements:
+Three measurements:
 * the machine-independent OHMMA step-count model (the paper's hardware
   speedup mechanism) across the sparsity grid — reproduces Fig. 21's
   structure incl. the ≈25% crossover with dense-B operands;
 * wall-clock of the Pallas kernel (interpret mode) vs XLA matmul for
-  block-structured sparsity — shows real block/slice skipping.
+  block-structured sparsity — shows real block/slice skipping;
+* ``--grouped``: the ragged grouped kernel on MoE-shaped stacked experts
+  (ragged capacity-buffer occupancy × block-pruned expert weights),
+  checked for parity against the XLA einsum path and for
+  executed == counted scheduled steps (DESIGN.md §9).
 """
 import argparse
 
@@ -13,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import stats
+from repro.core import pruning, stats
 from repro.kernels.bitmap_spgemm import bitmap_spgemm
 from benchmarks.bench_utils import emit, sparse, time_fn
 
@@ -71,8 +75,71 @@ def run(smoke: bool = False):
     return rows
 
 
+def run_grouped(smoke: bool = False):
+    """Ragged grouped SpGEMM over stacked experts (the MoE FFN shape).
+
+    E experts' capacity buffers fill to ragged row counts — from 100%
+    occupied down to a completely idle expert, the dynamic sparsity the
+    gating itself produces — against 50% block-pruned expert weights.
+    Runs through ``repro.sparse.grouped_matmul`` (the exact MoE code
+    path) in dual mode, XLA einsum vs the grouped Pallas kernel, and
+    checks that the steps the kernel *executed* equal the steps the tape
+    *counted* — the skips are real elided work, not accounting.
+    """
+    from repro import sparse as sp
+    e, c, k, n = (4, 32, 64, 32) if smoke else (8, 128, 256, 128)
+    block_m, block_n, slice_k = (8, 8, 16) if smoke else (32, 32, 64)
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(e, c, k)).astype(np.float32)
+    # ragged occupancy: linearly 100% → 0% across experts
+    occ = [round(c * (e - 1 - i) / (e - 1)) for i in range(e)]
+    for i, o in enumerate(occ):
+        a[i, o:] = 0
+    b = rng.normal(size=(e, k, n)).astype(np.float32)
+    for i in range(e):
+        mask = pruning.block_mask(jnp.asarray(b[i]), 0.5,
+                                  block=(slice_k, block_n))
+        b[i] = b[i] * np.asarray(mask)
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+
+    kw = dict(mode="dual", block_m=block_m, block_n=block_n,
+              slice_k=slice_k, collect_stats=True, name="grouped")
+    with sp.tape.collect() as entries:
+        y_kernel, _ = sp.grouped_matmul(aj, bj, use_kernel=True,
+                                        interpret=True, **kw)
+        y_xla, _ = sp.grouped_matmul(aj, bj, use_kernel=False, **kw)
+    summ = sp.tape.summarize(entries)
+    krn, xla = summ[0], summ[1]
+    err = float(jnp.abs(y_kernel - y_xla).max())
+    t_kernel = time_fn(lambda x, y: sp.grouped_matmul(
+        x, y, use_kernel=True, interpret=True, **kw)[0], aj, bj)
+    t_xla = time_fn(jax.jit(lambda x, y: jnp.einsum("eck,ekn->ecn", x, y)),
+                    aj, bj)
+    emit("spgemm/grouped_ragged", t_kernel,
+         f"xla={t_xla:.0f}us;counted={krn['sparse_steps']}/"
+         f"{krn['dense_steps']};executed={krn['executed_steps']};"
+         f"occ={','.join(map(str, occ))};max_err={err:.1e}")
+    # the point of the kernel: executed == counted scheduled steps,
+    # while the XLA path executes the full dense schedule
+    assert err <= 1e-4, err
+    assert krn["executed_steps"] == krn["sparse_steps"], krn
+    assert xla["executed_steps"] == xla["dense_steps"], xla
+    assert krn["sparse_steps"] == xla["sparse_steps"], (krn, xla)
+    assert krn["sparse_steps"] < krn["dense_steps"], krn
+    print(f"# grouped ragged: executed {krn['executed_steps']} of "
+          f"{krn['dense_steps']} dense steps "
+          f"({krn['speedup']:.2f}x counted; XLA path executed "
+          f"{xla['executed_steps']})")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced grid/sizes for CI")
-    run(smoke=ap.parse_args().smoke)
+    ap.add_argument("--grouped", action="store_true",
+                    help="only run the ragged grouped-kernel benchmark")
+    args = ap.parse_args()
+    if args.grouped:
+        run_grouped(smoke=args.smoke)
+    else:
+        run(smoke=args.smoke)

@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the dual-side sparse Tensor Core.
 
 bitmap_spgemm   — two-level bitmap block-skip SpGEMM (scalar prefetch)
+grouped_spgemm  — ragged grouped SpGEMM over stacked experts (MoE FFNs)
 sparse_im2col   — bitmap-based implicit sparse im2col
 bitmap_encode   — dense → (packed bitmap, condensed values)
 

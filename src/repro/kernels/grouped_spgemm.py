@@ -1,0 +1,173 @@
+"""Pallas TPU kernel: ragged grouped SpGEMM over stacked experts.
+
+The MoE expert-FFN matmul — ``C[e] = A[e] @ B[e]`` for stacked operands
+``A (E, C, K)`` and ``B (E, K, N)`` — is the most extreme dynamic-sparsity
+case the repo has: each expert's capacity buffer fills to a *different*
+row count (ragged occupancy), and every empty slot is a whole zero row
+born from the gating itself (DESIGN.md §3, §9).  The 2-D
+:mod:`~repro.kernels.bitmap_spgemm` kernel cannot express the expert axis,
+so PR 1's dispatch only *counted* the skips; this kernel executes them.
+
+One grid ``(E, Mt, Nt, S)`` covers all experts.  Per expert, the
+scalar-prefetched schedule ``ks (E, Mt, Nt, S)`` / ``counts (E, Mt, Nt)``
+is the same two-level bitmap plan as the 2-D kernel
+(:func:`repro.sparse.plan.plan_grouped_activity`): front-packed active
+k-slice indices per output block, inactive tails repeating the last
+active index.  Raggedness needs no special casing — an expert with fewer
+occupied rows simply has more all-zero block-rows, whose slice lists are
+empty (``counts == 0``) and whose grid steps re-map to already-resident
+blocks: zero MXU work, zero DMA.  The grid stays rectangular because the
+repeat-last tails pad every per-expert slice list to the shared S.
+
+The kernel computes exactly ``einsum("eck,ekn->ecn", A, B)`` for any
+sparsity pattern — scheduling changes, math doesn't.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.bitmap_spgemm import SLICE_K, _compiler_params
+
+
+# ---------------------------------------------------------------------------
+# host-side planning (per-expert two-level bitmap metadata)
+# ---------------------------------------------------------------------------
+
+def plan_grouped(
+    a: jax.Array, b: jax.Array, block_m: int, block_n: int,
+    slice_k: int = SLICE_K,
+) -> Tuple[jax.Array, jax.Array]:
+    """Build the per-expert condensed slice schedule from dense operands.
+
+    a: (E, C, K), b: (E, K, N).  Returns (ks (E, Mt, Nt, S),
+    counts (E, Mt, Nt)) — the kernel's scalar-prefetch contract.  Thin
+    wrapper over the unified planner (slice activity → block reduction →
+    front-pack with repeat-last tails), vmapped over the expert axis.
+    """
+    from repro.sparse import plan as pln
+    cols = jax.vmap(lambda ai: pln.block_reduce_lhs(
+        pln.slice_activity_lhs(ai, slice_k), block_m))(a)
+    rows = jax.vmap(lambda bi: pln.block_reduce_rhs(
+        pln.slice_activity_rhs(bi, slice_k), block_n))(b)
+    return pln.plan_grouped_activity(cols, rows)
+
+
+# ---------------------------------------------------------------------------
+# kernel body
+# ---------------------------------------------------------------------------
+
+def _grouped_kernel(idx_ref, cnt_ref, a_ref, b_ref, out_ref, acc_ref):
+    e = pl.program_id(0)
+    i, j, s = pl.program_id(1), pl.program_id(2), pl.program_id(3)
+    nsteps = pl.num_programs(3)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # level-1/2 skip: only this expert's active, condensed slices
+    # contribute; ragged-empty blocks have cnt == 0 and do no MXU work.
+    @pl.when(s < cnt_ref[e, i, j])
+    def _mac():
+        acc_ref[...] += jnp.dot(
+            a_ref[0], b_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(s == nsteps - 1)
+    def _flush():
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "slice_k", "interpret",
+                     "out_dtype"))
+def grouped_spgemm_planned(
+    a: jax.Array,
+    b: jax.Array,
+    ks: jax.Array,
+    counts: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    slice_k: int = SLICE_K,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Run the grouped kernel with an externally supplied slice schedule.
+
+    a: (E, C, K), b: (E, K, N), ks/counts from
+    :func:`repro.sparse.plan.plan_grouped_activity` (or
+    :func:`plan_grouped`).  Returns (E, C, N).
+    """
+    e, c, k = a.shape
+    e2, k2, n = b.shape
+    assert (e, k) == (e2, k2), (a.shape, b.shape)
+    e3, mt, nt, s = ks.shape
+    assert e3 == e, (ks.shape, a.shape)
+    out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
+
+    pad_m = mt * block_m - c
+    pad_n = nt * block_n - n
+    pad_k = s * slice_k - k
+    a = jnp.pad(a, ((0, 0), (0, pad_m), (0, pad_k)))
+    b = jnp.pad(b, ((0, 0), (0, pad_k), (0, pad_n)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(e, mt, nt, s),
+        in_specs=[
+            pl.BlockSpec((1, block_m, slice_k),
+                         lambda g, i, j, t, idx, cnt:
+                         (g, i, idx[g, i, j, t])),
+            pl.BlockSpec((1, slice_k, block_n),
+                         lambda g, i, j, t, idx, cnt:
+                         (g, idx[g, i, j, t], j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n),
+                               lambda g, i, j, t, idx, cnt: (g, i, j)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        _grouped_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (e, mt * block_m, nt * block_n), out_dtype),
+        compiler_params=_compiler_params(
+            ("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(ks, counts, a, b)
+    return out[:, :c, :n]
+
+
+def grouped_spgemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    slice_k: int = SLICE_K,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Ragged grouped SpGEMM with on-the-fly per-expert planning."""
+    from repro.sparse import plan as pln
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    e, c, k = a.shape
+    n = b.shape[-1]
+    block_m, block_n, slice_k = pln.clamp_geometry(
+        c, n, k, block_m, block_n, slice_k, bool(interpret))
+    ks, counts = plan_grouped(a, b, block_m, block_n, slice_k)
+    return grouped_spgemm_planned(
+        a, b, ks, counts, block_m=block_m, block_n=block_n,
+        slice_k=slice_k, interpret=bool(interpret), out_dtype=out_dtype)

@@ -46,8 +46,12 @@ def _expert_ffn(params: Dict, xe: jax.Array, cfg: ModelConfig,
     With a non-dense ``cfg.sparse_mode`` the per-expert matmuls route
     through :func:`repro.sparse.grouped_matmul`: the capacity buffers'
     empty slots are genuine zero rows (dynamic sparsity born from the
-    gating itself), and relu/relu2 experts additionally carry the
-    post-activation bitmap into the down-projection (DESIGN.md §4.4).
+    gating itself), ragged per expert, and relu/relu2 experts
+    additionally carry the post-activation bitmap into the
+    down-projection (DESIGN.md §4.4).  With ``cfg.sparse_use_kernel``
+    the ragged grouped Pallas kernel executes those condensed schedules
+    in one grid over all experts (DESIGN.md §9) instead of falling back
+    to the XLA einsum.
     """
     dt = xe.dtype
     if cfg.sparse_mode == "dense":

@@ -68,15 +68,20 @@ def _split_xbc(xbc: jax.Array, cfg: ModelConfig):
 
 def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
                  tail: Optional[jax.Array] = None) -> jax.Array:
-    """Depthwise causal conv1d. xbc: (B,S,Cd), w: (K,Cd), tail: (B,K-1,Cd)."""
+    """Depthwise causal conv1d. xbc: (B,S,Cd), w: (K,Cd), tail: (B,K-1,Cd).
+
+    Accumulates in float32 — ``mamba_step`` computes the same conv in
+    f32 at decode, and a bf16 shift-and-add here drifts the prefill path
+    past the prefill/decode consistency tolerance."""
     k = w.shape[0]
+    f32 = jnp.float32
     if tail is None:
-        tail = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
-    padded = jnp.concatenate([tail.astype(xbc.dtype), xbc], axis=1)
-    out = jnp.zeros_like(xbc)
+        tail = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), f32)
+    padded = jnp.concatenate([tail.astype(f32), xbc.astype(f32)], axis=1)
+    out = jnp.zeros(xbc.shape, f32)
     for i in range(k):  # K is 4: unrolled shift-and-add depthwise conv
-        out = out + padded[:, i:i + xbc.shape[1], :] * w[i].astype(xbc.dtype)
-    return jax.nn.silu(out + b.astype(xbc.dtype))
+        out = out + padded[:, i:i + xbc.shape[1], :] * w[i].astype(f32)
+    return jax.nn.silu(out + b.astype(f32)).astype(xbc.dtype)
 
 
 def ssd_chunked(x, dt, a, bmat, cmat, cfg: ModelConfig,
@@ -85,7 +90,10 @@ def ssd_chunked(x, dt, a, bmat, cmat, cfg: ModelConfig,
     """Chunked SSD scan.
 
     x: (B,S,H,P), dt: (B,S,H) (post-softplus), a: (H,) negative,
-    bmat/cmat: (B,S,G,N).  Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    bmat/cmat: (B,S,G,N).  Returns (y (B,S,H,P) float32,
+    final_state (B,H,P,N)).  y stays in the f32 accumulation dtype so
+    the caller can fold the D-residual before rounding — the decode step
+    rounds exactly once, and prefill must match it.
     """
     b, s, h, p = x.shape
     g, n = bmat.shape[2], bmat.shape[3]
@@ -144,7 +152,7 @@ def ssd_chunked(x, dt, a, bmat, cmat, cfg: ModelConfig,
     y_off = jnp.einsum("bclgn,bcghpn,bclgh->bclghp",
                        cc, st_ins, jnp.exp(cums))
     y = (y_diag + y_off).reshape(b, s, h, p)
-    return y.astype(x.dtype), final.reshape(b, h, p, n)
+    return y, final.reshape(b, h, p, n)
 
 
 def mamba_forward(
@@ -183,7 +191,11 @@ def mamba_forward(
     if pad:
         y = y[:, :s]
         xh = xh[:, :s]
-    y = y + xh * params["D"].astype(y.dtype)[None, None, :, None]
+    # D-residual in f32: mamba_step adds it pre-cast, so a bf16 add here
+    # would diverge from the decode path
+    y = (y.astype(jnp.float32)
+         + xh.astype(jnp.float32) * params["D"].astype(jnp.float32)
+         [None, None, :, None]).astype(x.dtype)
     y = y.reshape(bsz, s, cfg.d_inner)
     y = nn.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
     out = jnp.dot(y, params["out_proj"].astype(x.dtype))

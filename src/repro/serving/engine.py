@@ -83,8 +83,13 @@ class Engine:
         Runs a single eager, scan-unrolled prefill with the stats tape
         active, so every dispatch-routed projection (QKV/out, MLP up/
         down, MoE FFNs, LM head) reports its dense vs. scheduled step
-        counts.  Diagnostic path — the jitted serving steps are
-        untouched.  Returns ``[] `` in dense mode (nothing is routed).
+        counts — and, per entry, the ``executed_steps`` of the compute
+        path that actually ran: equal to ``sparse_steps`` on the Pallas
+        kernel paths (``cfg.sparse_use_kernel``, incl. the ragged
+        grouped MoE kernel, DESIGN.md §9), equal to ``dense_steps`` on
+        the XLA fallbacks.  Diagnostic path — the jitted serving steps
+        are untouched.  Returns ``[]`` in dense mode (nothing is
+        routed).
         """
         if self.cfg.sparse_mode == "dense":
             return []

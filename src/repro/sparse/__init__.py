@@ -35,7 +35,9 @@ from repro.sparse.plan import (  # noqa: F401
     block_reduce_rhs,
     counts_to_steps,
     front_pack,
+    grouped_counts_to_steps,
     plan_from_activity,
+    plan_grouped_activity,
     plan_operands,
     slice_activity_lhs,
     slice_activity_rhs,

@@ -22,7 +22,9 @@ Modes mirror ``DualSparseLinear``:
 * ``dense``  — plain matmul, dense schedule accounting.
 * ``weight`` — static weight-side skips only (activation assumed dense).
 * ``dual``   — weight AND activation skips; with ``use_kernel`` the
-  Pallas block-skip kernel executes the condensed schedule.
+  Pallas kernels execute the condensed schedule (2-D block-skip for
+  :func:`matmul`, ragged grouped for :func:`grouped_matmul` —
+  DESIGN.md §9).
 
 All modes compute exactly ``x @ w`` — sparsity changes the schedule, not
 the math.
@@ -158,8 +160,37 @@ def matmul(
         else:
             y = x2 @ w_arr
     if steps is not None:
-        tape.record(name, steps)
+        # kernel path executes the condensed schedule; XLA computes dense
+        tape.record(name, steps,
+                    steps.sparse if mode != "dense" and use_kernel
+                    else None)
     return y.reshape(*lead, n), steps
+
+
+def _grouped_lhs_activity(x: Operand, xv: jax.Array, block_m: int,
+                          slice_k: int, mode: str) -> jax.Array:
+    """(E, Mt, S) per-expert block-row slice activity (activation side)."""
+    e, c, k = xv.shape
+    mt = pln._cdiv(c, block_m)
+    s = pln._cdiv(k, slice_k)
+    if mode == "weight":  # activation treated as dense
+        return jnp.ones((e, mt, s), dtype=bool)
+    if isinstance(x, SparseActivation):
+        rows = x.row_slice_activity(slice_k)
+    else:
+        rows = pln.slice_activity_lhs(xv, slice_k)
+    return jax.vmap(lambda r: pln.block_reduce_lhs(r, block_m))(rows)
+
+
+def _grouped_rhs_activity(w: Weight, w_arr: jax.Array, block_n: int,
+                          slice_k: int) -> jax.Array:
+    """(E, S, Nt) per-expert block-col slice activity (weight side)."""
+    if isinstance(w, PlannedWeight):
+        cols = w.col_slice_activity(slice_k)
+    else:
+        cols = jax.vmap(
+            lambda wi: pln.slice_activity_rhs(wi, slice_k))(w_arr)
+    return jax.vmap(lambda a: pln.block_reduce_rhs(a, block_n))(cols)
 
 
 def grouped_matmul(
@@ -170,8 +201,8 @@ def grouped_matmul(
     block_m: int = 128,
     block_n: int = 128,
     slice_k: int = pln.SLICE_K,
-    use_kernel: bool = False,      # accepted for signature parity; the
-    interpret: Optional[bool] = None,  # grouped path always runs via XLA
+    use_kernel: bool = False,
+    interpret: Optional[bool] = None,
     collect_stats: bool = False,
     name: str = "grouped_matmul",
 ) -> Tuple[jax.Array, Optional[stats.StepCounts]]:
@@ -179,12 +210,14 @@ def grouped_matmul(
 
     The MoE expert-FFN pattern: each expert has its own weight matrix and
     its own capacity buffer (whose empty slots are genuine zero rows —
-    dynamic sparsity from the gating itself).  Compute runs as one einsum;
-    scheduling stats come from a vmapped plan over experts.  The Pallas
-    kernel is 2-D, so this path always computes via XLA — per-expert
-    kernel dispatch is listed as follow-on work in ROADMAP.md.
+    dynamic sparsity from the gating itself), filled to a *different* row
+    count per expert (ragged occupancy).  With ``use_kernel`` the ragged
+    grouped Pallas kernel runs one (E, Mt, Nt, S) grid over all experts
+    and executes the per-expert condensed schedules — the blocks the tape
+    counts as skipped are never scheduled (DESIGN.md §9).  Without it,
+    compute falls back to one XLA einsum with the same schedule
+    accounting.
     """
-    del use_kernel, interpret
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
     w_arr = _weight_array(w)
@@ -196,44 +229,42 @@ def grouped_matmul(
     n = w_arr.shape[-1]
     w_arr = w_arr.astype(xv.dtype)
 
-    steps = None
-    if mode != "dense" and (collect_stats or tape.active()):
-        block_m, block_n, slice_k = pln.clamp_geometry(
-            c, n, k, block_m, block_n, slice_k, True)
-        s = pln._cdiv(k, slice_k)
-        if mode == "weight":
-            rows = jnp.ones((e, pln._cdiv(c, block_m), s), dtype=bool)
-        elif isinstance(x, SparseActivation):
-            rows = jax.vmap(
-                lambda r: pln.block_reduce_lhs(r, block_m))(
-                    x.row_slice_activity(slice_k))
-        else:
-            rows = jax.vmap(lambda xi: pln.block_reduce_lhs(
-                pln.slice_activity_lhs(xi, slice_k), block_m))(xv)
-        if isinstance(w, PlannedWeight):
-            cols = jax.vmap(
-                lambda a: pln.block_reduce_rhs(a, block_n))(
-                    w.col_slice_activity(slice_k))
-        else:
-            cols = jax.vmap(lambda wi: pln.block_reduce_rhs(
-                pln.slice_activity_rhs(wi, slice_k), block_n))(w_arr)
-        counts = jax.vmap(pln.counts_from_activity)(rows, cols)
-        per = jax.vmap(lambda cnt: pln.counts_to_steps(cnt, s))(counts)
-        steps = stats.StepCounts(dense=jnp.sum(per.dense),
-                                 sparse=jnp.sum(per.sparse),
-                                 tiles_skipped=jnp.sum(per.tiles_skipped))
-        tape.record(name, steps)
-    elif mode == "dense" and (collect_stats or tape.active()):
-        block_m, block_n, slice_k = pln.clamp_geometry(
-            c, n, k, block_m, block_n, slice_k, True)
-        dense = jnp.asarray(
-            e * pln._cdiv(c, block_m) * pln._cdiv(n, block_n)
-            * pln._cdiv(k, slice_k))
-        steps = stats.StepCounts(dense=dense, sparse=dense,
-                                 tiles_skipped=jnp.asarray(0))
-        tape.record(name, steps)
+    interp = _auto_interpret(interpret)
+    block_m, block_n, slice_k = pln.clamp_geometry(
+        c, n, k, block_m, block_n, slice_k, interp)
+    s = pln._cdiv(k, slice_k)
 
-    y = jnp.einsum("eck,ekn->ecn", xv, w_arr)
+    want_stats = collect_stats or tape.active()
+    run_kernel = use_kernel and mode != "dense"
+    steps = None
+    if mode == "dense":
+        y = jnp.einsum("eck,ekn->ecn", xv, w_arr)
+        if want_stats:
+            dense = jnp.asarray(
+                e * pln._cdiv(c, block_m) * pln._cdiv(n, block_n) * s)
+            steps = stats.StepCounts(dense=dense, sparse=dense,
+                                     tiles_skipped=jnp.asarray(0))
+            tape.record(name, steps)
+    else:
+        if run_kernel or want_stats:
+            cols = _grouped_lhs_activity(x, xv, block_m, slice_k, mode)
+            rows = _grouped_rhs_activity(w, w_arr, block_n, slice_k)
+            if run_kernel:
+                ks, counts = pln.plan_grouped_activity(cols, rows)
+            else:  # stats only: skip the schedule's argsort
+                counts = pln.grouped_counts_from_activity(cols, rows)
+            if want_stats:
+                steps = pln.grouped_counts_to_steps(counts, s)
+        if run_kernel:
+            from repro.kernels import grouped_spgemm as gsk
+            y = gsk.grouped_spgemm_planned(
+                xv, w_arr, ks, counts, block_m=block_m, block_n=block_n,
+                slice_k=slice_k, interpret=interp)
+        else:
+            y = jnp.einsum("eck,ekn->ecn", xv, w_arr)
+        if steps is not None:
+            tape.record(name, steps,
+                        steps.sparse if run_kernel else None)
     return y, steps
 
 

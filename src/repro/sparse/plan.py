@@ -132,6 +132,35 @@ def plan_from_activity(col: jax.Array, row: jax.Array
     return front_pack(act)
 
 
+def plan_grouped_activity(cols: jax.Array, rows: jax.Array
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Batched (per-expert) schedule over stacked operands.
+
+    cols: (E, Mt, S) per-expert A-side block-row slice activity;
+    rows: (E, S, Nt) per-expert B-side block-col slice activity.
+    Returns (ks (E, Mt, Nt, S), counts (E, Mt, Nt)) for
+    :func:`repro.kernels.grouped_spgemm.grouped_spgemm_planned`.
+
+    Experts whose capacity buffers fill to different row counts (ragged
+    occupancy) simply have more inactive block-rows; :func:`front_pack`'s
+    repeat-last tail pads every per-expert slice list out to the shared
+    S, so the (E, Mt, Nt, S) grid stays rectangular and the kernel's
+    skipped steps re-map to already-resident blocks (no DMA).
+    """
+    act = cols[:, :, None, :] & rows.transpose(0, 2, 1)[:, None, :, :]
+    return front_pack(act)               # (E, Mt, Nt, S)
+
+
+def grouped_counts_from_activity(cols: jax.Array, rows: jax.Array
+                                 ) -> jax.Array:
+    """Per-expert per-block active-slice counts, schedule-free.
+
+    Same AND as :func:`plan_grouped_activity` but a plain sum — the
+    stats-only grouped path, sparing the front-pack's argsort."""
+    act = cols[:, :, None, :] & rows.transpose(0, 2, 1)[:, None, :, :]
+    return jnp.sum(act, axis=-1, dtype=jnp.int32)
+
+
 def counts_from_activity(col: jax.Array, row: jax.Array) -> jax.Array:
     """Per-block active-slice counts without building the schedule.
 
@@ -170,6 +199,20 @@ def counts_to_steps(counts: jax.Array, n_slices: int) -> stats.StepCounts:
     mt, nt = counts.shape
     return stats.StepCounts(
         dense=jnp.asarray(mt * nt * n_slices),
+        sparse=jnp.sum(counts),
+        tiles_skipped=jnp.sum(counts == 0))
+
+
+def grouped_counts_to_steps(counts: jax.Array, n_slices: int
+                            ) -> stats.StepCounts:
+    """(E, Mt, Nt) grouped schedule counts → summed StepCounts.
+
+    Dense work is E · Mt · Nt · S slice-matmuls; the per-expert tallies
+    collapse into one entry because the grouped kernel runs all experts
+    under a single grid."""
+    e, mt, nt = counts.shape
+    return stats.StepCounts(
+        dense=jnp.asarray(e * mt * nt * n_slices),
         sparse=jnp.sum(counts),
         tiles_skipped=jnp.sum(counts == 0))
 

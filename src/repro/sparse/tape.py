@@ -6,6 +6,14 @@ value.  The dispatch layer records one entry per routed matmul while a
 tape is active; with no tape installed recording is a no-op, so the hot
 path pays a single ``None`` check.
 
+Each entry carries the *counted* schedule (StepCounts: dense vs sparse
+scheduled steps) plus the *executed* step count — what the chosen compute
+path actually ran.  The XLA fallback computes the full dense schedule, so
+``executed == dense``; the Pallas kernels walk the condensed slice lists,
+so ``executed == sparse``.  ``executed_steps == sparse_steps`` in a
+summary is therefore the proof that a layer's skips were real work
+elided, not just accounting (DESIGN.md §9).
+
 The tape appends Python-side, so activate it around *eager* execution
 (e.g. ``RunConfig(scan_unroll=True)`` forwards, or un-jitted benchmark
 blocks).  Inside ``jit``/``scan`` traces the recorded values would be
@@ -19,7 +27,7 @@ from typing import List, Optional, Tuple
 
 from repro.core import stats
 
-Entry = Tuple[str, stats.StepCounts]
+Entry = Tuple[str, stats.StepCounts, object]  # (name, counted, executed)
 
 _TAPE: contextvars.ContextVar[Optional[List[Entry]]] = \
     contextvars.ContextVar("sparse_stats_tape", default=None)
@@ -40,21 +48,28 @@ def active() -> bool:
     return _TAPE.get() is not None
 
 
-def record(name: str, steps: stats.StepCounts) -> None:
+def record(name: str, steps: stats.StepCounts,
+           executed=None) -> None:
+    """Append one routed-matmul entry.
+
+    ``executed`` is the step count the compute path actually ran;
+    ``None`` means the XLA fallback computed the full dense schedule.
+    """
     entries = _TAPE.get()
     if entries is not None:
-        entries.append((name, steps))
+        entries.append((name, steps, executed))
 
 
 def summarize(entries: List[Entry]) -> List[dict]:
-    """Concrete per-entry dicts (name, dense, sparse, speedup)."""
+    """Concrete per-entry dicts (name, dense, sparse, executed, speedup)."""
     out = []
-    for name, sc in entries:
+    for name, sc, executed in entries:
         dense, sparse = int(sc.dense), int(sc.sparse)
         out.append({
             "name": name,
             "dense_steps": dense,
             "sparse_steps": sparse,
+            "executed_steps": dense if executed is None else int(executed),
             "tiles_skipped": int(sc.tiles_skipped),
             "speedup": dense / max(sparse, 1),
         })

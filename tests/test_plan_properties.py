@@ -1,0 +1,158 @@
+"""Property-based tests of the unified planner (DESIGN.md §4.1, §9).
+
+The planner invariants the kernels' scalar-prefetch contract rests on:
+
+* front-pack emits a *permutation* of exactly the active slice indices,
+  in ascending order, in the first ``count`` positions;
+* repeat-last tails never introduce an index absent from the active set
+  (skipped grid steps must re-map to an already-resident block);
+* dual-mode activity is exactly the AND of the weight-side and
+  activation-side bitmaps, at every granularity, for shapes that are not
+  multiples of the block/slice sizes.
+
+Runs under a deterministic hypothesis profile (derandomized) so CI is
+reproducible; set ``HYPOTHESIS_PROFILE=dev`` for local random exploring.
+"""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro import sparse as sp
+from repro.sparse import plan as pln
+
+settings.register_profile("ci", max_examples=50, deadline=None,
+                          derandomize=True)
+settings.register_profile("dev", max_examples=50, deadline=None)
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+
+
+def _rand_mask(draw, shape):
+    bits = draw(st.lists(st.booleans(),
+                         min_size=int(np.prod(shape)),
+                         max_size=int(np.prod(shape))))
+    return np.asarray(bits, bool).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# front-pack permutation / tail-membership invariants
+# ---------------------------------------------------------------------------
+
+@st.composite
+def _activity(draw):
+    fibers = draw(st.integers(1, 6))
+    s = draw(st.integers(1, 17))
+    return _rand_mask(draw, (fibers, s))
+
+
+@given(act=_activity())
+def test_front_pack_head_is_sorted_active_permutation(act):
+    idx, counts = sp.front_pack(jnp.asarray(act))
+    idx, counts = np.asarray(idx), np.asarray(counts)
+    for f in range(act.shape[0]):
+        active = np.flatnonzero(act[f])
+        c = counts[f]
+        assert c == active.size
+        # head: exactly the active indices, ascending (a permutation of
+        # the active set with the stable order preserved)
+        np.testing.assert_array_equal(idx[f, :c], active)
+
+
+@given(act=_activity())
+def test_front_pack_tail_never_leaves_active_set(act):
+    idx, counts = sp.front_pack(jnp.asarray(act))
+    idx, counts = np.asarray(idx), np.asarray(counts)
+    for f in range(act.shape[0]):
+        active = set(np.flatnonzero(act[f]).tolist())
+        tail = idx[f, counts[f]:]
+        if active:
+            # repeat-last: the tail re-maps to the last active index
+            assert set(tail.tolist()) <= active
+            assert np.all(tail == idx[f, counts[f] - 1])
+        else:
+            # no active entries: the whole fiber maps to index 0
+            np.testing.assert_array_equal(idx[f], 0)
+
+
+# ---------------------------------------------------------------------------
+# dual activity == AND of the two sides' bitmaps (numpy oracle)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def _operands(draw):
+    m = draw(st.integers(1, 24))
+    k = draw(st.integers(1, 40))
+    n = draw(st.integers(1, 24))
+    block_m = draw(st.sampled_from([2, 3, 4, 8, 16]))
+    block_n = draw(st.sampled_from([2, 3, 4, 8, 16]))
+    slice_k = draw(st.sampled_from([2, 3, 4, 8, 16]))
+    a = _rand_mask(draw, (m, k)).astype(np.float32)
+    b = _rand_mask(draw, (k, n)).astype(np.float32)
+    return a, b, block_m, block_n, slice_k
+
+
+def _oracle_activity(a, b, block_m, block_n, slice_k):
+    """Direct per-block AND of the two element bitmaps."""
+    m, k = a.shape
+    n = b.shape[1]
+    mt, nt, s = (-(-m // block_m), -(-n // block_n), -(-k // slice_k))
+    act = np.zeros((mt, nt, s), bool)
+    for i in range(mt):
+        for j in range(nt):
+            for t in range(s):
+                ab = a[i * block_m:(i + 1) * block_m,
+                       t * slice_k:(t + 1) * slice_k]
+                bb = b[t * slice_k:(t + 1) * slice_k,
+                       j * block_n:(j + 1) * block_n]
+                act[i, j, t] = np.any(ab != 0) and np.any(bb != 0)
+    return act
+
+
+@given(ops=_operands())
+def test_dual_activity_is_and_of_side_bitmaps(ops):
+    a, b, block_m, block_n, slice_k = ops
+    want = _oracle_activity(a, b, block_m, block_n, slice_k)
+    col = pln.block_reduce_lhs(
+        pln.slice_activity_lhs(jnp.asarray(a), slice_k), block_m)
+    row = pln.block_reduce_rhs(
+        pln.slice_activity_rhs(jnp.asarray(b), slice_k), block_n)
+    counts = np.asarray(pln.counts_from_activity(col, row))
+    np.testing.assert_array_equal(counts, want.sum(-1))
+    # and the schedule head walks exactly the AND-active indices
+    ks, counts2 = pln.plan_from_activity(col, row)
+    ks, counts2 = np.asarray(ks), np.asarray(counts2)
+    np.testing.assert_array_equal(counts2, want.sum(-1))
+    for i in range(want.shape[0]):
+        for j in range(want.shape[1]):
+            np.testing.assert_array_equal(
+                ks[i, j, :counts[i, j]], np.flatnonzero(want[i, j]))
+
+
+@given(ops=_operands(), e=st.integers(1, 3))
+def test_grouped_plan_matches_per_expert_plan(ops, e):
+    """The batched (E, Mt, Nt, S) plan is exactly E stacked 2-D plans."""
+    a, b, block_m, block_n, slice_k = ops
+    rng = np.random.default_rng(0)
+    av = np.stack([a * _rand_mask_np(rng, a.shape) for _ in range(e)])
+    bv = np.stack([b * _rand_mask_np(rng, b.shape) for _ in range(e)])
+    cols = jnp.stack([pln.block_reduce_lhs(
+        pln.slice_activity_lhs(jnp.asarray(ai), slice_k), block_m)
+        for ai in av])
+    rows = jnp.stack([pln.block_reduce_rhs(
+        pln.slice_activity_rhs(jnp.asarray(bi), slice_k), block_n)
+        for bi in bv])
+    ks_g, cnt_g = pln.plan_grouped_activity(cols, rows)
+    for i in range(e):
+        ks_i, cnt_i = pln.plan_from_activity(cols[i], rows[i])
+        np.testing.assert_array_equal(np.asarray(ks_g[i]),
+                                      np.asarray(ks_i))
+        np.testing.assert_array_equal(np.asarray(cnt_g[i]),
+                                      np.asarray(cnt_i))
+
+
+def _rand_mask_np(rng, shape):
+    return (rng.random(shape) < 0.6).astype(np.float32)
