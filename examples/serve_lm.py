@@ -25,10 +25,15 @@ def main():
                     choices=["dense", "weight", "dual"],
                     help="route projections through repro.sparse; prints "
                          "the per-layer StepCounts profile")
+    ap.add_argument("--sparse-kv", action="store_true",
+                    help="bitmap-scheduled SparseKVCache decode "
+                         "(DESIGN.md §10); adds attn.score/attn.value "
+                         "and cache-occupancy entries to the profile")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(smoke_config(args.arch),
-                              sparse_mode=args.sparse_mode)
+                              sparse_mode=args.sparse_mode,
+                              sparse_kv=args.sparse_kv)
     params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
     rc = RunConfig(kv_quant=args.kv_quant)
     engine = Engine(params, cfg, slots=args.slots, capacity=128, rc=rc)
@@ -40,10 +45,18 @@ def main():
     done = engine.run_to_completion()
     dt = time.time() - t0
     if args.sparse_mode != "dense":
-        print(f"per-layer MXU steps ({args.sparse_mode} mode, prefill):")
-        for e in engine.profile_sparsity([1, 2, 3, 4]):
-            print(f"  {e['name']:10s} {e['sparse_steps']}/"
-                  f"{e['dense_steps']} ({e['speedup']:.2f}x)")
+        steps = 2 if args.sparse_kv else 0
+        print(f"per-layer MXU steps ({args.sparse_mode} mode, prefill"
+              f"{' + %d decode steps' % steps if steps else ''}):")
+        for e in engine.profile_sparsity([1, 2, 3, 4],
+                                         decode_steps=steps):
+            if e["name"].startswith("kvcache."):
+                print(f"  {e['name']:20s} written={e['written_frac']:.2f} "
+                      f"evicted={e['evicted_frac']:.2f} "
+                      f"quantized={e['quantized']}")
+            else:
+                print(f"  {e['name']:10s} {e['sparse_steps']}/"
+                      f"{e['dense_steps']} ({e['speedup']:.2f}x)")
     total_toks = sum(len(r.output) for r in done)
     for r in sorted(done, key=lambda r: r.uid):
         print(f"req {r.uid}: {r.output}")

@@ -48,6 +48,20 @@ def pack_bits(mask: jax.Array, axis: int = -1) -> jax.Array:
     return jnp.moveaxis(packed, -1, axis)
 
 
+def pack_bits_padded(mask: jax.Array, axis: int = -1) -> jax.Array:
+    """:func:`pack_bits` with the axis zero-padded to a WORD multiple.
+
+    The one place the pad-then-pack rule lives — activation bitmaps and
+    KV-cache occupancy bitmaps both use it, so the packed layout can
+    never diverge between them.
+    """
+    mask = jnp.moveaxis(mask, axis, -1)
+    pad = (-mask.shape[-1]) % WORD
+    if pad:
+        mask = jnp.pad(mask, [(0, 0)] * (mask.ndim - 1) + [(0, pad)])
+    return jnp.moveaxis(pack_bits(mask, axis=-1), -1, axis)
+
+
 def unpack_bits(words: jax.Array, axis: int = -1) -> jax.Array:
     """Inverse of :func:`pack_bits` — uint32 words → boolean mask."""
     words = jnp.moveaxis(words, axis, -1)

@@ -168,6 +168,87 @@ def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(b, sq, h, hd).astype(q.dtype)
 
 
+def attend_sparse(q: jax.Array, cache, cfg: ModelConfig, *,
+                  qpos: jax.Array, kpos: jax.Array,
+                  window: Optional[int] = None) -> jax.Array:
+    """Bitmap-scheduled decode attention over a ``SparseKVCache``.
+
+    q: (B, 1, H, hd).  Computes exactly the same masked-softmax GQA as
+    :func:`attend`'s single-block path, but routes both matmuls through
+    :func:`repro.sparse.grouped_matmul` as stacked per-(batch × kv-head)
+    problems (E = B·KV), so the stats tape records scheduled-vs-skipped
+    cache blocks and — with ``cfg.sparse_use_kernel`` — the ragged
+    grouped Pallas kernel executes the skips (DESIGN.md §10):
+
+    * score: ``scoresᵀ[e] = K[e] (T, hd) @ qᵀ[e] (hd, G)`` — cache slots
+      are block-*rows*; the schedule is the cache occupancy bitmap ANDed
+      with the causal/window mask (skipped rows get masked to -inf
+      anyway, so eliding them never changes the output);
+    * value: ``out[e] = p[e] (G, T) @ V[e] (T, hd)`` — cache slots are
+      the *contraction* axis; unwritten blocks are genuine zero k-slices
+      of V (weight side), masked history rides p's activation side.
+
+    Matmuls accumulate in f32 (``out_dtype``) like the dense path, so the
+    XLA fallback is bit-identical to :func:`attend` over the same cache.
+    Decode shapes only — the O(T·G) score tensor is not KV-chunked.
+    """
+    from repro.sparse import plan as pln
+    skvc = sp.kvcache
+    b, sq, h, hd = q.shape
+    t = cache.capacity
+    kvh = cache.k.shape[-2]
+    g = h // kvh
+    ne = b * kvh
+
+    # dequantise / cast exactly like the dense decode branches
+    if cache.quantized:
+        kd = (cache.k.astype(jnp.bfloat16)
+              * cache.k_scale.astype(jnp.bfloat16)).astype(q.dtype)
+        vd = (cache.v.astype(jnp.bfloat16)
+              * cache.v_scale.astype(jnp.bfloat16)).astype(q.dtype)
+    else:
+        kd, vd, _ = kvc.read(cache, dtype=q.dtype)
+    kd_e = kd.transpose(0, 2, 1, 3).reshape(ne, t, hd)
+    vd_e = vd.transpose(0, 2, 1, 3).reshape(ne, t, hd)
+    qw = q.reshape(b, kvh, g, hd).transpose(0, 1, 3, 2).reshape(ne, hd, g)
+
+    # the decode plan: maintained occupancy AND the causal/window mask.
+    # Occupancy ≡ kpos >= 0 (property-tested), so ``sched`` doubles as
+    # the dense path's softmax validity mask bit-for-bit; the dispatch
+    # layer derives the block-level front-pack from the operand metadata.
+    sched = pln.kv_decode_slots(skvc.occupancy_mask(cache), kpos,
+                                qpos[0], window)
+    bt = pln.effective_slice_k(t, cfg.sparse_block_t)
+    sk_hd = pln.effective_slice_k(hd, cfg.sparse_slice_k)
+    kw = dict(mode=cfg.sparse_mode, use_kernel=cfg.sparse_use_kernel,
+              out_dtype=jnp.float32)
+
+    x_k = skvc.score_operand(kd_e, sched, sk_hd)
+    scores_t, _ = sp.grouped_matmul(
+        x_k, qw, block_m=cfg.sparse_block_t, block_n=cfg.sparse_block_n,
+        slice_k=cfg.sparse_slice_k, name="attn.score", **kw)
+    scores = scores_t.reshape(b, kvh, t, g).transpose(0, 1, 3, 2)
+    scores = scores[:, :, :, None, :] * (hd ** -0.5)   # (B,KV,G,1,T)
+
+    valid = sched[None, :]                             # (Sq=1, T)
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)
+    e = jnp.exp(scores - m[..., None])
+    e = jnp.where(valid[None, None, None], e, 0.0)
+    l = jnp.sum(e, axis=-1)                            # (B,KV,G,1)
+
+    p_e = e[:, :, :, 0, :].reshape(ne, g, t)
+    x_p, w_v = skvc.value_operands(cache, p_e, vd_e, sched, bt)
+    acc_e, _ = sp.grouped_matmul(
+        x_p, w_v, block_m=cfg.sparse_block_m, block_n=cfg.sparse_block_n,
+        slice_k=cfg.sparse_block_t, name="attn.value", **kw)
+
+    acc = acc_e.reshape(b, kvh, g, hd)[:, None]        # (B,1,KV,G,hd)
+    l = l.transpose(0, 3, 1, 2)                        # (B,1,KV,G)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
 def _proj(x: jax.Array, w: jax.Array, cfg: ModelConfig, name: str,
           n_contract: int = 1, plan_act=None) -> jax.Array:
     """Head projection through the sparse dispatch layer.
@@ -250,10 +331,19 @@ def attention_forward(
 
     if cache is not None:
         if update_cache:
-            cache = kvc.update(cache, k, v)
+            cache = (sp.kvcache.update(cache, k, v)
+                     if isinstance(cache, sp.SparseKVCache)
+                     else kvc.update(cache, k, v))
         qpos = positions if causal else jnp.full_like(positions, big)
         kpos = kvc.key_positions(cache)
-        if cache.quantized:
+        if (isinstance(cache, sp.SparseKVCache)
+                and cfg.sparse_mode != "dense" and q.shape[1] == 1
+                and causal):
+            # bitmap-scheduled decode: both attention matmuls route
+            # through the sparse dispatch (DESIGN.md §10)
+            out = attend_sparse(q, cache, cfg, qpos=qpos, kpos=kpos,
+                                window=window)
+        elif cache.quantized:
             # raw int8 KV + per-chunk dequant inside attend
             out = attend(q, cache.k, cache.v, qpos=qpos, kpos=kpos,
                          window=window, chunk=chunk,

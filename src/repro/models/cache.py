@@ -103,6 +103,25 @@ def update(cache: KVCache, k_new: jax.Array, v_new: jax.Array) -> KVCache:
         pos=cache.pos + s)
 
 
+def written_slot_mask(pos: jax.Array, window: jax.Array, capacity: int,
+                      s: int) -> jax.Array:
+    """Slots written by an ``update`` of ``s`` tokens at ring cursor ``pos``.
+
+    Closed-form mirror of ``update``'s three placement cases: of the ``s``
+    appended tokens only the newest ``min(s, window)`` survive, landing at
+    slots ``(pos + s - n + j) mod window``.  ``pos``/``window`` may carry
+    leading stack dims; returns bool ``(*lead, capacity)``.  This is ring
+    *metadata* arithmetic — no read of the value buffers — which is what
+    lets :mod:`repro.sparse.kvcache` maintain occupancy incrementally.
+    """
+    slots = jnp.arange(capacity, dtype=jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)[..., None]
+    window = jnp.asarray(window, jnp.int32)[..., None]
+    n = jnp.minimum(jnp.int32(s), window)
+    start = (pos + s - n) % window
+    return (slots < window) & (((slots - start) % window) < n)
+
+
 def key_positions(cache: KVCache) -> jax.Array:
     """Absolute token position held in each slot (-1 = empty).
 

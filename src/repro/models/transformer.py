@@ -20,6 +20,7 @@ from repro import sparse
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models import attention as attn
 from repro.models import cache as kvc
+from repro.sparse import kvcache as sparse_kvc
 from repro.models import mlp as mlpm
 from repro.models import moe as moem
 from repro.models import nn
@@ -175,15 +176,33 @@ def plan_weight_activities(params: Dict, cfg: ModelConfig
 # ---------------------------------------------------------------------------
 
 def init_caches(cfg: ModelConfig, batch: int, capacity: int, *,
-                quantized: bool = False, dtype=jnp.bfloat16) -> Dict:
-    """Per-period-position stacked caches for serving."""
+                quantized: bool = False, dtype=jnp.bfloat16,
+                sparse: Optional[bool] = None) -> Dict:
+    """Per-period-position stacked caches for serving.
+
+    ``sparse`` (default: ``cfg.sparse_kv`` in a non-dense sparse mode —
+    dense mode never routes ``attend_sparse``, so sparse caches would be
+    pure overhead there) allocates self-attention KV caches as
+    :class:`repro.sparse.kvcache.SparseKVCache` — full ``capacity``
+    buffers with incrementally maintained occupancy bitmaps.
+    Sliding-window models keep full history (the window is applied as the
+    attention mask, equivalent to the ring by the ring≡full identity);
+    the out-of-window blocks are what the decode planner then skips.
+    """
     caches: Dict[str, Any] = {}
     np_, kvh, hd = cfg.n_periods, cfg.n_kv_heads, cfg.hd
     window = min(cfg.sliding_window or capacity, capacity)
+    if sparse is None:
+        sparse = cfg.sparse_kv and cfg.sparse_mode != "dense"
     for pos in range(cfg.period):
         kind = cfg.layer_kind(pos)
         c: Dict[str, Any] = {}
-        if kind in ("attn",):
+        if kind in ("attn",) and sparse:
+            c["kv"] = sparse_kvc.init_sparse_cache(
+                batch, capacity, kvh, hd, stack=(np_,), dtype=dtype,
+                quantized=quantized, window=capacity,
+                block_t=cfg.sparse_block_t)
+        elif kind in ("attn",):
             c["kv"] = kvc.init_cache(
                 batch, window if cfg.sliding_window else capacity,
                 kvh, hd, stack=(np_,), dtype=dtype, quantized=quantized,

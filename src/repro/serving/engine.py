@@ -77,7 +77,8 @@ class Engine:
         return out.caches, nxt
 
     # -- sparsity accounting ------------------------------------------
-    def profile_sparsity(self, tokens) -> List[dict]:
+    def profile_sparsity(self, tokens, decode_steps: int = 0
+                         ) -> List[dict]:
         """Per-layer MXU StepCounts for one forward over ``tokens``.
 
         Runs a single eager, scan-unrolled prefill with the stats tape
@@ -87,9 +88,17 @@ class Engine:
         path that actually ran: equal to ``sparse_steps`` on the Pallas
         kernel paths (``cfg.sparse_use_kernel``, incl. the ragged
         grouped MoE kernel, DESIGN.md §9), equal to ``dense_steps`` on
-        the XLA fallbacks.  Diagnostic path — the jitted serving steps
-        are untouched.  Returns ``[]`` in dense mode (nothing is
-        routed).
+        the XLA fallbacks.
+
+        ``decode_steps > 0`` additionally greedy-decodes that many
+        tokens eagerly, so with ``cfg.sparse_kv`` the bitmap-scheduled
+        decode path (DESIGN.md §10) records its ``attn.score`` /
+        ``attn.value`` entries — scheduled vs skipped *cache blocks* per
+        layer — and the report ends with one ``kvcache.posN.layerI``
+        occupancy entry per sparse cache (written fraction, ring/window
+        evicted fraction, quantized flag).  Diagnostic path — the jitted
+        serving steps are untouched.  Returns ``[]`` in dense mode
+        (nothing is routed).
         """
         if self.cfg.sparse_mode == "dense":
             return []
@@ -97,15 +106,55 @@ class Engine:
         if toks.ndim == 1:
             toks = toks[None]
         rc = dataclasses.replace(self.rc or RunConfig(), scan_unroll=True)
+        quant = bool(self.rc and self.rc.kv_quant)
+        caches = tfm.init_caches(self.cfg, toks.shape[0], self.capacity,
+                                 quantized=quant)
         with sparse.tape.collect() as entries:
-            tfm.forward(self.params, {"tokens": toks}, self.cfg,
-                        mode="prefill",
-                        caches=tfm.init_caches(self.cfg, toks.shape[0],
-                                               self.capacity),
-                        positions=jnp.arange(toks.shape[1],
-                                             dtype=jnp.int32),
-                        rc=rc, weight_plans=self.weight_plans)
-        return sparse.tape.summarize(entries)
+            out = tfm.forward(self.params, {"tokens": toks}, self.cfg,
+                              mode="prefill", caches=caches,
+                              positions=jnp.arange(toks.shape[1],
+                                                   dtype=jnp.int32),
+                              rc=rc, weight_plans=self.weight_plans)
+            caches = out.caches
+            pos = toks.shape[1]
+            nxt = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
+            for _ in range(decode_steps):
+                out = tfm.forward(
+                    self.params, {"tokens": nxt[:, None]}, self.cfg,
+                    mode="decode", caches=caches,
+                    positions=jnp.asarray([pos], jnp.int32),
+                    rc=rc, weight_plans=self.weight_plans)
+                caches = out.caches
+                pos += 1
+                nxt = jnp.argmax(out.logits[:, 0],
+                                 axis=-1).astype(jnp.int32)
+        report = sparse.tape.summarize(entries)
+        report.extend(self._cache_occupancy_entries(caches))
+        return report
+
+    def _cache_occupancy_entries(self, caches) -> List[dict]:
+        """Per-layer sparse-cache occupancy, from the maintained bitmaps."""
+        out: List[dict] = []
+        if caches is None:
+            return out
+        mask_w = self.cfg.sliding_window or None
+        for posname in sorted(caches):
+            c = caches[posname].get("kv")
+            if not isinstance(c, sparse.SparseKVCache):
+                continue
+            rep = sparse.kvcache.occupancy_report(c, mask_window=mask_w)
+            for i, (wf, ef) in enumerate(zip(rep["written_frac"],
+                                             rep["evicted_frac"])):
+                out.append({
+                    "name": f"kvcache.{posname}.layer{i}",
+                    "written_frac": wf,
+                    "evicted_frac": ef,
+                    "quantized": rep["quantized"],
+                    "capacity": rep["capacity"],
+                    "block_t": rep["block_t"],
+                    "n_blocks": rep["n_blocks"],
+                })
+        return out
 
     # -- control plane ------------------------------------------------
     def submit(self, req: Request):

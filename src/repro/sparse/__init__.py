@@ -14,6 +14,8 @@ and the model zoo (DESIGN.md §4):
   / :func:`project`, the batched mode-selectable entry points.
 * :mod:`~repro.sparse.tape`       — per-layer StepCounts collection for
   serving and benchmarks.
+* :mod:`~repro.sparse.kvcache`    — :class:`SparseKVCache`, the
+  bitmap-scheduled KV cache for decode-path attention (DESIGN.md §10).
 """
 from repro.sparse import tape  # noqa: F401
 from repro.sparse.activation import (  # noqa: F401
@@ -47,3 +49,7 @@ from repro.sparse.weights import (  # noqa: F401
     as_planned,
     plan_weight,
 )
+# imported last: kvcache pulls in repro.models.cache, which may re-enter
+# this package mid-initialisation (everything above must already be bound)
+from repro.sparse import kvcache  # noqa: E402,F401
+from repro.sparse.kvcache import SparseKVCache  # noqa: E402,F401

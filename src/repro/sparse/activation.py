@@ -85,11 +85,7 @@ class SparseActivation:
 
 def _pack_mask(mask: jax.Array) -> jax.Array:
     """Pack a (..., K) bool mask along K, padding to a word multiple."""
-    k = mask.shape[-1]
-    pad = (-k) % bm.WORD
-    if pad:
-        mask = jnp.pad(mask, [(0, 0)] * (mask.ndim - 1) + [(0, pad)])
-    return bm.pack_bits(mask, axis=-1)
+    return bm.pack_bits_padded(mask, axis=-1)
 
 
 def sparsify(x: jax.Array, mask: Optional[jax.Array] = None,

@@ -104,12 +104,17 @@ def matmul(
     interpret: Optional[bool] = None,
     collect_stats: bool = False,
     name: str = "matmul",
+    out_dtype=None,
 ) -> Tuple[jax.Array, Optional[stats.StepCounts]]:
     """y = x @ w with mode-selectable dual-side sparse scheduling.
 
     x: (..., K) array or SparseActivation; w: (K, N) array or
     PlannedWeight.  Returns (y (..., N), StepCounts or None).  Stats are
     computed when ``collect_stats`` or a stats tape is active.
+    ``out_dtype`` sets the accumulation/output dtype on every compute
+    path (``preferred_element_type`` on XLA, the f32-scratch flush dtype
+    on the kernels) — the sparse KV decode path uses f32 here to match
+    the dense attention's accumulation exactly.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -131,10 +136,15 @@ def matmul(
     mt, nt, s = (pln._cdiv(t, block_m), pln._cdiv(n, block_n),
                  pln._cdiv(k, slice_k))
 
+    def _xla_matmul():
+        if out_dtype is None:
+            return x2 @ w_arr
+        return jnp.matmul(x2, w_arr, preferred_element_type=out_dtype)
+
     want_stats = collect_stats or tape.active()
     steps = None
     if mode == "dense":
-        y = x2 @ w_arr
+        y = _xla_matmul()
         if want_stats:
             dense = jnp.asarray(mt * nt * s)
             steps = stats.StepCounts(dense=dense, sparse=dense,
@@ -156,9 +166,9 @@ def matmul(
             from repro.kernels import bitmap_spgemm as bsk
             y = bsk.bitmap_spgemm_planned(
                 x2, w_arr, ks, counts, block_m=block_m, block_n=block_n,
-                slice_k=slice_k, interpret=interp)
+                slice_k=slice_k, interpret=interp, out_dtype=out_dtype)
         else:
-            y = x2 @ w_arr
+            y = _xla_matmul()
     if steps is not None:
         # kernel path executes the condensed schedule; XLA computes dense
         tape.record(name, steps,
@@ -205,6 +215,7 @@ def grouped_matmul(
     interpret: Optional[bool] = None,
     collect_stats: bool = False,
     name: str = "grouped_matmul",
+    out_dtype=None,
 ) -> Tuple[jax.Array, Optional[stats.StepCounts]]:
     """Batched-weights matmul: x (E, C, K) @ w (E, K, N) → (E, C, N).
 
@@ -234,11 +245,17 @@ def grouped_matmul(
         c, n, k, block_m, block_n, slice_k, interp)
     s = pln._cdiv(k, slice_k)
 
+    def _xla_grouped():
+        if out_dtype is None:
+            return jnp.einsum("eck,ekn->ecn", xv, w_arr)
+        return jnp.einsum("eck,ekn->ecn", xv, w_arr,
+                          preferred_element_type=out_dtype)
+
     want_stats = collect_stats or tape.active()
     run_kernel = use_kernel and mode != "dense"
     steps = None
     if mode == "dense":
-        y = jnp.einsum("eck,ekn->ecn", xv, w_arr)
+        y = _xla_grouped()
         if want_stats:
             dense = jnp.asarray(
                 e * pln._cdiv(c, block_m) * pln._cdiv(n, block_n) * s)
@@ -259,9 +276,9 @@ def grouped_matmul(
             from repro.kernels import grouped_spgemm as gsk
             y = gsk.grouped_spgemm_planned(
                 xv, w_arr, ks, counts, block_m=block_m, block_n=block_n,
-                slice_k=slice_k, interpret=interp)
+                slice_k=slice_k, interpret=interp, out_dtype=out_dtype)
         else:
-            y = jnp.einsum("eck,ekn->ecn", xv, w_arr)
+            y = _xla_grouped()
         if steps is not None:
             tape.record(name, steps,
                         steps.sparse if run_kernel else None)

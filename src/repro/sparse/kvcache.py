@@ -1,0 +1,217 @@
+"""Sparse KV cache: bitmap-scheduled attention decode (DESIGN.md §10).
+
+The serving-side analogue of activation sparsity is the KV cache: at any
+decode step most of a score matmul's cache columns hit zero-padded
+(never-written), ring-evicted, or window-masked slots.  This module is
+the first subsystem where the sparsity metadata is *stateful across
+steps*: :class:`SparseKVCache` extends :class:`repro.models.cache.KVCache`
+with a packed per-slot occupancy bitmap and per-block written counts,
+maintained incrementally by :func:`update` on prefill, decode append and
+ring-buffer wrap — ring *metadata* arithmetic only, never re-derived from
+the dense K/V values.
+
+The decode path (``attention.attend_sparse``) ANDs that occupancy with
+the causal/window mask (:func:`repro.sparse.plan.kv_decode_slots`;
+:func:`~repro.sparse.plan.plan_kv_decode` layers the block-level
+front-pack on top) and routes both attention matmuls through
+:func:`repro.sparse.grouped_matmul` as stacked per-(batch × kv-head)
+problems:
+
+* score  — ``scoresᵀ[e] = K[e] @ qᵀ[e]``: cache slots are the *row* axis,
+  so skipped blocks are block-rows of a :class:`SparseActivation` whose
+  metadata comes from the cache bitmap (built here, not from values);
+* value  — ``out[e] = p[e] @ V[e]``: cache slots are the *contraction*
+  axis, so unwritten blocks are k-slices of a :class:`PlannedWeight`
+  (V's empty slots are genuine zero rows), and the window-masked
+  probability rows ride the activation side.
+
+Both matmuls therefore record scheduled-vs-skipped cache blocks on the
+stats tape, and with ``ModelConfig.sparse_use_kernel`` the ragged grouped
+Pallas kernel executes the skips (DESIGN.md §9) — scheduling changes,
+math doesn't.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitmap as bm
+from repro.models import cache as kvc
+from repro.sparse import plan as pln
+from repro.sparse.activation import SparseActivation, sparsify
+from repro.sparse.weights import PlannedWeight
+
+
+class SparseKVCache(NamedTuple):
+    """A :class:`~repro.models.cache.KVCache` plus occupancy metadata.
+
+    Field order keeps the ``KVCache`` prefix so ``cache.update`` /
+    ``cache.key_positions`` work unchanged via ``_replace`` and attribute
+    access.  The metadata:
+
+    occ : (..., W) packed uint32 slot-occupancy bitmap over ``capacity``
+          (LSB-first, ``core.bitmap`` layout) — slot i is 1 iff a token
+          was ever written there.  Monotone under append; ring wrap
+          re-writes already-occupied slots so exactly ``min(pos, window)``
+          slots are ever live.
+    blk : (..., NB) int32 occupied-slot count per cache block.  The block
+          size is implied by the shapes (``block_t`` property), so the
+          pytree stays all-array and jit/scan-transparent.
+    """
+    k: jax.Array
+    v: jax.Array
+    k_scale: jax.Array
+    v_scale: jax.Array
+    pos: jax.Array
+    window: jax.Array
+    occ: jax.Array
+    blk: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[-3]
+
+    @property
+    def quantized(self) -> bool:
+        return self.k.dtype == jnp.int8
+
+    @property
+    def n_blocks(self) -> int:
+        return self.blk.shape[-1]
+
+    @property
+    def block_t(self) -> int:
+        """Cache slots per occupancy block (derived, so it round-trips:
+        init stores NB = ceil(cap / requested) and every consumer uses
+        ceil(cap / NB), which maps NB back to itself)."""
+        return -(-self.capacity // self.n_blocks)
+
+
+def occupancy_mask(cache: SparseKVCache) -> jax.Array:
+    """(..., capacity) bool per-slot occupancy from the packed bitmap."""
+    return bm.unpack_bits(cache.occ, axis=-1)[..., :cache.capacity]
+
+
+def init_sparse_cache(batch: int, capacity: int, n_kv: int, hd: int, *,
+                      stack: Tuple[int, ...] = (), dtype=jnp.bfloat16,
+                      quantized: bool = False, window: int = 0,
+                      block_t: int = 32) -> SparseKVCache:
+    """A zero-occupancy sparse cache (same geometry as ``init_cache``)."""
+    base = kvc.init_cache(batch, capacity, n_kv, hd, stack=stack,
+                          dtype=dtype, quantized=quantized, window=window)
+    nb = -(-capacity // max(1, block_t))
+    zeros_mask = jnp.zeros((*stack, capacity), bool)
+    return SparseKVCache(
+        *base,
+        occ=bm.pack_bits_padded(zeros_mask),
+        blk=jnp.zeros((*stack, nb), jnp.int32))
+
+
+def update(cache: SparseKVCache, k_new: jax.Array, v_new: jax.Array
+           ) -> SparseKVCache:
+    """Value write + incremental occupancy maintenance.
+
+    The value/scale/pos update is exactly ``cache.update``; the bitmap
+    update ORs in the closed-form ring write mask
+    (:func:`repro.models.cache.written_slot_mask`) — prefill, single-token
+    decode append and mid-stream ring wrap are all the same formula, and
+    the dense buffers are never read.
+    """
+    s = k_new.shape[-3]
+    written = kvc.written_slot_mask(cache.pos, cache.window,
+                                    cache.capacity, s)
+    occ_slots = occupancy_mask(cache) | written
+    blk = jnp.sum(
+        _blocked(occ_slots, cache.block_t), axis=-1, dtype=jnp.int32)
+    base = kvc.update(cache, k_new, v_new)
+    return base._replace(occ=bm.pack_bits_padded(occ_slots), blk=blk)
+
+
+def _blocked(mask: jax.Array, block_t: int) -> jax.Array:
+    """(..., T) slot mask → (..., NB, block_t) with zero tail padding."""
+    *lead, t = mask.shape
+    nb = -(-t // block_t)
+    padded = jnp.pad(mask, [(0, 0)] * len(lead)
+                     + [(0, nb * block_t - t)])
+    return padded.reshape(*lead, nb, block_t)
+
+
+# ---------------------------------------------------------------------------
+# occupancy accounting (engine.profile_sparsity / bench run_decode)
+# ---------------------------------------------------------------------------
+
+def occupancy_report(cache: SparseKVCache,
+                     mask_window: Optional[int] = None) -> dict:
+    """Concrete per-cache occupancy metrics (host-side, eager).
+
+    written_frac : occupied slots / capacity (zero-padded tail = rest);
+    evicted_frac : fraction of the written stream no longer attendable —
+                   ring-evicted slots plus, when ``mask_window`` (the
+                   model's sliding window) is tighter than the ring,
+                   window-masked history;
+    live_slots   : slots currently holding an attendable token.
+    Leading stack dims are flattened into lists.
+    """
+    occ = jnp.sum(cache.blk, axis=-1)
+    pos = cache.pos
+    ring = jnp.minimum(jnp.asarray(pos), cache.window)
+    w = ring if mask_window is None else jnp.minimum(ring, mask_window)
+    live = jnp.minimum(jnp.asarray(pos), w)
+    evicted = jnp.maximum(jnp.asarray(pos) - live, 0)
+
+    def _tolist(x):
+        arr = jnp.ravel(jnp.asarray(x))
+        return [float(v) for v in arr]
+
+    denom = [max(p, 1.0) for p in _tolist(pos)]
+    return {
+        "written_frac": [o / cache.capacity for o in _tolist(occ)],
+        "evicted_frac": [e / d for e, d in zip(_tolist(evicted), denom)],
+        "live_slots": _tolist(live),
+        "quantized": cache.quantized,
+        "capacity": cache.capacity,
+        "block_t": cache.block_t,
+        "n_blocks": cache.n_blocks,
+    }
+
+
+# ---------------------------------------------------------------------------
+# decode-step operand construction (consumed by attention.attend_sparse)
+# ---------------------------------------------------------------------------
+
+def score_operand(k_deq: jax.Array, sched_slots: jax.Array,
+                  slice_k: int) -> SparseActivation:
+    """Wrap the dequantised cache K as the score matmul's activation side.
+
+    k_deq: (E, T, hd) stacked per-(batch × kv-head) cache keys;
+    sched_slots: the (T,) ``slots`` level of a
+    :class:`repro.sparse.plan.KVDecodePlan` (occupancy AND visibility).
+    Rows outside the schedule are declared inactive — their scores are
+    about to be masked to -inf, so the kernel may skip them; the XLA
+    fallback computes them densely and stays bit-identical to the dense
+    path.
+    """
+    mask = jnp.broadcast_to(sched_slots[None, :, None], k_deq.shape)
+    return sparsify(k_deq, mask=mask, slice_k=slice_k)
+
+
+def value_operands(cache: SparseKVCache, p: jax.Array, v_deq: jax.Array,
+                   sched_slots: jax.Array, block_t: int
+                   ) -> Tuple[SparseActivation, PlannedWeight]:
+    """Wrap (p, V) for the value matmul ``out[e] = p[e] @ V[e]``.
+
+    Cache slots are the contraction axis: V's *unwritten* blocks are
+    genuine zero k-slices (weight side, from the occupancy bitmap — valid
+    in every mode), while window-masked rows of the probability tensor
+    ``p`` (zeroed by the softmax mask) ride the activation side, so the
+    dual-mode AND skips both never-written and evicted history.
+    """
+    occ_blocks = pln.slot_block_reduce(occupancy_mask(cache), block_t)
+    w_act = jnp.broadcast_to(occ_blocks[None, :, None],
+                             (v_deq.shape[0], occ_blocks.shape[-1],
+                              v_deq.shape[-1]))
+    w = PlannedWeight(w=v_deq, slice_act=w_act, slice_k=block_t)
+    p_mask = jnp.broadcast_to(sched_slots[None, None, :], p.shape)
+    return sparsify(p, mask=p_mask, slice_k=block_t), w

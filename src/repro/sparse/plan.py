@@ -27,7 +27,7 @@ the AND in :func:`plan_from_activity`.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -184,6 +184,88 @@ def plan_operands(a: jax.Array, b: jax.Array, block_m: int, block_n: int,
     col = block_reduce_lhs(slice_activity_lhs(a, slice_k), block_m)
     row = block_reduce_rhs(slice_activity_rhs(b, slice_k), block_n)
     return plan_from_activity(col, row)
+
+
+# ---------------------------------------------------------------------------
+# decode-path KV-cache planning (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def kv_slot_visibility(kpos: jax.Array, qpos: jax.Array,
+                       window: Optional[int]) -> jax.Array:
+    """Which cache slots the query at ``qpos`` may attend to.
+
+    kpos: (T,) absolute position held by each slot (-1 = never written);
+    qpos: scalar query position.  Mirrors the mask arithmetic of
+    ``attention._attend_block`` exactly: causal (kpos <= qpos) AND, for
+    sliding-window configs, kpos > qpos - window.  Unwritten slots
+    (kpos < 0) are never visible.
+    """
+    valid = (kpos >= 0) & (kpos <= qpos)
+    if window is not None:
+        valid &= kpos > (qpos - window)
+    return valid
+
+
+def slot_block_reduce(mask: jax.Array, block_t: int) -> jax.Array:
+    """(..., T) per-slot mask → (..., NB) per-block any-reduction."""
+    *lead, t = mask.shape
+    nb = _cdiv(t, block_t)
+    padded = jnp.pad(mask, [(0, 0)] * len(lead)
+                     + [(0, nb * block_t - t)])
+    return jnp.any(padded.reshape(*lead, nb, block_t), axis=-1)
+
+
+def kv_decode_slots(occ_slots: jax.Array, kpos: jax.Array,
+                    qpos: jax.Array, window: Optional[int]) -> jax.Array:
+    """Slot-level decode schedule: occupancy AND causal/window mask.
+
+    The level ``attention.attend_sparse`` consumes directly — the
+    dispatch layer re-derives block schedules (and their front-pack)
+    from the operand metadata built on top of this mask, so no argsort
+    runs here.  Because occupancy ≡ ``kpos >= 0`` (a property-test
+    invariant), the result also equals the dense path's softmax validity
+    mask bit-for-bit.
+    """
+    return occ_slots & kv_slot_visibility(kpos, qpos, window)
+
+
+class KVDecodePlan(NamedTuple):
+    """One decode step's cache schedule (``plan_kv_decode``).
+
+    slots  : (T,) bool — scheduled slots (:func:`kv_decode_slots`); the
+             operand builders in :mod:`repro.sparse.kvcache` consume
+             this level.
+    blocks : (NB,) bool — the same schedule at cache-block granularity.
+    idx    : (NB,) int32 — front-packed scheduled block indices with a
+             repeat-last tail (the scalar-prefetch layout a
+             block-granular cache kernel consumes; pinned today by the
+             property tests).
+    count  : scalar int32 — number of scheduled blocks.
+    """
+    slots: jax.Array
+    blocks: jax.Array
+    idx: jax.Array
+    count: jax.Array
+
+
+def plan_kv_decode(occ_slots: jax.Array, kpos: jax.Array, qpos: jax.Array,
+                   window: Optional[int], block_t: int) -> KVDecodePlan:
+    """Front-packed cache-block schedule for one decode step.
+
+    occ_slots: (T,) bool slot occupancy from the cache's incrementally
+    maintained bitmap (:mod:`repro.sparse.kvcache`) — never re-derived
+    from the dense K/V values.  A block is *scheduled* iff it holds at
+    least one occupied slot that the causal/window mask lets the query
+    see; everything else (zero-padded, ring/window-evicted, or
+    never-written blocks) is skipped.  The head of ``idx`` only ever
+    references occupied blocks — the invariant the property tests pin
+    down.
+    """
+    sched_slots = kv_decode_slots(occ_slots, kpos, qpos, window)
+    blocks = slot_block_reduce(sched_slots, block_t)
+    idx, count = front_pack(blocks)
+    return KVDecodePlan(slots=sched_slots, blocks=blocks, idx=idx,
+                        count=count)
 
 
 # ---------------------------------------------------------------------------

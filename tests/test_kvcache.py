@@ -1,0 +1,248 @@
+"""Sparse KV cache: occupancy maintenance, decode parity, engine profile.
+
+The contract under test (DESIGN.md §10): a ``SparseKVCache`` maintains
+slot-occupancy bitmaps incrementally (prefill / decode append / ring
+wrap — never re-derived from the dense buffers), the decode planner ANDs
+them with the causal/window mask, and decode through the sparse path is
+bit-identical to the dense XLA path (≤1e-4 on the Pallas kernel path,
+including int8 and sliding-window caches).
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import sparse as sp
+from repro.configs import smoke_config
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import attention as attn
+from repro.models import cache as kvc
+from repro.models import transformer as tfm
+from repro.sparse import kvcache as skv
+from repro.sparse import plan as pln
+
+
+def _attn_cfg(**kw) -> ModelConfig:
+    base = dict(name="t", family="dense", n_layers=1, d_model=32,
+                n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                sparse_mode="dual", sparse_block_t=8, sparse_block_m=8,
+                sparse_block_n=16, sparse_slice_k=16)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# occupancy maintenance (incremental, metadata-only)
+# ---------------------------------------------------------------------------
+
+def test_occupancy_matches_ring_placement():
+    cap, window = 24, 10
+    cache = skv.init_sparse_cache(1, cap, 2, 8, window=window, block_t=8)
+    oracle = np.zeros(cap, bool)
+    pos = 0
+    rng = np.random.default_rng(0)
+    for s in [3, 1, 1, 7, 12, 1, 2]:   # prefill, decode, wrap, long wrap
+        k = jnp.asarray(rng.normal(size=(1, s, 2, 8)), jnp.float32)
+        cache = skv.update(cache, k, k)
+        for j in range(s):
+            oracle[(pos + j) % window] = True
+        pos += s
+        np.testing.assert_array_equal(
+            np.asarray(skv.occupancy_mask(cache)), oracle)
+        # blk counts are the block-summed bitmap
+        blocks = oracle[: (cap // 8) * 8].reshape(-1, 8)
+        np.testing.assert_array_equal(np.asarray(cache.blk),
+                                      blocks.sum(1))
+    assert int(skv.occupancy_mask(cache).sum()) == window  # wrapped: full
+
+
+def test_occupancy_never_reads_values():
+    """Bitmaps track ring placement even when written values are zero."""
+    cache = skv.init_sparse_cache(1, 16, 2, 8, window=16, block_t=4)
+    z = jnp.zeros((1, 5, 2, 8), jnp.float32)
+    cache = skv.update(cache, z, z)
+    assert int(skv.occupancy_mask(cache).sum()) == 5
+    assert np.asarray(cache.blk).tolist() == [4, 1, 0, 0]
+
+
+def test_plan_kv_decode_blocks():
+    """Schedule = occupancy AND causal/window visibility, front-packed."""
+    cache = skv.init_sparse_cache(1, 32, 2, 8, window=32, block_t=8)
+    k = jnp.ones((1, 20, 2, 8), jnp.float32)
+    cache = skv.update(cache, k, k)
+    kpos = kvc.key_positions(cache)
+    occ = skv.occupancy_mask(cache)
+    # decode at qpos=19 with window 6: slots 14..19 visible → blocks 1, 2
+    plan = pln.plan_kv_decode(occ, kpos, jnp.int32(19), 6, cache.block_t)
+    assert np.asarray(plan.blocks).tolist() == [False, True, True, False]
+    assert int(plan.count) == 2
+    np.testing.assert_array_equal(np.asarray(plan.idx), [1, 2, 2, 2])
+    np.testing.assert_array_equal(
+        np.asarray(plan.slots), np.asarray(occ)
+        & (np.asarray(kpos) >= 14) & (np.asarray(kpos) <= 19))
+    # no window: all occupied blocks scheduled, unwritten tail skipped
+    plan = pln.plan_kv_decode(occ, kpos, jnp.int32(19), None,
+                              cache.block_t)
+    assert np.asarray(plan.blocks).tolist() == [True, True, True, False]
+
+
+# ---------------------------------------------------------------------------
+# decode parity: sparse path vs dense path over the same cache geometry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window,quant,use_kernel", [
+    (0, False, False),
+    (8, False, False),
+    (0, True, False),
+    (0, False, True),
+    (8, False, True),
+    (8, True, True),
+])
+def test_decode_parity_vs_dense(rng, window, quant, use_kernel):
+    cfg = _attn_cfg(sliding_window=window, sparse_use_kernel=use_kernel)
+    dcfg = dataclasses.replace(cfg, sparse_mode="dense")
+    from repro.models import nn
+    params, _ = nn.unzip(attn.init_attention(jax.random.PRNGKey(0), cfg))
+    s, cap = 20, 32
+    x = jnp.asarray(rng.normal(size=(2, s, 32)) * 0.3, jnp.float32)
+    dense = kvc.init_cache(2, cap, 2, 8, quantized=quant)
+    sparse_c = skv.init_sparse_cache(2, cap, 2, 8, quantized=quant,
+                                     window=cap, block_t=8)
+    pos = jnp.arange(12, dtype=jnp.int32)
+    yd, dense = attn.attention_forward(params, x[:, :12], dcfg,
+                                       positions=pos, cache=dense)
+    ys, sparse_c = attn.attention_forward(params, x[:, :12], cfg,
+                                          positions=pos, cache=sparse_c)
+    if use_kernel:
+        # QKV/out projections run the PR-1 2-D kernel (≤1e-4 contract)
+        np.testing.assert_allclose(np.asarray(yd), np.asarray(ys),
+                                   rtol=1e-4, atol=1e-4)
+    else:
+        np.testing.assert_array_equal(np.asarray(yd), np.asarray(ys))
+    for t in range(12, s):
+        p1 = jnp.asarray([t], jnp.int32)
+        yd, dense = attn.attention_forward(params, x[:, t:t + 1], dcfg,
+                                           positions=p1, cache=dense)
+        ys, sparse_c = attn.attention_forward(params, x[:, t:t + 1], cfg,
+                                              positions=p1, cache=sparse_c)
+        err = np.abs(np.asarray(yd, np.float32)
+                     - np.asarray(ys, np.float32)).max()
+        if use_kernel:
+            assert err <= 1e-4, err          # f32-accumulating kernel
+        else:
+            assert err == 0.0, err           # bit-identical XLA fallback
+
+
+def test_decode_records_scheduled_vs_skipped(rng):
+    """Tape entries count cache blocks; kernel path executes the skips."""
+    cfg = _attn_cfg(sparse_use_kernel=True)
+    from repro.models import nn
+    params, _ = nn.unzip(attn.init_attention(jax.random.PRNGKey(0), cfg))
+    cap = 32
+    x = jnp.asarray(rng.normal(size=(1, 9, 32)) * 0.3, jnp.float32)
+    cache = skv.init_sparse_cache(1, cap, 2, 8, window=cap, block_t=8)
+    _, cache = attn.attention_forward(
+        params, x[:, :8], cfg, positions=jnp.arange(8, dtype=jnp.int32),
+        cache=cache)
+    with sp.tape.collect() as entries:
+        _, cache = attn.attention_forward(
+            params, x[:, 8:], cfg, positions=jnp.asarray([8], jnp.int32),
+            cache=cache)
+    summ = sp.tape.summarize(entries)
+    names = [e["name"] for e in summ]
+    assert names == ["attn.q", "attn.k", "attn.v", "attn.score",
+                     "attn.value", "attn.out"]
+    score = summ[3]
+    # 9 of 32 slots written → 2 of 4 row-blocks scheduled per (b, kv) head
+    assert score["sparse_steps"] < score["dense_steps"]
+    assert score["tiles_skipped"] > 0
+    assert score["executed_steps"] == score["sparse_steps"]
+    value = summ[4]
+    assert value["sparse_steps"] < value["dense_steps"]
+    assert value["executed_steps"] == value["sparse_steps"]
+
+
+def test_swa_sparse_matches_ring_dense(rng):
+    """Full-capacity sparse SWA cache ≡ the dense ring cache (1e-4)."""
+    cfg = _attn_cfg(sliding_window=8)
+    dcfg = dataclasses.replace(cfg, sparse_mode="dense")
+    from repro.models import nn
+    params, _ = nn.unzip(attn.init_attention(jax.random.PRNGKey(0), cfg))
+    s = 20
+    x = jnp.asarray(rng.normal(size=(1, s, 32)) * 0.3, jnp.float32)
+    ring = kvc.init_cache(1, 8, 2, 8, dtype=jnp.float32, window=8)
+    full = skv.init_sparse_cache(1, 32, 2, 8, dtype=jnp.float32,
+                                 window=32, block_t=8)
+    for t in range(s):
+        p1 = jnp.asarray([t], jnp.int32)
+        yr, ring = attn.attention_forward(params, x[:, t:t + 1], dcfg,
+                                          positions=p1, cache=ring)
+        yf, full = attn.attention_forward(params, x[:, t:t + 1], cfg,
+                                          positions=p1, cache=full)
+        np.testing.assert_allclose(np.asarray(yr), np.asarray(yf),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# serving engine integration
+# ---------------------------------------------------------------------------
+
+def test_engine_sparse_kv_matches_dense():
+    cfg_d = smoke_config("qwen1.5-110b")
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg_d)
+    cfg_s = dataclasses.replace(cfg_d, sparse_mode="dual", sparse_kv=True,
+                                sparse_block_t=8)
+    from repro.serving.engine import Engine, Request
+    outs = {}
+    for name, cfg in (("dense", cfg_d), ("sparse", cfg_s)):
+        eng = Engine(params, cfg, slots=1, capacity=32)
+        eng.submit(Request(uid=0, prompt=[5, 6, 7], max_new_tokens=6))
+        done = eng.run_to_completion()
+        outs[name] = done[0].output
+    assert outs["dense"] == outs["sparse"], outs
+
+
+def test_engine_profile_surfaces_cache_occupancy():
+    cfg = dataclasses.replace(smoke_config("qwen1.5-110b"),
+                              sparse_mode="dual", sparse_kv=True,
+                              sparse_block_t=8)
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    from repro.serving.engine import Engine
+    eng = Engine(params, cfg, slots=1, capacity=32,
+                 rc=RunConfig(kv_quant=True))
+    report = eng.profile_sparsity([1, 2, 3, 4, 5, 6], decode_steps=2)
+    names = [r["name"] for r in report]
+    assert "attn.score" in names and "attn.value" in names
+    occ = [r for r in report if r["name"].startswith("kvcache.")]
+    assert len(occ) == cfg.n_layers
+    for r in occ:
+        assert r["quantized"] is True
+        # 6 prompt + 2 decoded of 32 slots
+        assert r["written_frac"] == pytest.approx(8 / 32)
+        assert r["evicted_frac"] == 0.0
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-110b", "mixtral-8x7b"])
+def test_profile_skipped_blocks_grow_with_context(arch):
+    """Skipped cache blocks grow with context (window-evicted history).
+
+    Both configs run with a sliding window tighter than the context and a
+    cache sized to it, so the per-decode-step schedule stays ~window-sized
+    while the dense block count grows — the skipped remainder must grow
+    strictly with context length.
+    """
+    from repro.serving.engine import Engine
+    cfg = dataclasses.replace(
+        smoke_config(arch), sliding_window=8, sparse_mode="dual",
+        sparse_kv=True, sparse_block_t=8)
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    skipped = []
+    for ctx in (8, 16, 24):
+        eng = Engine(params, cfg, slots=1, capacity=ctx + 8)
+        report = eng.profile_sparsity(list(range(1, ctx + 1)),
+                                      decode_steps=1)
+        skipped.append(sum(r["tiles_skipped"] for r in report
+                           if r["name"] == "attn.score"))
+    assert skipped[0] < skipped[1] < skipped[2], skipped

@@ -1,0 +1,117 @@
+"""Property-based tests of the sparse KV cache planner (DESIGN.md §10).
+
+The invariants the bitmap-scheduled decode path rests on:
+
+* occupancy bitmaps are *monotone* under append — a slot once written
+  never becomes unwritten (ring wrap re-writes, never clears);
+* ring wrap preserves exactly ``min(pos, window)`` live slots — the
+  bitmap never over- or under-counts the ring;
+* front-packed decode schedules never reference an unwritten block: the
+  scheduled head walks occupied blocks only, and the repeat-last tail
+  re-maps to the last scheduled (hence occupied) block.
+
+Runs under the deterministic, derandomized ``ci`` hypothesis profile
+(as in ``test_plan_properties.py``); ``HYPOTHESIS_PROFILE=dev`` explores.
+"""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.models import cache as kvc
+from repro.sparse import kvcache as skv
+from repro.sparse import plan as pln
+
+settings.register_profile("ci", max_examples=30, deadline=None,
+                          derandomize=True)
+settings.register_profile("dev", max_examples=30, deadline=None)
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+
+
+@st.composite
+def _cache_and_writes(draw):
+    cap = draw(st.integers(4, 40))
+    window = draw(st.integers(1, cap))
+    block_t = draw(st.sampled_from([1, 2, 3, 4, 8]))
+    writes = draw(st.lists(st.integers(1, cap + 3), min_size=1,
+                           max_size=6))
+    return cap, window, block_t, writes
+
+
+def _apply_writes(cap, window, block_t, writes):
+    """Drive updates; yield (cache, oracle slot mask, pos) after each."""
+    cache = skv.init_sparse_cache(1, cap, 1, 8, window=window,
+                                  block_t=block_t, dtype=jnp.float32)
+    oracle = np.zeros(cap, bool)
+    pos = 0
+    for s in writes:
+        k = jnp.ones((1, s, 1, 8), jnp.float32)
+        cache = skv.update(cache, k, k)
+        for j in range(s):
+            oracle[(pos + j) % window] = True
+        pos += s
+        yield cache, oracle.copy(), pos
+
+
+@given(ops=_cache_and_writes())
+def test_occupancy_monotone_and_exact(ops):
+    cap, window, block_t, writes = ops
+    prev = np.zeros(cap, bool)
+    for cache, oracle, _pos in _apply_writes(cap, window, block_t,
+                                             writes):
+        occ = np.asarray(skv.occupancy_mask(cache))
+        # exact vs the slot-by-slot ring oracle, and monotone vs previous
+        np.testing.assert_array_equal(occ, oracle)
+        assert np.all(occ >= prev)
+        prev = occ
+        # blk counts are the block-summed bitmap at the derived block_t
+        bt = cache.block_t
+        nb = cache.n_blocks
+        padded = np.zeros(nb * bt, bool)
+        padded[:cap] = oracle
+        np.testing.assert_array_equal(np.asarray(cache.blk),
+                                      padded.reshape(nb, bt).sum(1))
+
+
+@given(ops=_cache_and_writes())
+def test_ring_wrap_preserves_window_live_slots(ops):
+    cap, window, block_t, writes = ops
+    for cache, _oracle, pos in _apply_writes(cap, window, block_t,
+                                             writes):
+        live = int(np.asarray(skv.occupancy_mask(cache)).sum())
+        assert live == min(pos, window)
+        # key_positions agrees: occupied ⇔ a token position is held
+        kpos = np.asarray(kvc.key_positions(cache))
+        np.testing.assert_array_equal(kpos >= 0,
+                                      np.asarray(skv.occupancy_mask(cache)))
+
+
+@given(ops=_cache_and_writes(), qoff=st.integers(0, 8),
+       win=st.sampled_from([None, 2, 5, 9]))
+def test_schedule_never_references_unwritten_block(ops, qoff, win):
+    cap, window, block_t, writes = ops
+    for cache, oracle, pos in _apply_writes(cap, window, block_t,
+                                            writes):
+        qpos = jnp.int32(pos - 1 + qoff)
+        kpos = kvc.key_positions(cache)
+        plan = pln.plan_kv_decode(
+            skv.occupancy_mask(cache), kpos, qpos, win, cache.block_t)
+        sched = plan.blocks
+        idx, count = np.asarray(plan.idx), int(plan.count)
+        bt, nb = cache.block_t, cache.n_blocks
+        padded = np.zeros(nb * bt, bool)
+        padded[:cap] = oracle
+        written_blocks = set(np.flatnonzero(
+            padded.reshape(nb, bt).any(1)).tolist())
+        sched_blocks = np.flatnonzero(np.asarray(sched))
+        # schedule ⊆ written, head enumerates it, tail stays inside it
+        assert set(sched_blocks.tolist()) <= written_blocks
+        np.testing.assert_array_equal(idx[:count], sched_blocks)
+        if count:
+            assert set(idx.tolist()) <= written_blocks
+        else:
+            np.testing.assert_array_equal(idx, 0)
