@@ -19,6 +19,7 @@ gating-born occupancy through the grouped Pallas kernel, asserting the
 executed step count equals the tape's counted steps (DESIGN.md §9).
 """
 import argparse
+import contextlib
 import dataclasses
 
 import jax
@@ -178,7 +179,7 @@ def run_dispatch(smoke: bool = False):
     run_dispatch_moe(smoke=smoke)
 
 
-def run_dispatch_moe(smoke: bool = False):
+def run_dispatch_moe(smoke: bool = False, sharded: bool = False):
     """MoE expert FFNs through the ragged grouped kernel (DESIGN.md §9).
 
     The dynamic side here is the gating itself: each expert's capacity
@@ -189,9 +190,30 @@ def run_dispatch_moe(smoke: bool = False):
     check below is that the *executed* step count equals the tape's
     *counted* steps for every MoE projection, while the XLA fallback
     executes the full dense schedule.
+
+    With ``sharded`` the same sweep runs through the shard_map
+    expert-parallel path on a multi-device host mesh (DESIGN.md §11):
+    experts split over the mesh, capacity buffers sparsified before the
+    expert ``all_to_all``, per-shard plans sliced via the in_specs, and
+    the tape entries psum'd out of the block — the executed-vs-counted
+    assertions are identical to the single-device ones.  Launch with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU.
     """
     d, f, e_experts = (64, 128, 4) if smoke else (256, 512, 8)
     seq = 32 if smoke else 128
+    mesh = rules = None
+    if sharded:
+        ndev = jax.device_count()
+        if ndev < 2:
+            raise SystemExit(
+                "--sharded needs a multi-device host mesh; set "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        # experts must divide evenly over the mesh or _moe_shard_map
+        # falls back to the replicated/TP branch — round up so the EP
+        # all_to_all branch the header advertises actually runs
+        e_experts = -(-max(e_experts, ndev) // ndev) * ndev
+        mesh = jax.make_mesh((1, ndev), ("data", "model"))
+        rules = {"experts": "model", "batch": "data", "mlp": "model"}
     # interpret-mode grids pay per grid step: keep blocks coarse enough
     # that the non-smoke sweep stays interactive on CPU
     bm, bn, sk = (8, 16, 16) if smoke else (16, 32, 32)
@@ -211,13 +233,18 @@ def run_dispatch_moe(smoke: bool = False):
                                           slice_k=cfg.sparse_slice_k)
     x = jnp.asarray(RNG.normal(size=(1, seq, d)).astype(np.float32))
 
-    print("# MoE grouped dispatch: executed vs counted steps "
+    where = (f"shard_map EP over {jax.device_count()} devices"
+             if sharded else "single device")
+    print(f"# MoE grouped dispatch ({where}): executed vs counted steps "
           "(dense | weight | dual; kernel on non-dense)")
     results = {}
     for mode in ("dense", "weight", "dual"):
         mcfg = dataclasses.replace(cfg, sparse_mode=mode,
                                    sparse_use_kernel=mode != "dense")
-        with sp.tape.collect() as entries:
+        with sp.tape.collect() as entries, contextlib.ExitStack() as st:
+            if sharded:
+                st.enter_context(mesh)
+                st.enter_context(nn.axis_rules(rules, mesh=mesh))
             y, _ = moem.moe_forward(params, x, mcfg, plans=plans)
         y.block_until_ready()
         per_layer = [e for e in sp.tape.summarize(entries)
@@ -332,7 +359,8 @@ def run_decode(smoke: bool = False):
     ctx = ctxs[0]
     cfg = dataclasses.replace(_decode_cfg("kernel_check", 0),
                               sparse_use_kernel=True)
-    dcfg = dataclasses.replace(cfg, sparse_mode="dense", sparse_kv=False)
+    dcfg = dataclasses.replace(cfg, sparse_mode="dense", sparse_kv=False,
+                               sparse_use_kernel=False)
     params, _ = nn.unzip(attn.init_attention(jax.random.PRNGKey(1), cfg))
     x = jnp.asarray(RNG.normal(size=(1, ctx + 1, cfg.d_model)) * 0.3,
                     jnp.float32)
@@ -370,8 +398,15 @@ if __name__ == "__main__":
                     help="only run the dispatch benchmark")
     ap.add_argument("--decode-only", action="store_true",
                     help="only run the KV-cache decode dispatch report")
+    ap.add_argument("--sharded", action="store_true",
+                    help="only run the MoE dispatch report through the "
+                         "shard_map EP path on a multi-device host mesh "
+                         "(set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     args = ap.parse_args()
-    if args.decode_only:
+    if args.sharded:
+        run_dispatch_moe(smoke=args.smoke, sharded=True)
+    elif args.decode_only:
         run_decode(smoke=args.smoke)
     else:
         if not args.skip_fig22:

@@ -67,6 +67,22 @@ class ModelConfig:
     # sub-quadratic capability (decides long_500k applicability)
     subquadratic: bool = False
 
+    def __post_init__(self):
+        # the model-side dense short-circuits (moe/mlp/attention/lm_head)
+        # never reach the dispatch layer, so this misconfiguration must
+        # be caught at the config, not one layer down: sparse_use_kernel
+        # only ever executes a condensed schedule, which dense mode does
+        # not build — silently executing dense would contradict what the
+        # flag promises (ISSUE 4 / DESIGN.md §11).
+        if self.sparse_mode == "dense" and self.sparse_use_kernel:
+            import warnings
+            warnings.warn(
+                f"ModelConfig(name={self.name!r}): sparse_use_kernel has "
+                "no effect with sparse_mode='dense' — the Pallas kernels "
+                "only run condensed schedules; all matmuls will execute "
+                "dense XLA (executed == dense steps)",
+                RuntimeWarning, stacklevel=3)
+
     @property
     def hd(self) -> int:
         return self.head_dim or self.d_model // self.n_heads

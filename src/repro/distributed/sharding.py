@@ -164,6 +164,39 @@ def tree_shardings(mesh: Mesh, pspec_tree):
 
 
 # ---------------------------------------------------------------------------
+# sparse-plan activity specs (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def moe_plan_specs(ep_axis, *, ep_mode: bool,
+                   down_k_shardable: bool) -> Dict[str, PartitionSpec]:
+    """PartitionSpecs for the cached MoE weight-plan slice activities.
+
+    The plans pytree (``sparse.weights.plan_layer_weights``) carries one
+    bool activity per expert weight — ``w_up``/``w_gate`` ``(E, S_d, f)``
+    and ``w_down`` ``(E, S_f, d)``.  They ride into the shard_map MoE
+    block alongside the weights, sliced by in_spec exactly like the
+    weight they plan:
+
+    * expert-parallel — the expert axis is sharded; S and N axes travel
+      whole (slicing a plan along a fiber axis *is* the per-shard plan,
+      ``plan.shard_plan``);
+    * tensor-parallel — ``w_up``/``w_gate`` shard their f (output) axis;
+      ``w_down`` shards its S axis **only** when shard boundaries align
+      with slice boundaries (``plan.kplan_shardable``) — callers drop
+      the cache otherwise and re-plan from the local weight shard.
+    """
+    if ep_mode:
+        spec = PartitionSpec(ep_axis, None, None)
+        return {"w_up": spec, "w_gate": spec, "w_down": spec}
+    return {
+        "w_up": PartitionSpec(None, None, ep_axis),
+        "w_gate": PartitionSpec(None, None, ep_axis),
+        "w_down": (PartitionSpec(None, ep_axis, None)
+                   if down_k_shardable else PartitionSpec()),
+    }
+
+
+# ---------------------------------------------------------------------------
 # input / cache / optimizer specs
 # ---------------------------------------------------------------------------
 

@@ -220,13 +220,15 @@ def attend_sparse(q: jax.Array, cache, cfg: ModelConfig, *,
                                 qpos[0], window)
     bt = pln.effective_slice_k(t, cfg.sparse_block_t)
     sk_hd = pln.effective_slice_k(hd, cfg.sparse_slice_k)
-    kw = dict(mode=cfg.sparse_mode, use_kernel=cfg.sparse_use_kernel,
-              out_dtype=jnp.float32)
+    # f32 accumulation pinned through the dispatch kwargs so the XLA
+    # fallback matches dense attention bit-for-bit (DESIGN.md §10);
+    # per-matmul geometry overrides the config defaults below
+    kw = sp.dispatch.kwargs_from_config(cfg, out_dtype=jnp.float32)
 
     x_k = skvc.score_operand(kd_e, sched, sk_hd)
     scores_t, _ = sp.grouped_matmul(
-        x_k, qw, block_m=cfg.sparse_block_t, block_n=cfg.sparse_block_n,
-        slice_k=cfg.sparse_slice_k, name="attn.score", **kw)
+        x_k, qw, name="attn.score",
+        **{**kw, "block_m": cfg.sparse_block_t})
     scores = scores_t.reshape(b, kvh, t, g).transpose(0, 1, 3, 2)
     scores = scores[:, :, :, None, :] * (hd ** -0.5)   # (B,KV,G,1,T)
 
@@ -240,8 +242,8 @@ def attend_sparse(q: jax.Array, cache, cfg: ModelConfig, *,
     p_e = e[:, :, :, 0, :].reshape(ne, g, t)
     x_p, w_v = skvc.value_operands(cache, p_e, vd_e, sched, bt)
     acc_e, _ = sp.grouped_matmul(
-        x_p, w_v, block_m=cfg.sparse_block_m, block_n=cfg.sparse_block_n,
-        slice_k=cfg.sparse_block_t, name="attn.value", **kw)
+        x_p, w_v, name="attn.value",
+        **{**kw, "slice_k": cfg.sparse_block_t})
 
     acc = acc_e.reshape(b, kvh, g, hd)[:, None]        # (B,1,KV,G,hd)
     l = l.transpose(0, 3, 1, 2)                        # (B,1,KV,G)

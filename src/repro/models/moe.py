@@ -39,8 +39,9 @@ def init_moe(key, cfg: ModelConfig):
     return p
 
 
-def _expert_ffn(params: Dict, xe: jax.Array, cfg: ModelConfig,
-                plans=None) -> jax.Array:
+def _expert_ffn(params: Dict, xe, cfg: ModelConfig, plans=None, *,
+                collect_stats: bool = False,
+                out_dtype=None) -> Tuple[jax.Array, Dict]:
     """Batched expert FFN over stacked weights (EP axis = experts).
 
     With a non-dense ``cfg.sparse_mode`` the per-expert matmuls route
@@ -52,28 +53,50 @@ def _expert_ffn(params: Dict, xe: jax.Array, cfg: ModelConfig,
     the ragged grouped Pallas kernel executes those condensed schedules
     in one grid over all experts (DESIGN.md §9) instead of falling back
     to the XLA einsum.
+
+    This is the *shard-local* FFN: the shard_map path (DESIGN.md §11)
+    calls it inside its block on device-local buffers — ``xe`` may then
+    be a :class:`~repro.sparse.SparseActivation` whose metadata rode the
+    expert ``all_to_all``, and ``params``/``plans`` the per-shard weight
+    and plan slices.  Returns ``(ye, steps)``: ``steps`` maps tape names
+    to the StepCounts of each routed matmul when ``collect_stats`` (the
+    shard_map path psums them across the mesh and records them outside
+    the traced block), empty otherwise.  ``out_dtype`` (optional)
+    forwards to every routed matmul's accumulation dtype for callers
+    that need it pinned; by default accumulation follows the operand
+    dtype, matching the dense einsum branch.
     """
     dt = xe.dtype
+    steps: Dict[str, object] = {}
     if cfg.sparse_mode == "dense":
-        h = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(dt))
-        gate = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(dt)) \
+        xv = xe.values if isinstance(xe, sp.SparseActivation) else xe
+        h = jnp.einsum("ecd,edf->ecf", xv, params["w_up"].astype(dt))
+        gate = jnp.einsum("ecd,edf->ecf", xv, params["w_gate"].astype(dt)) \
             if "w_gate" in params else None
         h = _activate(h, gate, cfg.mlp_type)
         h = nn.shard_act(h, "experts", "expert_cap", None)
-        return jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(dt))
+        return jnp.einsum("ecf,efd->ecd", h,
+                          params["w_down"].astype(dt)), steps
 
-    kw = sp.dispatch.kwargs_from_config(cfg)
+    kw = sp.dispatch.kwargs_from_config(cfg, out_dtype=out_dtype)
+    kw["collect_stats"] = collect_stats
     sk = sp.plan.effective_slice_k(xe.shape[-1], cfg.sparse_slice_k)
-    # weight mode never reads activation metadata, so skip the encode
-    x_in = sp.sparsify(xe, slice_k=sk) if cfg.sparse_mode == "dual" else xe
-    h, _ = sp.grouped_matmul(
+    # weight mode never reads activation metadata, so skip the encode;
+    # an xe that is already a SparseActivation (shard_map EP branch)
+    # carries the pre-permute bitmap — never re-encode it
+    if isinstance(xe, sp.SparseActivation):
+        x_in = xe if cfg.sparse_mode == "dual" else xe.values
+    else:
+        x_in = sp.sparsify(xe, slice_k=sk) \
+            if cfg.sparse_mode == "dual" else xe
+    h, steps["moe.up"] = sp.grouped_matmul(
         x_in,
         sp.weights.planned_or_array(params["w_up"], plans, "w_up", dt,
                                     cfg.sparse_slice_k),
         name="moe.up", **kw)
     gate = None
     if "w_gate" in params:
-        gate, _ = sp.grouped_matmul(
+        gate, steps["moe.gate"] = sp.grouped_matmul(
             x_in,
             sp.weights.planned_or_array(params["w_gate"], plans, "w_gate",
                                         dt, cfg.sparse_slice_k),
@@ -86,11 +109,11 @@ def _expert_ffn(params: Dict, xe: jax.Array, cfg: ModelConfig,
             lambda v: nn.shard_act(v, "experts", "expert_cap", None))
     else:
         h = nn.shard_act(h, "experts", "expert_cap", None)
-    ye, _ = sp.grouped_matmul(
+    ye, steps["moe.down"] = sp.grouped_matmul(
         h, sp.weights.planned_or_array(params["w_down"], plans, "w_down",
                                        dt, cfg.sparse_slice_k),
         name="moe.down", **kw)
-    return ye
+    return ye, {k: v for k, v in steps.items() if v is not None}
 
 
 def moe_forward(params: Dict, x: jax.Array, cfg: ModelConfig,
@@ -107,11 +130,14 @@ def moe_forward(params: Dict, x: jax.Array, cfg: ModelConfig,
     tests), a single-device scatter/gather path runs instead.
 
     ``plans`` carries cached weight-side slice activities (sparse
-    dispatch); the shard_map path currently ignores them and runs dense —
-    sharded sparse expert matmul is ROADMAP follow-on work.
+    dispatch); both paths honor them — the shard_map path slices them
+    per shard via its in_specs and routes the local expert matmuls
+    through the same :func:`repro.sparse.grouped_matmul` as the
+    single-device path, so every non-dense ``sparse_mode`` means the
+    same thing on 1 device and N devices (DESIGN.md §11).
     """
     if nn.current_mesh() is not None:
-        return _moe_shard_map(params, x, cfg)
+        return _moe_shard_map(params, x, cfg, plans=plans)
     return _moe_local(params, x, cfg, plans=plans)
 
 
@@ -151,7 +177,7 @@ def _moe_local(params: Dict, x: jax.Array, cfg: ModelConfig, plans=None
     for j in range(k):
         xe = xe.at[dest_e[:, j], dest_p[:, j]].set(xt, mode="drop")
     xe = nn.shard_act(xe[:e], "experts", "expert_cap", None)
-    ye = _expert_ffn(params, xe, cfg, plans=plans)
+    ye, _ = _expert_ffn(params, xe, cfg, plans=plans)
     ye = nn.shard_act(ye, "experts", "expert_cap", None)
 
     # gather back with gate weights, again one k-choice at a time
@@ -206,10 +232,34 @@ def _combine_local(ye, dest_e, dest_p, kept, top_g, e, dtype):
     return y
 
 
-def _moe_shard_map(params: Dict, x: jax.Array, cfg: ModelConfig
-                   ) -> Tuple[jax.Array, jax.Array]:
+def _moe_shard_map(params: Dict, x: jax.Array, cfg: ModelConfig,
+                   plans=None) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel / tensor-parallel MoE block (DESIGN.md §11).
+
+    Non-dense ``cfg.sparse_mode`` routes the shard-local expert matmuls
+    through the same :func:`_expert_ffn` as the single-device path:
+
+    * EP branch — the capacity buffers are sparsified *before* the
+      expert ``all_to_all``; the packed bitmap and slice activity ride a
+      second (small) ``all_to_all`` through the same permute, so the
+      post-permute operand plans from cached metadata, never re-encoding
+      the permuted values;
+    * TP branch — experts replicated, FFN dim tensor-parallel; the
+      partial down-projections psum exactly as before;
+    * cached weight plans slice per shard through the in_specs
+      (``plan.shard_plan`` fiber-axis identity; the TP ``w_down`` k-plan
+      only when ``plan.kplan_shardable`` — dropped with a one-time
+      warning otherwise, re-planned on the fly, stats unchanged).
+
+    StepCounts are collected *inside* the block with the tape suppressed
+    (in-block records would be tracers), psum'd over the whole mesh, and
+    recorded to the tape outside the traced region — so
+    ``engine.profile_sparsity`` reports executed-vs-counted steps for
+    the sharded path exactly like the local one.
+    """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+    from repro.distributed import sharding as shd
 
     mesh = nn.current_mesh()
     rules = nn.current_rules()
@@ -238,8 +288,41 @@ def _moe_shard_map(params: Dict, x: jax.Array, cfg: ModelConfig
     cap = max(8, -(-int(cfg.capacity_factor * t_loc * k / e) // 8) * 8)
     f = cfg.d_ff
     has_gate = "w_gate" in params
+    sparse_on = cfg.sparse_mode != "dense"
+    # record per-projection StepCounts only when a tape is listening —
+    # the plan AND/argsort is not free, so the un-profiled hot path
+    # skips it unless the kernel itself needs the schedule
+    collect = sparse_on and sp.tape.active()
+    step_names = (("moe.up", "moe.gate", "moe.down") if has_gate
+                  else ("moe.up", "moe.down")) if collect else ()
+    all_axes = tuple(mesh.axis_names)
 
-    def block(x_blk, router, w_up, w_gate, w_down):
+    # per-shard views of the cached weight-side plans (DESIGN.md §11):
+    # the in_specs slice each activity exactly like the weight it plans
+    down_ok = ep_mode or sp.plan.kplan_shardable(f, tp,
+                                                 cfg.sparse_slice_k)
+    plan_specs = shd.moe_plan_specs(ep_axis, ep_mode=ep_mode,
+                                    down_k_shardable=down_ok)
+    has_plan = {}
+    plan_args = []
+    plan_in_specs = []
+    for key in ("w_up", "w_gate", "w_down"):
+        arr = (plans or {}).get(key) if sparse_on else None
+        if key == "w_down" and arr is not None and not down_ok:
+            sp.dispatch.warn_once(
+                f"moe:w_down-plan-unshardable:{f}:{tp}:"
+                f"{cfg.sparse_slice_k}",
+                f"moe shard_map: cached w_down k-plan cannot be sliced "
+                f"over {tp} tensor-parallel shards (d_ff={f} does not "
+                f"align with slice_k={cfg.sparse_slice_k} boundaries); "
+                "re-planning from the local weight shard instead "
+                "(bit-identical schedule, stats unchanged)")
+            arr = None
+        has_plan[key] = arr is not None
+        plan_args.append(arr if arr is not None else jnp.zeros((), x.dtype))
+        plan_in_specs.append(plan_specs[key] if arr is not None else P())
+
+    def block(x_blk, router, w_up, w_gate, w_down, p_up, p_gate, p_down):
         # x_blk: (b/dp, s, d); experts/ffn sharded per mode
         xt = x_blk.reshape(-1, d)
         # router weights arrive embed-sharded (FSDP): gather over dp
@@ -248,7 +331,7 @@ def _moe_shard_map(params: Dict, x: jax.Array, cfg: ModelConfig
                                         tiled=True)
             w_up = jax.lax.all_gather(w_up, dp_axis_names, axis=1,
                                       tiled=True)
-            if w_gate is not None:
+            if has_gate:
                 w_gate = jax.lax.all_gather(w_gate, dp_axis_names, axis=1,
                                             tiled=True)
         gates = jax.nn.softmax(
@@ -256,29 +339,42 @@ def _moe_shard_map(params: Dict, x: jax.Array, cfg: ModelConfig
         xe, dest_e, dest_p, kept, top_g, top_i = _dispatch_local(
             xt, gates, e, k, cap)
 
-        if ep_mode:
-            # EP: all_to_all expert dim over the model axis
-            xr = jax.lax.all_to_all(xe, tp_axis_names[0], split_axis=0,
-                                    concat_axis=1, tiled=True)
-            # xr: (E/tp, tp*cap, d); local expert weights (E/tp, d, f)
-            h = jnp.einsum("ecd,edf->ecf", xr, w_up.astype(xr.dtype))
-            gate = jnp.einsum("ecd,edf->ecf", xr,
-                              w_gate.astype(xr.dtype)) \
-                if w_gate is not None else None
-            h = _activate(h, gate, cfg.mlp_type)
-            yr = jnp.einsum("ecf,efd->ecd", h, w_down.astype(xr.dtype))
-            ye = jax.lax.all_to_all(yr, tp_axis_names[0], split_axis=1,
-                                    concat_axis=0, tiled=True)
-        else:
-            # E ∤ tp: experts replicated, FFN dim tensor-parallel
-            h = jnp.einsum("ecd,edf->ecf", xe, w_up.astype(xe.dtype))
-            gate = jnp.einsum("ecd,edf->ecf", xe,
-                              w_gate.astype(xe.dtype)) \
-                if w_gate is not None else None
-            h = _activate(h, gate, cfg.mlp_type)
-            ye = jnp.einsum("ecf,efd->ecd", h, w_down.astype(xe.dtype))
-            if tp_axis_names:
-                ye = jax.lax.psum(ye, tp_axis_names)
+        wloc = {"w_up": w_up, "w_down": w_down}
+        if has_gate:
+            wloc["w_gate"] = w_gate
+        ploc = {key: p for key, p in
+                zip(("w_up", "w_gate", "w_down"), (p_up, p_gate, p_down))
+                if has_plan[key]}
+        with nn.manual_axes(), sp.tape.suppress():
+            if ep_mode:
+                def a2a(v, split=0, concat=1):
+                    return jax.lax.all_to_all(
+                        v, tp_axis_names[0], split_axis=split,
+                        concat_axis=concat, tiled=True)
+                if cfg.sparse_mode == "dual":
+                    # encode on the pre-permute buffers; the metadata
+                    # (packed bitmap + slice activity) rides its own
+                    # small all_to_all through the same expert permute
+                    sk = sp.plan.effective_slice_k(d, cfg.sparse_slice_k)
+                    xs = sp.sparsify(xe, slice_k=sk)
+                    xr = sp.SparseActivation(
+                        values=a2a(xs.values),
+                        bitmap=a2a(xs.bitmap),
+                        slice_act=a2a(xs.slice_act.astype(jnp.uint8)
+                                      ).astype(bool),
+                        slice_k=sk)
+                else:
+                    xr = a2a(xe)
+                # xr: (E/tp, tp*cap, d); local expert weights (E/tp, d, f)
+                yr, st = _expert_ffn(wloc, xr, cfg, plans=ploc or None,
+                                     collect_stats=collect)
+                ye = a2a(yr, split=1, concat=0)
+            else:
+                # E ∤ tp: experts replicated, FFN dim tensor-parallel
+                ye, st = _expert_ffn(wloc, xe, cfg, plans=ploc or None,
+                                     collect_stats=collect)
+                if tp_axis_names:
+                    ye = jax.lax.psum(ye, tp_axis_names)
 
         y = _combine_local(ye, dest_e, dest_p, kept, top_g, e, xt.dtype)
 
@@ -288,7 +384,13 @@ def _moe_shard_map(params: Dict, x: jax.Array, cfg: ModelConfig
         aux = e * jnp.sum(density * router_prob)
         if dp_axis_names:
             aux = jax.lax.pmean(aux, dp_axis_names)
-        return y.reshape(x_blk.shape), aux
+        if collect:
+            # mesh-total schedule: every device's counted steps summed
+            st = jax.tree_util.tree_map(
+                lambda v: jax.lax.psum(v, all_axes), st)
+        else:
+            st = {}
+        return y.reshape(x_blk.shape), aux, st
 
     dpP = dp_axis if dp_axis else None
     if ep_mode:
@@ -301,14 +403,21 @@ def _moe_shard_map(params: Dict, x: jax.Array, cfg: ModelConfig
                 P(dpP, None),                    # router (d, E)
                 up_spec,                         # w_up
                 up_spec if has_gate else P(),    # w_gate
-                down_spec)                       # w_down
-    out_specs = (P(dpP, None, None), P())
+                down_spec,                       # w_down
+                *plan_in_specs)                  # cached plan activities
+    out_specs = (P(dpP, None, None), P(),
+                 {name: P() for name in step_names})
 
     fn = shard_map(block, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs, check_rep=False)
     w_gate = params.get("w_gate")
     if w_gate is None:
         w_gate = jnp.zeros((), x.dtype)  # placeholder, unused
-    y, aux = fn(x, params["router"], params["w_up"], w_gate,
-                params["w_down"])
+    y, aux, st = fn(x, params["router"], params["w_up"], w_gate,
+                    params["w_down"], *plan_args)
+    # recorded outside the traced block, where the psum'd totals are
+    # concrete (profile paths run eager — see sparse.tape)
+    for name in step_names:
+        sp.tape.record(name, st[name],
+                       st[name].sparse if cfg.sparse_use_kernel else None)
     return nn.shard_act(y, "batch", "seq_res", "embed"), aux

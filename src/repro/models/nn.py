@@ -142,6 +142,26 @@ _AXIS_SIZES: contextvars.ContextVar[Optional[Dict[str, int]]] = \
     contextvars.ContextVar("mesh_axis_sizes", default=None)
 _MESH: contextvars.ContextVar[Optional[Any]] = \
     contextvars.ContextVar("mesh", default=None)
+_MANUAL: contextvars.ContextVar[bool] = \
+    contextvars.ContextVar("shard_map_manual", default=False)
+
+
+@contextlib.contextmanager
+def manual_axes():
+    """Mark the enclosing trace as a ``shard_map`` body.
+
+    Inside a shard_map block every array is already the device-local
+    shard, so GSPMD sharding constraints are meaningless there (the mesh
+    axes are consumed by the block's in_specs).  :func:`shard_act`
+    becomes a no-op under this context, letting shared model code
+    (``moe._expert_ffn``) run unchanged on both the GSPMD and the
+    shard_map paths.
+    """
+    token = _MANUAL.set(True)
+    try:
+        yield
+    finally:
+        _MANUAL.reset(token)
 
 
 def current_mesh():
@@ -164,7 +184,10 @@ def mesh_axis_size(name) -> int:
 
 
 def shard_act(x: jax.Array, *axes: Optional[str]) -> jax.Array:
-    """Constrain activation sharding by logical names (no-op w/o rules)."""
+    """Constrain activation sharding by logical names (no-op w/o rules
+    and inside shard_map bodies — see :func:`manual_axes`)."""
+    if _MANUAL.get():
+        return x
     spec = resolve_spec(axes, x.shape)
     if spec is None:
         return x

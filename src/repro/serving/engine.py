@@ -90,6 +90,13 @@ class Engine:
         grouped MoE kernel, DESIGN.md §9), equal to ``dense_steps`` on
         the XLA fallbacks.
 
+        Runs under an active mesh too: the shard_map MoE path collects
+        its StepCounts inside the block with the tape suppressed, psums
+        them across the mesh, and records the totals outside the traced
+        region (DESIGN.md §11) — so on N devices the ``moe.*`` entries
+        report mesh-total executed-vs-counted steps, comparable
+        entry-for-entry with the single-device run.
+
         ``decode_steps > 0`` additionally greedy-decodes that many
         tokens eagerly, so with ``cfg.sparse_kv`` the bitmap-scheduled
         decode path (DESIGN.md §10) records its ``attn.score`` /

@@ -38,9 +38,11 @@ from repro.sparse.plan import (  # noqa: F401
     counts_to_steps,
     front_pack,
     grouped_counts_to_steps,
+    kplan_shardable,
     plan_from_activity,
     plan_grouped_activity,
     plan_operands,
+    shard_plan,
     slice_activity_lhs,
     slice_activity_rhs,
 )

@@ -31,6 +31,7 @@ the math.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional, Tuple, Union
 
 import jax
@@ -47,12 +48,38 @@ Weight = Union[jax.Array, PlannedWeight]
 
 MODES = ("dense", "weight", "dual")
 
+# keys already warned about — configuration mismatches (a kernel that
+# cannot run, a cached plan that cannot be sliced) must be *audible*, but
+# once per process, not once per matmul
+_WARNED: set = set()
 
-def kwargs_from_config(cfg) -> dict:
-    """Dispatch kwargs from a ``ModelConfig``'s sparse_* fields."""
-    return dict(mode=cfg.sparse_mode, block_m=cfg.sparse_block_m,
-                block_n=cfg.sparse_block_n, slice_k=cfg.sparse_slice_k,
-                use_kernel=cfg.sparse_use_kernel)
+
+def warn_once(key: str, message: str) -> None:
+    """Emit ``message`` as a RuntimeWarning the first time ``key`` fires.
+
+    The dispatch layer's contract is that an unsupported combination
+    never *silently* changes what the stats tape reports — it either
+    raises or warns here (ISSUE 4 / DESIGN.md §11)."""
+    if key not in _WARNED:
+        _WARNED.add(key)
+        warnings.warn(message, RuntimeWarning, stacklevel=3)
+
+
+def kwargs_from_config(cfg, out_dtype=None) -> dict:
+    """Dispatch kwargs from a ``ModelConfig``'s sparse_* fields.
+
+    ``out_dtype`` (optional) rides along to the dispatch entry points —
+    the sparse KV decode path (``attention.attend_sparse``) pins f32
+    accumulation through it so the XLA fallback matches dense attention
+    bit-for-bit; ``moe._expert_ffn`` forwards it the same way for
+    callers that need a pinned accumulation dtype.
+    """
+    kw = dict(mode=cfg.sparse_mode, block_m=cfg.sparse_block_m,
+              block_n=cfg.sparse_block_n, slice_k=cfg.sparse_slice_k,
+              use_kernel=cfg.sparse_use_kernel)
+    if out_dtype is not None:
+        kw["out_dtype"] = out_dtype
+    return kw
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -144,6 +171,12 @@ def matmul(
     want_stats = collect_stats or tape.active()
     steps = None
     if mode == "dense":
+        if use_kernel:
+            warn_once(
+                "matmul:dense+use_kernel",
+                "sparse.matmul: use_kernel has no effect in dense mode — "
+                "the block-skip kernel only runs a condensed schedule; "
+                "executing the XLA matmul (executed == dense steps)")
         y = _xla_matmul()
         if want_stats:
             dense = jnp.asarray(mt * nt * s)
@@ -254,6 +287,12 @@ def grouped_matmul(
     want_stats = collect_stats or tape.active()
     run_kernel = use_kernel and mode != "dense"
     steps = None
+    if use_kernel and not run_kernel:
+        warn_once(
+            "grouped_matmul:dense+use_kernel",
+            "sparse.grouped_matmul: use_kernel has no effect in dense "
+            "mode — the ragged grouped kernel only runs a condensed "
+            "schedule; executing the XLA einsum (executed == dense steps)")
     if mode == "dense":
         y = _xla_grouped()
         if want_stats:

@@ -187,6 +187,50 @@ def plan_operands(a: jax.Array, b: jax.Array, block_m: int, block_n: int,
 
 
 # ---------------------------------------------------------------------------
+# shard-local plans (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def shard_plan(ks: jax.Array, counts: jax.Array, start: int, size: int,
+               axis: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Restrict a front-packed schedule to a contiguous fiber range.
+
+    ks (..., S) / counts (...) along a leading fiber axis (expert axis of
+    a grouped plan, or block-row axis of a 2-D plan).  Because
+    :func:`front_pack` is independent per fiber, slicing the *plan* along
+    a fiber axis is exactly the plan of the sliced *activity* — the
+    identity the shard_map MoE path rests on: each device's in_spec slice
+    of the global plan is its local plan, no re-planning needed
+    (pinned by ``tests/test_plan_properties.py``).
+    """
+    return (jax.lax.slice_in_dim(ks, start, start + size, axis=axis),
+            jax.lax.slice_in_dim(counts, start, start + size, axis=axis))
+
+
+def kplan_shardable(k: int, n_shards: int, slice_k: int = SLICE_K) -> bool:
+    """Can a cached k-side slice activity be viewed per-shard?
+
+    When a weight's contraction axis of depth ``k`` is split ``n_shards``
+    ways (tensor-parallel ``w_down``), the cached ``(…, S, N)`` activity
+    can be sliced along S into valid per-shard plans only if shard
+    boundaries align with slice boundaries *and* the dispatch clamps to
+    the same granularity locally as globally (``effective_slice_k``).
+    Fibers along S are **not** independent under :func:`front_pack`
+    (indices shift), so unlike :func:`shard_plan` this slices the
+    *activity*, never a packed schedule — callers re-run the front-pack
+    on the shard-local activity.  Returns False when the view would be
+    invalid; callers then drop the cache and re-plan from the local
+    weight shard (bit-identical, just unbuffered).
+    """
+    if n_shards <= 1:
+        return True
+    if k % n_shards:
+        return False
+    k_loc = k // n_shards
+    sk = effective_slice_k(k, slice_k)
+    return effective_slice_k(k_loc, slice_k) == sk and k_loc % sk == 0
+
+
+# ---------------------------------------------------------------------------
 # decode-path KV-cache planning (DESIGN.md §10)
 # ---------------------------------------------------------------------------
 

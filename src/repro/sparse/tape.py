@@ -44,6 +44,26 @@ def collect():
         _TAPE.reset(token)
 
 
+@contextlib.contextmanager
+def suppress():
+    """Deactivate the tape for a region (recording becomes a no-op).
+
+    Needed around code that is *traced* while a tape is active — most
+    importantly ``shard_map`` blocks: the block body executes at trace
+    time, so in-block :func:`record` calls would append tracers that
+    :func:`summarize` cannot concretise.  Such callers run their
+    dispatches with ``collect_stats=True`` under ``suppress()``, reduce
+    the returned StepCounts across the mesh (``psum``), and record the
+    concrete totals outside the traced region (see
+    ``repro.models.moe._moe_shard_map``).
+    """
+    token = _TAPE.set(None)
+    try:
+        yield
+    finally:
+        _TAPE.reset(token)
+
+
 def active() -> bool:
     return _TAPE.get() is not None
 

@@ -14,7 +14,7 @@ import os
 import re
 import shutil
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.training import checkpoint as ckpt
 
@@ -73,21 +73,30 @@ class CheckpointManager:
 
 
 class StragglerMonitor:
-    """Rolling-median step timer; flags steps slower than ratio×median."""
+    """Rolling-median step timer; flags steps slower than ratio×median.
 
-    def __init__(self, window: int = 32, ratio: float = 2.0):
+    ``clock`` is injectable (defaults to ``time.monotonic``) so tests —
+    and deployments with their own time source — drive it
+    deterministically: the sleep-based version of the test flaked
+    whenever parallel pytest load stretched a wall-clock sleep past the
+    ratio threshold.
+    """
+
+    def __init__(self, window: int = 32, ratio: float = 2.0,
+                 clock: Callable[[], float] = time.monotonic):
         self.window = window
         self.ratio = ratio
+        self.clock = clock
         self.times: List[float] = []
         self.flags = 0
         self._t0: Optional[float] = None
 
     def __enter__(self):
-        self._t0 = time.monotonic()
+        self._t0 = self.clock()
         return self
 
     def __exit__(self, *exc):
-        dt = time.monotonic() - self._t0
+        dt = self.clock() - self._t0
         hist = sorted(self.times[-self.window:])
         if hist:
             med = hist[len(hist) // 2]

@@ -109,11 +109,18 @@ def test_run_with_restarts(tmp_path):
 
 
 def test_straggler_monitor():
-    import time
-    mon = StragglerMonitor(window=8, ratio=1.5)
+    # fake clock: deterministic under arbitrary parallel pytest load
+    # (the sleep-based version flaked whenever a stretched wall-clock
+    # sleep crossed the ratio threshold)
+    t = {"now": 0.0}
+    mon = StragglerMonitor(window=8, ratio=1.5, clock=lambda: t["now"])
     for _ in range(6):
         with mon:
-            time.sleep(0.01)
+            t["now"] += 0.01
     with mon:
-        time.sleep(0.08)
+        t["now"] += 0.08  # 8x the median: flagged
     assert mon.flags == 1
+    with mon:
+        t["now"] += 0.01  # back at the median: not flagged
+    assert mon.flags == 1
+    assert abs(mon.median - 0.01) < 1e-9

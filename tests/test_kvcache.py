@@ -102,7 +102,8 @@ def test_plan_kv_decode_blocks():
 ])
 def test_decode_parity_vs_dense(rng, window, quant, use_kernel):
     cfg = _attn_cfg(sliding_window=window, sparse_use_kernel=use_kernel)
-    dcfg = dataclasses.replace(cfg, sparse_mode="dense")
+    dcfg = dataclasses.replace(cfg, sparse_mode="dense",
+                               sparse_use_kernel=False)
     from repro.models import nn
     params, _ = nn.unzip(attn.init_attention(jax.random.PRNGKey(0), cfg))
     s, cap = 20, 32
@@ -167,7 +168,8 @@ def test_decode_records_scheduled_vs_skipped(rng):
 def test_swa_sparse_matches_ring_dense(rng):
     """Full-capacity sparse SWA cache ≡ the dense ring cache (1e-4)."""
     cfg = _attn_cfg(sliding_window=8)
-    dcfg = dataclasses.replace(cfg, sparse_mode="dense")
+    dcfg = dataclasses.replace(cfg, sparse_mode="dense",
+                               sparse_use_kernel=False)
     from repro.models import nn
     params, _ = nn.unzip(attn.init_attention(jax.random.PRNGKey(0), cfg))
     s = 20

@@ -1,5 +1,10 @@
 """MoE units: dispatch correctness vs dense per-token reference,
-capacity drops, shard_map EP path on a host mesh."""
+capacity drops, shard_map EP path on a host mesh.
+
+The shard_map sparse-dispatch tests here run on the in-process (1, 1)
+mesh (single device), which exercises the replicated/TP branch of
+``_moe_shard_map`` end-to-end; the forced 8-device EP ``all_to_all``
+split lives in ``tests/test_moe_sharded.py`` (subprocess)."""
 import dataclasses
 
 import numpy as np
@@ -7,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import sparse as sp
 from repro.configs import smoke_config
 from repro.models import moe, nn
 
@@ -69,6 +75,46 @@ def test_shard_map_path_matches_local(setup):
             params, x)
     np.testing.assert_allclose(np.asarray(y_sm), np.asarray(y_local),
                                rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("mode,use_kernel",
+                         [("weight", False), ("dual", False),
+                          ("dual", True)])
+def test_shard_map_sparse_matches_dense(setup, mode, use_kernel):
+    """Non-dense sparse_mode means the same thing on the shard_map path
+    as on the single-device path: same numerics (≤1e-4 vs dense), same
+    counted steps as the local sparse run, and executed == counted on
+    the kernel path (the tape entries are psum'd out of the block)."""
+    cfg, params, x = setup
+    y_dense, _ = moe.moe_forward(params, x, cfg)
+    mcfg = dataclasses.replace(cfg, sparse_mode=mode,
+                               sparse_use_kernel=use_kernel)
+    plans = sp.weights.plan_layer_weights(
+        params, keys=("w_up", "w_gate", "w_down"),
+        slice_k=cfg.sparse_slice_k)
+    with sp.tape.collect() as entries_local:
+        y_local, _ = moe.moe_forward(params, x, mcfg, plans=plans)
+    local = [e for e in sp.tape.summarize(entries_local)
+             if e["name"].startswith("moe.")]
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = {"experts": "model", "batch": "data", "mlp": "model"}
+    with mesh, nn.axis_rules(rules, mesh=mesh):
+        with sp.tape.collect() as entries_sm:
+            y_sm, _ = moe.moe_forward(params, x, mcfg, plans=plans)
+    sharded = [e for e in sp.tape.summarize(entries_sm)
+               if e["name"].startswith("moe.")]
+
+    np.testing.assert_allclose(np.asarray(y_sm), np.asarray(y_dense),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_sm), np.asarray(y_local),
+                               rtol=1e-5, atol=1e-5)
+    assert [e["name"] for e in sharded] == [e["name"] for e in local]
+    for e_sm, e_loc in zip(sharded, local):
+        assert e_sm["dense_steps"] == e_loc["dense_steps"]
+        assert e_sm["sparse_steps"] == e_loc["sparse_steps"]
+        want = e_sm["sparse_steps"] if use_kernel else e_sm["dense_steps"]
+        assert e_sm["executed_steps"] == want, e_sm
 
 
 def test_shard_map_grads_flow(setup):

@@ -1,0 +1,161 @@
+"""Forced 8-device shard_map MoE: the EP ``all_to_all`` branch with real
+expert splitting (ISSUE 4 / DESIGN.md §11).
+
+The in-process suite only ever sees one CPU device, so the expert
+``all_to_all`` never actually splits anything there.  This module
+re-launches itself in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the flag must be
+set before jax initialises, which in-process pytest cannot guarantee)
+and asserts, on a real (1, 8) host mesh:
+
+* EP dual-mode through the ragged grouped kernel matches the local dense
+  reference to ≤1e-4 — the sparsify-before-``all_to_all`` metadata
+  permute preserves numerics exactly;
+* executed == counted steps on the kernel path, counted < dense;
+* mesh-total counted steps equal ``tp ×`` the single-device sparse run's
+  counted steps (tokens are model-replicated before the dispatch, so
+  each expert processes tp identical capacity chunks — the per-shard
+  plans are exactly the global plan restricted to each shard);
+* the replicated/TP branch (experts ∤ tp) also routes through
+  ``repro.sparse``, warning once when the cached ``w_down`` k-plan
+  cannot be sliced over the f shards.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_N_DEV = 8
+
+
+def test_forced_8_device_ep_path():
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={_N_DEV}"
+                        ).strip()
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--run"],
+        env=env, capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        pytest.fail(f"8-device driver failed:\n--- stdout ---\n"
+                    f"{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    assert "SHARDED-MOE-OK" in proc.stdout, proc.stdout
+
+
+def _driver():
+    import dataclasses
+    import warnings
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro import sparse as sp
+    from repro.configs.base import ModelConfig
+    from repro.core import pruning
+    from repro.models import moe, nn
+
+    assert jax.device_count() == _N_DEV, jax.devices()
+    rng = np.random.default_rng(0)
+
+    def build(e_experts):
+        # cap (=8) stays a multiple of sparse_block_m so the sharded
+        # (E/tp, tp·cap, d) buffers tile into whole cap-chunks and the
+        # step accounting compares exactly against the local run
+        cfg = ModelConfig(
+            name="moe_sharded", family="moe", n_layers=1, d_model=32,
+            n_heads=4, n_kv_heads=4, d_ff=64, vocab_size=64,
+            mlp_type="relu", n_experts=e_experts, n_experts_active=1,
+            capacity_factor=2.0, sparse_block_m=8, sparse_block_n=16,
+            sparse_slice_k=16)
+        params, _ = nn.unzip(moe.init_moe(jax.random.PRNGKey(0), cfg))
+        for key in ("w_up", "w_down"):
+            w = params[key]
+            mask = jnp.stack([pruning.block_mask(
+                w[i], 0.5,
+                block=(cfg.sparse_slice_k, cfg.sparse_block_n))
+                for i in range(e_experts)])
+            params[key] = w * mask.astype(w.dtype)
+        plans = sp.weights.plan_layer_weights(
+            params, slice_k=cfg.sparse_slice_k)
+        x = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)) * 0.3,
+                        jnp.float32)
+        return cfg, params, plans, x
+
+    mesh = jax.make_mesh((1, _N_DEV), ("data", "model"))
+    rules = {"experts": "model", "batch": "data", "mlp": "model"}
+
+    def tape_run(cfg, params, plans, x, on_mesh):
+        if on_mesh:
+            with mesh, nn.axis_rules(rules, mesh=mesh):
+                with sp.tape.collect() as entries:
+                    y, _ = moe.moe_forward(params, x, cfg, plans=plans)
+        else:
+            with sp.tape.collect() as entries:
+                y, _ = moe.moe_forward(params, x, cfg, plans=plans)
+        rep = [e for e in sp.tape.summarize(entries)
+               if e["name"].startswith("moe.")]
+        return y, rep
+
+    # --- EP branch: experts split over all 8 devices --------------------
+    cfg, params, plans, x = build(_N_DEV)
+    y_ref, _ = moe.moe_forward(params, x, cfg)        # local dense
+    dual = dataclasses.replace(cfg, sparse_mode="dual",
+                               sparse_use_kernel=True)
+    y_loc, rep_loc = tape_run(dual, params, plans, x, on_mesh=False)
+    y_sm, rep_sm = tape_run(dual, params, plans, x, on_mesh=True)
+
+    err = float(jnp.abs(y_sm - y_ref).max())
+    assert err <= 1e-4, f"EP dual vs local dense: {err}"
+    counted = sum(e["sparse_steps"] for e in rep_sm)
+    dense = sum(e["dense_steps"] for e in rep_sm)
+    executed = sum(e["executed_steps"] for e in rep_sm)
+    assert executed == counted, (executed, counted)
+    assert counted < dense, (counted, dense)
+    # tokens are model-replicated before dispatch: every expert sees tp
+    # identical capacity chunks, so the mesh-total schedule is exactly
+    # tp × the single-device schedule (per-shard plan == global plan
+    # restricted to the shard)
+    counted_loc = sum(e["sparse_steps"] for e in rep_loc)
+    assert counted == _N_DEV * counted_loc, (counted, counted_loc)
+    # activation metadata survived the permute: dual schedules strictly
+    # fewer steps than weight-only on the same operands
+    wcfg = dataclasses.replace(cfg, sparse_mode="weight",
+                               sparse_use_kernel=True)
+    y_w, rep_w = tape_run(wcfg, params, plans, x, on_mesh=True)
+    counted_w = sum(e["sparse_steps"] for e in rep_w)
+    assert float(jnp.abs(y_w - y_ref).max()) <= 1e-4
+    assert counted < counted_w < dense, (counted, counted_w, dense)
+    print(f"EP: err={err:.2e} steps dense={dense} weight={counted_w} "
+          f"dual={counted} executed={executed} local_dual={counted_loc}")
+
+    # --- TP branch: experts ∤ tp → replicated experts, f tensor-parallel
+    cfg6, params6, plans6, x6 = build(6)
+    y_ref6, _ = moe.moe_forward(params6, x6, cfg6)
+    dual6 = dataclasses.replace(cfg6, sparse_mode="dual",
+                                sparse_use_kernel=True)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        y_sm6, rep6 = tape_run(dual6, params6, plans6, x6, on_mesh=True)
+    # d_ff=64 over 8 f-shards ⇒ 8-deep local k, below slice_k=16: the
+    # cached w_down k-plan is unshardable and must warn (once), not
+    # silently change the schedule
+    assert any("w_down k-plan" in str(w.message) for w in caught), \
+        [str(w.message) for w in caught]
+    err6 = float(jnp.abs(y_sm6 - y_ref6).max())
+    assert err6 <= 1e-4, f"TP dual vs local dense: {err6}"
+    for e in rep6:
+        assert e["executed_steps"] == e["sparse_steps"], e
+    print(f"TP: err={err6:.2e} entries={[e['name'] for e in rep6]}")
+
+    print("SHARDED-MOE-OK")
+
+
+if __name__ == "__main__":
+    if "--run" in sys.argv:
+        _driver()

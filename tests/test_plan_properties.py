@@ -156,3 +156,87 @@ def test_grouped_plan_matches_per_expert_plan(ops, e):
 
 def _rand_mask_np(rng, shape):
     return (rng.random(shape) < 0.6).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# per-shard plan slicing (DESIGN.md §11): the shard_map MoE contract
+# ---------------------------------------------------------------------------
+
+@st.composite
+def _grouped_activity(draw):
+    n_shards = draw(st.integers(1, 4))
+    e_per = draw(st.integers(1, 3))
+    mt = draw(st.integers(1, 4))
+    nt = draw(st.integers(1, 3))
+    s = draw(st.integers(1, 9))
+    e = n_shards * e_per
+    return (_rand_mask(draw, (e, mt, s)),
+            _rand_mask(draw, (e, s, nt)), n_shards)
+
+
+@given(ga=_grouped_activity())
+def test_shard_plan_is_plan_of_shard(ga):
+    """Slicing the global plan along the expert (fiber) axis IS the plan
+    of the sliced activity — the identity that lets the shard_map MoE
+    path hand each device its in_spec slice of the cached plan with no
+    re-planning (plan.shard_plan)."""
+    cols, rows, n_shards = ga
+    cols_j, rows_j = jnp.asarray(cols), jnp.asarray(rows)
+    ks_g, cnt_g = pln.plan_grouped_activity(cols_j, rows_j)
+    e_loc = cols.shape[0] // n_shards
+    for i in range(n_shards):
+        ks_s, cnt_s = pln.shard_plan(ks_g, cnt_g, i * e_loc, e_loc)
+        ks_l, cnt_l = pln.plan_grouped_activity(
+            cols_j[i * e_loc:(i + 1) * e_loc],
+            rows_j[i * e_loc:(i + 1) * e_loc])
+        np.testing.assert_array_equal(np.asarray(ks_s), np.asarray(ks_l))
+        np.testing.assert_array_equal(np.asarray(cnt_s),
+                                      np.asarray(cnt_l))
+
+
+@st.composite
+def _k_sharded_activity(draw):
+    n_shards = draw(st.integers(1, 4))
+    s_loc = draw(st.integers(1, 5))
+    fibers = draw(st.integers(1, 5))
+    return _rand_mask(draw, (fibers, n_shards * s_loc)), n_shards
+
+
+@given(ka=_k_sharded_activity())
+def test_kshard_tails_stay_inside_the_shard(ka):
+    """Per-shard plans over a split contraction axis are rebuilt from
+    the shard's own S-range: heads are exactly the shard-local active
+    indices, and repeat-last tails never reference another shard's
+    slices (in global numbering every index stays inside the shard)."""
+    act, n_shards = ka
+    s_loc = act.shape[-1] // n_shards
+    for i in range(n_shards):
+        local = act[:, i * s_loc:(i + 1) * s_loc]
+        idx, counts = sp.front_pack(jnp.asarray(local))
+        idx, counts = np.asarray(idx), np.asarray(counts)
+        for fib in range(local.shape[0]):
+            active = np.flatnonzero(local[fib])
+            assert counts[fib] == active.size
+            np.testing.assert_array_equal(idx[fib, :counts[fib]], active)
+            # local indices all lie in [0, s_loc): offset into global
+            # numbering they never leave [i*s_loc, (i+1)*s_loc)
+            assert idx[fib].min() >= 0 and idx[fib].max() < s_loc
+            tail = idx[fib, counts[fib]:]
+            if active.size:
+                assert np.all(tail == active[-1])
+            else:
+                np.testing.assert_array_equal(idx[fib], 0)
+
+
+@given(k_loc=st.integers(1, 64), n_shards=st.integers(1, 8),
+       slice_k=st.sampled_from([2, 4, 8, 16, 128]))
+def test_kplan_shardable_iff_boundaries_align(k_loc, n_shards, slice_k):
+    """kplan_shardable is exactly the slice/shard boundary-alignment +
+    granularity-preservation predicate the shard_map w_down path keys
+    its cached-plan reuse on."""
+    k = k_loc * n_shards
+    want = (n_shards == 1
+            or (k_loc % pln.effective_slice_k(k, slice_k) == 0
+                and pln.effective_slice_k(k_loc, slice_k)
+                == pln.effective_slice_k(k, slice_k)))
+    assert pln.kplan_shardable(k, n_shards, slice_k) == want
