@@ -34,7 +34,7 @@ from repro.core import pruning, stats
 from repro.models import mlp as mlpm
 from repro.models import moe as moem
 from repro.models import nn
-from benchmarks.bench_utils import emit, sparse
+from benchmarks.bench_utils import dump_json, emit, kfiber_sparse, sparse
 
 RNG = np.random.default_rng(0)
 
@@ -177,6 +177,121 @@ def run_dispatch(smoke: bool = False):
     print("# OK: dual < weight < dense scheduled steps; "
           "dual matches dense to <=1e-4")
     run_dispatch_moe(smoke=smoke)
+    run_dispatch_kcondensed(smoke=smoke)
+
+
+def run_dispatch_kcondensed(smoke: bool = False):
+    """Fused K-condensation through the model MLP + MoE paths (§12).
+
+    The unstructured-K regime the slice-quantised schedule cannot skip:
+    weights pruned per whole k-row (input-channel granularity, no slice
+    alignment — ``block_mask`` with a (1, N) tile) and activations with
+    dead feature columns (Griffin-style flocked ReLU features / pruned
+    upstream channels).  Almost every 128-wide k-slice keeps a non-zero,
+    so plain ``dual`` counts a near-dense schedule; with
+    ``cfg.sparse_kcondense`` the fused kernels execute
+    ``ceil(nnz_AND/slice_k)`` gathered slices per block instead —
+    measured on the whisper-ReLU / nemotron-squared-ReLU MLP blocks and
+    the grouped MoE expert path, with executed == counted on every
+    entry and ≤1e-4 parity vs the dense path.
+    """
+    blocks = [
+        ("whisper_base", "relu", 512, 2048),
+        ("nemotron_4_340b_style", "relu2", 768, 3072),
+    ]
+    if smoke:
+        blocks = [(n, t, d // 4, f // 4) for n, t, d, f in blocks]
+    seq, occupied, block_m = (64, 40, 16) if smoke else (256, 160, 64)
+    rng = np.random.default_rng(7)
+
+    print("# fused K-condensation dispatch: dual vs dual+kcondense "
+          "(kernel on; unstructured k-row pruning + dead features)")
+    for name, mlp_type, d, f in blocks:
+        cfg = _mlp_cfg(name, mlp_type, d, f, block_m)
+        params, _ = nn.unzip(mlpm.init_mlp(jax.random.PRNGKey(0), cfg))
+        # k-fiber weight sparsity: whole contraction rows pruned at
+        # element granularity (no slice alignment)
+        for key in ("w_up", "w_down"):
+            w = params[key]
+            mask = pruning.block_mask(w, 0.5, block=(1, w.shape[1]))
+            params[key] = w * mask.astype(w.dtype)
+        plans = sp.weights.plan_layer_weights(params,
+                                              slice_k=cfg.sparse_slice_k)
+        x = jnp.asarray(kfiber_sparse(rng, (1, seq, d), 0.5, axis=2))
+        x = x.at[:, occupied:, :].set(0.0)  # padded serving slots
+
+        y_dense = mlpm.mlp_forward(params, x, cfg, plans=plans)
+        results = {}
+        for kc in (False, True):
+            mcfg = dataclasses.replace(cfg, sparse_mode="dual",
+                                       sparse_use_kernel=True,
+                                       sparse_kcondense=kc)
+            with sp.tape.collect() as entries:
+                y = mlpm.mlp_forward(params, x, mcfg, plans=plans)
+            y.block_until_ready()
+            per_layer = sp.tape.summarize(entries)
+            for e in per_layer:
+                assert e["executed_steps"] == e["sparse_steps"], (kc, e)
+                emit(f"dispatch/{name}/{'dual+kc' if kc else 'dual'}/"
+                     f"{e['name']}", 0.0,
+                     f"dense={e['dense_steps']};"
+                     f"sparse={e['sparse_steps']};"
+                     f"executed={e['executed_steps']};"
+                     f"speedup={e['speedup']:.2f}")
+            results[kc] = (y, sum(e["sparse_steps"] for e in per_layer),
+                           sum(e["dense_steps"] for e in per_layer))
+        err = float(jnp.abs(results[True][0] - y_dense).max())
+        print(f"#   {name:24s} steps: dense={results[True][2]} "
+              f"dual={results[False][1]} dual+kc={results[True][1]}  "
+              f"max|kc-dense|={err:.2e}")
+        assert results[True][1] < results[False][1], (name, results)
+        assert err <= 1e-4, (name, err)
+
+    # MoE grouped path: ragged gating occupancy × k-row-pruned experts
+    d, f, e_experts = (64, 128, 4) if smoke else (128, 256, 8)
+    seq = 32 if smoke else 64
+    bm, bn, sk = (8, 16, 16) if smoke else (16, 32, 32)
+    cfg = ModelConfig(
+        name="moe_kc_bench", family="moe", n_layers=1, d_model=d,
+        n_heads=8, n_kv_heads=8, d_ff=f, vocab_size=1024, mlp_type="relu",
+        n_experts=e_experts, n_experts_active=1, capacity_factor=2.0,
+        sparse_block_m=bm, sparse_block_n=bn, sparse_slice_k=sk)
+    params, _ = nn.unzip(moem.init_moe(jax.random.PRNGKey(0), cfg))
+    for key in ("w_up", "w_down"):
+        w = params[key]
+        mask = jnp.stack([pruning.block_mask(
+            w[i], 0.5, block=(1, w.shape[-1]))
+            for i in range(e_experts)])
+        params[key] = w * mask.astype(w.dtype)
+    plans = sp.weights.plan_layer_weights(params,
+                                          slice_k=cfg.sparse_slice_k)
+    x = jnp.asarray(kfiber_sparse(rng, (1, seq, d), 0.5, axis=2))
+    y_dense, _ = moem.moe_forward(params, x, cfg, plans=plans)
+    totals = {}
+    for kc in (False, True):
+        mcfg = dataclasses.replace(cfg, sparse_mode="dual",
+                                   sparse_use_kernel=True,
+                                   sparse_kcondense=kc)
+        with sp.tape.collect() as entries:
+            y, _ = moem.moe_forward(params, x, mcfg, plans=plans)
+        y.block_until_ready()
+        per_layer = [e for e in sp.tape.summarize(entries)
+                     if e["name"].startswith("moe.")]
+        for e in per_layer:
+            assert e["executed_steps"] == e["sparse_steps"], (kc, e)
+            emit(f"dispatch/moe_kc_bench/{'dual+kc' if kc else 'dual'}/"
+                 f"{e['name']}", 0.0,
+                 f"dense={e['dense_steps']};sparse={e['sparse_steps']};"
+                 f"executed={e['executed_steps']};"
+                 f"speedup={e['speedup']:.2f}")
+        totals[kc] = (y, sum(e["sparse_steps"] for e in per_layer))
+    err = float(jnp.abs(totals[True][0] - y_dense).max())
+    print(f"#   moe_kc_bench steps: dual={totals[False][1]} "
+          f"dual+kc={totals[True][1]}  max|kc-dense|={err:.2e}")
+    assert totals[True][1] < totals[False][1], totals
+    assert err <= 1e-4, err
+    print("# OK: fused K-condensation executed == counted on MLP and "
+          "MoE paths; dual+kc < dual scheduled steps")
 
 
 def run_dispatch_moe(smoke: bool = False, sharded: bool = False):
@@ -403,11 +518,18 @@ if __name__ == "__main__":
                          "shard_map EP path on a multi-device host mesh "
                          "(set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--kcondensed-only", action="store_true",
+                    help="only run the fused K-condensation dispatch "
+                         "report (DESIGN.md §12)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write machine-readable results to PATH")
     args = ap.parse_args()
     if args.sharded:
         run_dispatch_moe(smoke=args.smoke, sharded=True)
     elif args.decode_only:
         run_decode(smoke=args.smoke)
+    elif args.kcondensed_only:
+        run_dispatch_kcondensed(smoke=args.smoke)
     else:
         if not args.skip_fig22:
             run()
@@ -415,3 +537,4 @@ if __name__ == "__main__":
         if not args.skip_fig22:
             # CI runs the decode report as its own --decode-only step
             run_decode(smoke=args.smoke)
+    dump_json(args.json, {"bench": "bench_models", "smoke": args.smoke})

@@ -1,6 +1,6 @@
 """Paper Fig. 21: SpGEMM speedup across sparsity ratios (4096×4096).
 
-Three measurements:
+Four measurements:
 * the machine-independent OHMMA step-count model (the paper's hardware
   speedup mechanism) across the sparsity grid — reproduces Fig. 21's
   structure incl. the ≈25% crossover with dense-B operands;
@@ -9,7 +9,12 @@ Three measurements:
 * ``--grouped``: the ragged grouped kernel on MoE-shaped stacked experts
   (ragged capacity-buffer occupancy × block-pruned expert weights),
   checked for parity against the XLA einsum path and for
-  executed == counted scheduled steps (DESIGN.md §9).
+  executed == counted scheduled steps (DESIGN.md §9);
+* ``--kcondensed``: fused element-granular K-condensation on
+  unstructured dual-sparse operands (DESIGN.md §12) — executed slices
+  drop to ``ceil(nnz_AND/slice_k)`` per block where the slice-quantised
+  schedule stays near-dense, with a plan-vs-execute timing split
+  showing the cumsum-based pack's planning cost.
 """
 import argparse
 
@@ -19,7 +24,8 @@ import numpy as np
 
 from repro.core import pruning, stats
 from repro.kernels.bitmap_spgemm import bitmap_spgemm
-from benchmarks.bench_utils import emit, sparse, time_fn
+from benchmarks.bench_utils import (dump_json, emit, kfiber_sparse, sparse,
+                                    time_fn)
 
 GRID_A = [0.0, 0.25, 0.50, 0.75, 0.90, 0.99, 0.999]
 GRID_B = [0.0, 0.50, 0.75, 0.99]
@@ -132,14 +138,119 @@ def run_grouped(smoke: bool = False):
           f"{xla['executed_steps']})")
 
 
+def run_kcondensed(smoke: bool = False):
+    """Fused K-condensation on unstructured dual-sparse operands.
+
+    The regime DESIGN.md §12 targets: ~50% of A's k-columns and ~50% of
+    B's k-rows are zero at random positions (element-granular along K —
+    pruned input channels / Griffin-style flocked ReLU features), so
+    nearly every 128-wide k-slice still holds *some* non-zero and the
+    slice-quantised schedule skips almost nothing.  The fused path ANDs
+    the element bitmaps per output block and executes
+    ``ceil(nnz_AND/slice_k)`` gathered slices instead — through the
+    exact ``repro.sparse`` dispatch the model paths use, on both the
+    2-D and the grouped kernel, asserting executed == counted and
+    ≤1e-4 parity vs XLA.  Also reports the plan-vs-execute timing
+    split: planning is the cumsum/scatter stable pack (no argsort).
+    """
+    from repro import sparse as sp
+    from repro.sparse import plan as pln
+    from repro.kernels import bitmap_spgemm as bsk
+
+    m, k, n = (64, 256, 64) if smoke else (128, 1024, 128)
+    bm, bn, sk = (16, 16, 32) if smoke else (32, 32, 128)
+    rng = np.random.default_rng(0)
+    a = kfiber_sparse(rng, (m, k), 0.5, axis=1)   # dead input features
+    b = kfiber_sparse(rng, (k, n), 0.5, axis=0)   # pruned input channels
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+
+    kw = dict(mode="dual", block_m=bm, block_n=bn, slice_k=sk,
+              collect_stats=True)
+    with sp.tape.collect() as entries:
+        y_fused, _ = sp.matmul(aj, bj, use_kernel=True, condense="k",
+                               interpret=True, name="fused", **kw)
+        y_unfused, _ = sp.matmul(aj, bj, use_kernel=True,
+                                 interpret=True, name="unfused", **kw)
+    summ = {e["name"]: e for e in sp.tape.summarize(entries)}
+    fused, unfused = summ["fused"], summ["unfused"]
+    y_xla = aj @ bj
+    err = float(jnp.abs(y_fused - y_xla).max())
+
+    # acceptance: executed slices == sum of per-block ceil(nnz_AND/sk)
+    kplan = pln.plan_kcondensed(pln.element_activity_lhs(aj, bm),
+                                pln.element_activity_rhs(bj, bn), sk)
+    want = int(jnp.sum(-(-kplan.nnz // sk)))
+    mt, nt = kplan.nnz.shape
+    assert abs(fused["executed_steps"] - want) <= mt * nt, (fused, want)
+    assert fused["executed_steps"] == fused["sparse_steps"], fused
+    assert unfused["executed_steps"] == unfused["sparse_steps"], unfused
+    assert fused["sparse_steps"] < unfused["sparse_steps"], summ
+    assert err <= 1e-4, err
+
+    # plan-vs-execute split: the cumsum pack is the whole planning cost
+    t_plan = time_fn(jax.jit(lambda x, y: pln.plan_kcondensed(
+        pln.element_activity_lhs(x, bm),
+        pln.element_activity_rhs(y, bn), sk)), aj, bj)
+    t_exec = time_fn(lambda x, y: bsk.bitmap_spgemm_kfused_planned(
+        x, y, kplan.gk, kplan.counts, block_m=bm, block_n=bn, slice_k=sk,
+        interpret=True), aj, bj)
+    t_slice_plan = time_fn(jax.jit(lambda x, y: pln.plan_operands(
+        x, y, bm, bn, sk)), aj, bj)
+    emit("spgemm/kcondensed_2d", t_exec,
+         f"plan_us={t_plan:.0f};slice_plan_us={t_slice_plan:.0f};"
+         f"counted={fused['sparse_steps']}/{fused['dense_steps']};"
+         f"executed={fused['executed_steps']};"
+         f"unfused={unfused['sparse_steps']};max_err={err:.1e}")
+    print(f"# kcondensed 2-D: executed {fused['executed_steps']} of "
+          f"{fused['dense_steps']} dense slices (unfused schedule: "
+          f"{unfused['sparse_steps']}); plan {t_plan:.0f}us vs "
+          f"execute {t_exec:.0f}us")
+
+    # grouped path (MoE shape): ragged occupancy × unstructured-K prune
+    e, c = (3, 32) if smoke else (4, 64)
+    ge_a = np.stack([kfiber_sparse(rng, (c, k), 0.5, axis=1)
+                     for _ in range(e)])
+    for i in range(e):           # ragged capacity-buffer occupancy
+        ge_a[i, round(c * (e - i) / e):] = 0
+    ge_b = np.stack([kfiber_sparse(rng, (k, n), 0.5, axis=0)
+                     for _ in range(e)])
+    gaj, gbj = jnp.asarray(ge_a), jnp.asarray(ge_b)
+    with sp.tape.collect() as entries:
+        yg, _ = sp.grouped_matmul(gaj, gbj, use_kernel=True, condense="k",
+                                  interpret=True, name="g_fused", **kw)
+        yu, _ = sp.grouped_matmul(gaj, gbj, use_kernel=True,
+                                  interpret=True, name="g_unfused", **kw)
+    gsumm = {e2["name"]: e2 for e2 in sp.tape.summarize(entries)}
+    gf, gu = gsumm["g_fused"], gsumm["g_unfused"]
+    gerr = float(jnp.abs(
+        yg - jnp.einsum("eck,ekn->ecn", gaj, gbj)).max())
+    assert gf["executed_steps"] == gf["sparse_steps"], gf
+    assert gf["sparse_steps"] < gu["sparse_steps"], gsumm
+    assert gerr <= 1e-4, gerr
+    emit("spgemm/kcondensed_grouped", 0.0,
+         f"counted={gf['sparse_steps']}/{gf['dense_steps']};"
+         f"executed={gf['executed_steps']};unfused={gu['sparse_steps']};"
+         f"max_err={gerr:.1e}")
+    print(f"# kcondensed grouped: executed {gf['executed_steps']} of "
+          f"{gf['dense_steps']} dense slices (unfused: "
+          f"{gu['sparse_steps']}); executed == counted on both kernels")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced grid/sizes for CI")
     ap.add_argument("--grouped", action="store_true",
                     help="only run the ragged grouped-kernel benchmark")
+    ap.add_argument("--kcondensed", action="store_true",
+                    help="only run the fused K-condensation benchmark")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write machine-readable results to PATH")
     args = ap.parse_args()
     if args.grouped:
         run_grouped(smoke=args.smoke)
+    elif args.kcondensed:
+        run_kcondensed(smoke=args.smoke)
     else:
         run(smoke=args.smoke)
+    dump_json(args.json, {"bench": "bench_spgemm", "smoke": args.smoke})

@@ -7,20 +7,41 @@ Prints ``name,us_per_call,derived`` CSV lines (plus commented summaries).
   Fig. 22    → bench_models
   kernels    → bench_kernels  (Pallas interpret-mode micro-benches)
   §Roofline  → bench_roofline (aggregates dry-run artifacts)
+
+``--json PATH`` additionally persists every emitted record (parsed
+derived fields + run metadata) to one machine-readable file — the CI
+artifact that makes the perf trajectory diffable across PRs.
 """
+import argparse
+import inspect
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grids/sizes (forwarded to benches "
+                         "that support it)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write all emitted results to PATH as JSON")
+    args = ap.parse_args()
+
     from benchmarks import (bench_im2col, bench_kernels, bench_models,
-                            bench_roofline, bench_spgemm)
+                            bench_roofline, bench_spgemm, bench_utils)
     print("name,us_per_call,derived")
-    for mod, tag in [(bench_im2col, "Table III"),
-                     (bench_spgemm, "Fig 21"),
-                     (bench_models, "Fig 22"),
-                     (bench_kernels, "kernels"),
-                     (bench_roofline, "roofline")]:
-        print(f"\n# ===== {mod.__name__} ({tag}) =====")
-        mod.run()
+    for fn, tag in [(bench_im2col.run, "Table III"),
+                    (bench_spgemm.run, "Fig 21"),
+                    (bench_spgemm.run_grouped, "Fig 21, grouped §9"),
+                    (bench_spgemm.run_kcondensed, "Fig 21, fused K §12"),
+                    (bench_models.run, "Fig 22"),
+                    (bench_kernels.run, "kernels"),
+                    (bench_roofline.run, "roofline")]:
+        print(f"\n# ===== {fn.__module__}.{fn.__name__} ({tag}) =====")
+        if "smoke" in inspect.signature(fn).parameters:
+            fn(smoke=args.smoke)
+        else:
+            fn()
+    bench_utils.dump_json(args.json, {"bench": "run_all",
+                                      "smoke": args.smoke})
 
 
 if __name__ == '__main__':

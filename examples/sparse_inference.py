@@ -79,6 +79,23 @@ def main():
         print(f"  {e['name']:10s} {e['sparse_steps']}/{e['dense_steps']} "
               f"({e['speedup']:.2f}x)")
 
+    # --- fused K-condensation (DESIGN.md §12): unstructured-K pruning ---
+    # whole contraction rows pruned at element granularity — inside the
+    # 16-wide slices, where the slice schedule cannot skip them; the
+    # fused kernels gather the packed active k's instead
+    for key in ("w_up", "w_down"):
+        mask = pruning.block_mask(mp[key], 0.5,
+                                  block=(1, mp[key].shape[1]))
+        mp[key] = mp[key] * mask.astype(mp[key].dtype)
+    plans = sp.weights.plan_layer_weights(mp, slice_k=cfg_m.sparse_slice_k)
+    kcfg = dataclasses.replace(cfg_m, sparse_kcondense=True)
+    with sp.tape.collect() as entries:
+        mlpm.mlp_forward(mp, xm, kcfg, plans=plans)
+    print("MLP block with fused K-condensation (executed == counted):")
+    for e in sp.tape.summarize(entries):
+        print(f"  {e['name']:10s} executed {e['executed_steps']}/"
+              f"{e['dense_steps']} ({e['speedup']:.2f}x)")
+
 
 if __name__ == "__main__":
     main()

@@ -51,6 +51,10 @@ class ModelConfig:
     # projection through the sparse dispatch layer.
     sparse_mode: str = "dense"     # dense | weight | dual
     sparse_use_kernel: bool = False  # Pallas block-skip kernel (2-D paths)
+    # fused element-granular K-condensation (DESIGN.md §12): plan (and
+    # with sparse_use_kernel, execute) the schedules at element rather
+    # than k-slice granularity, recovering unstructured in-slice skips.
+    sparse_kcondense: bool = False
     sparse_block_m: int = 128
     sparse_block_n: int = 128
     sparse_slice_k: int = 128
@@ -74,14 +78,22 @@ class ModelConfig:
         # only ever executes a condensed schedule, which dense mode does
         # not build — silently executing dense would contradict what the
         # flag promises (ISSUE 4 / DESIGN.md §11).
-        if self.sparse_mode == "dense" and self.sparse_use_kernel:
-            import warnings
-            warnings.warn(
-                f"ModelConfig(name={self.name!r}): sparse_use_kernel has "
-                "no effect with sparse_mode='dense' — the Pallas kernels "
-                "only run condensed schedules; all matmuls will execute "
-                "dense XLA (executed == dense steps)",
-                RuntimeWarning, stacklevel=3)
+        if self.sparse_mode == "dense":
+            ineffective = [
+                ("sparse_use_kernel", self.sparse_use_kernel,
+                 "the Pallas kernels only run condensed schedules"),
+                ("sparse_kcondense", self.sparse_kcondense,
+                 "there is no schedule to condense"),
+            ]
+            for flag, value, why in ineffective:
+                if value:
+                    import warnings
+                    warnings.warn(
+                        f"ModelConfig(name={self.name!r}): {flag} has no "
+                        f"effect with sparse_mode='dense' — {why}; all "
+                        "matmuls will execute dense XLA (executed == "
+                        "dense steps)",
+                        RuntimeWarning, stacklevel=3)
 
     @property
     def hd(self) -> int:

@@ -198,11 +198,17 @@ def kcondense(a: jax.Array, b: jax.Array) -> Tuple[jax.Array, jax.Array,
     capacity K; the *schedule* savings come from running the block-skip
     kernel on them (only ceil(n_active/slice_k) leading slices are
     active).
+
+    This whole-operand pre-pass costs two dense HBM round-trips (the
+    gathered copies of A and B) and condenses on the *global* AND only;
+    it is kept as the reference implementation that the fused planner
+    level (:func:`bitmap_spgemm_kfused_planned`, DESIGN.md §12) is
+    tested against.
     """
     act = jnp.any(a != 0, axis=0) & jnp.any(b != 0, axis=1)   # (K,)
-    order = jnp.argsort(~act, stable=True)
-    return jnp.take(a, order, axis=1), jnp.take(b, order, axis=0), \
-        jnp.sum(act, dtype=jnp.int32)
+    from repro.sparse import plan as pln
+    order, nact = pln.stable_partition(act)
+    return jnp.take(a, order, axis=1), jnp.take(b, order, axis=0), nact
 
 
 def bitmap_spgemm_kcondensed(
@@ -210,8 +216,136 @@ def bitmap_spgemm_kcondensed(
     slice_k: int = SLICE_K, interpret: Optional[bool] = None,
     out_dtype=None,
 ) -> jax.Array:
-    """Dual-side SpGEMM with element-granular K condensation + block skip."""
+    """Dual-side SpGEMM with element-granular K condensation + block skip.
+
+    Reference implementation of fused K-condensation (DESIGN.md §12):
+    the dense :func:`kcondense` pre-pass followed by the block-skip
+    kernel.  Model paths use :func:`bitmap_spgemm_kfused` instead, which
+    executes the same condensation inside the kernel's schedule.
+    """
     a_c, b_c, _ = kcondense(a, b)
     return bitmap_spgemm(a_c, b_c, block_m=block_m, block_n=block_n,
                          slice_k=slice_k, interpret=interpret,
                          out_dtype=out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused K-condensation (DESIGN.md §12): the schedule gathers, not a pre-pass
+# ---------------------------------------------------------------------------
+
+def _spgemm_kfused_kernel(cnt_ref, gk_ref, a_ref, b_ref, out_ref, acc_ref):
+    i, j, t = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    nsteps = pl.num_programs(2)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # element-granular condensation: condensed step t gathers the k's
+    # the packed schedule routes to it — from the VMEM-resident operand
+    # panels, so the gather rides the block DMAs that already happened.
+    # Lanes past the block's nnz reference *inactive* k's (zero outer
+    # products), so the last partial step needs no lane predication.
+    @pl.when(t < cnt_ref[i, j])
+    def _mac():
+        idx = gk_ref[0, 0, 0, :]
+        a_pack = jnp.take(a_ref[...], idx, axis=1)
+        b_pack = jnp.take(b_ref[...], idx, axis=0)
+        acc_ref[...] += jnp.dot(a_pack, b_pack,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(t == nsteps - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "slice_k", "interpret",
+                     "out_dtype"))
+def bitmap_spgemm_kfused_planned(
+    a: jax.Array,
+    b: jax.Array,
+    gk: jax.Array,
+    counts: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    slice_k: int = SLICE_K,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Run the kernel with an element-condensed packed-k schedule.
+
+    gk (Mt, Nt, S, slice_k) / counts (Mt, Nt) from
+    :func:`repro.sparse.plan.plan_kcondensed`.  Per output block only
+    ``counts[i, j] == ceil(nnz_AND / slice_k)`` grid steps do MXU work —
+    element-granular skips instead of whole-k-slice quantisation.
+    Operand panels stay VMEM-resident across the condensed steps
+    ((block_m, K) of A per block-row, (K, block_n) of B per block-col),
+    so the packed-k gather costs no HBM traffic beyond the block DMAs
+    the dense schedule already performs (DESIGN.md §12 discusses the
+    VMEM budget and the staging-ring variant for very deep K).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    mt, nt, s, sk = gk.shape
+    assert sk == slice_k, (gk.shape, slice_k)
+    out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
+    kp = s * slice_k
+
+    a = jnp.pad(a, ((0, mt * block_m - m), (0, kp - k)))
+    b = jnp.pad(b, ((0, kp - k), (0, nt * block_n - n)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(mt, nt, s),
+        in_specs=[
+            # per-step lane gather map (the schedule is data, not prefetch:
+            # the kernel body reads a slice_k-vector of it per grid step)
+            pl.BlockSpec((1, 1, 1, slice_k),
+                         lambda i, j, t, cnt: (i, j, t, 0)),
+            # operand panels: full contraction depth, resident per (i, j)
+            pl.BlockSpec((block_m, kp), lambda i, j, t, cnt: (i, 0)),
+            pl.BlockSpec((kp, block_n), lambda i, j, t, cnt: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda i, j, t, cnt: (i, j)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        _spgemm_kfused_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mt * block_m, nt * block_n),
+                                       out_dtype),
+        compiler_params=_compiler_params(("parallel", "parallel",
+                                          "arbitrary")),
+        interpret=interpret,
+    )(counts, gk, a, b)
+    return out[:m, :n]
+
+
+def bitmap_spgemm_kfused(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    slice_k: int = SLICE_K,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Fused-K-condensed C = A @ B with on-the-fly element planning."""
+    from repro.sparse import plan as pln
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    block_m, block_n, slice_k = pln.clamp_geometry(
+        a.shape[0], b.shape[1], a.shape[1], block_m, block_n, slice_k,
+        bool(interpret))
+    kp = pln.plan_kcondensed(
+        pln.element_activity_lhs(a, block_m),
+        pln.element_activity_rhs(b, block_n), slice_k)
+    return bitmap_spgemm_kfused_planned(
+        a, b, kp.gk, kp.counts, block_m=block_m, block_n=block_n,
+        slice_k=slice_k, interpret=bool(interpret), out_dtype=out_dtype)

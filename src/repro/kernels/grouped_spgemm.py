@@ -171,3 +171,123 @@ def grouped_spgemm(
     return grouped_spgemm_planned(
         a, b, ks, counts, block_m=block_m, block_n=block_n,
         slice_k=slice_k, interpret=bool(interpret), out_dtype=out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused K-condensation (DESIGN.md §12): per-expert packed-k schedules
+# ---------------------------------------------------------------------------
+
+def _grouped_kfused_kernel(cnt_ref, gk_ref, a_ref, b_ref, out_ref, acc_ref):
+    e = pl.program_id(0)
+    i, j, t = pl.program_id(1), pl.program_id(2), pl.program_id(3)
+    nsteps = pl.num_programs(3)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # element-granular condensation per expert: step t gathers its
+    # packed k's from the expert's VMEM-resident operand panels; lanes
+    # past the block's nnz reference inactive k's (zero outer products).
+    @pl.when(t < cnt_ref[e, i, j])
+    def _mac():
+        idx = gk_ref[0, 0, 0, 0, :]
+        a_pack = jnp.take(a_ref[0], idx, axis=1)
+        b_pack = jnp.take(b_ref[0], idx, axis=0)
+        acc_ref[...] += jnp.dot(a_pack, b_pack,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(t == nsteps - 1)
+    def _flush():
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "slice_k", "interpret",
+                     "out_dtype"))
+def grouped_spgemm_kfused_planned(
+    a: jax.Array,
+    b: jax.Array,
+    gk: jax.Array,
+    counts: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    slice_k: int = SLICE_K,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Grouped kernel with per-expert element-condensed schedules.
+
+    a: (E, C, K), b: (E, K, N); gk (E, Mt, Nt, S, slice_k) /
+    counts (E, Mt, Nt) from
+    :func:`repro.sparse.plan.plan_grouped_kcondensed`.  Same prefetch
+    contract as :func:`repro.kernels.bitmap_spgemm.
+    bitmap_spgemm_kfused_planned`, with the expert axis as the leading
+    parallel grid dimension; raggedness needs no special casing — an
+    idle expert's blocks have ``counts == 0`` and do zero MXU work.
+    """
+    e, c, k = a.shape
+    e2, k2, n = b.shape
+    assert (e, k) == (e2, k2), (a.shape, b.shape)
+    e3, mt, nt, s, sk = gk.shape
+    assert e3 == e and sk == slice_k, (gk.shape, a.shape, slice_k)
+    out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
+    kp = s * slice_k
+
+    a = jnp.pad(a, ((0, 0), (0, mt * block_m - c), (0, kp - k)))
+    b = jnp.pad(b, ((0, 0), (0, kp - k), (0, nt * block_n - n)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(e, mt, nt, s),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, 1, slice_k),
+                         lambda g, i, j, t, cnt: (g, i, j, t, 0)),
+            pl.BlockSpec((1, block_m, kp),
+                         lambda g, i, j, t, cnt: (g, i, 0)),
+            pl.BlockSpec((1, kp, block_n),
+                         lambda g, i, j, t, cnt: (g, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n),
+                               lambda g, i, j, t, cnt: (g, i, j)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        _grouped_kfused_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (e, mt * block_m, nt * block_n), out_dtype),
+        compiler_params=_compiler_params(
+            ("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(counts, gk, a, b)
+    return out[:, :c, :n]
+
+
+def grouped_spgemm_kfused(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    slice_k: int = SLICE_K,
+    interpret: Optional[bool] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Fused-K-condensed grouped SpGEMM with on-the-fly planning."""
+    from repro.sparse import plan as pln
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    e, c, k = a.shape
+    n = b.shape[-1]
+    block_m, block_n, slice_k = pln.clamp_geometry(
+        c, n, k, block_m, block_n, slice_k, bool(interpret))
+    kp = pln.plan_grouped_kcondensed(
+        jax.vmap(lambda ai: pln.element_activity_lhs(ai, block_m))(a),
+        jax.vmap(lambda bi: pln.element_activity_rhs(bi, block_n))(b),
+        slice_k)
+    return grouped_spgemm_kfused_planned(
+        a, b, kp.gk, kp.counts, block_m=block_m, block_n=block_n,
+        slice_k=slice_k, interpret=bool(interpret), out_dtype=out_dtype)

@@ -17,6 +17,8 @@ from repro.kernels.bitmap_encode import bitmap_encode_pallas
 from repro.kernels.bitmap_spgemm import (  # noqa: F401  (re-exports)
     bitmap_spgemm,
     bitmap_spgemm_kcondensed,
+    bitmap_spgemm_kfused,
+    bitmap_spgemm_kfused_planned,
     bitmap_spgemm_planned,
     kcondense,
     plan_slices,

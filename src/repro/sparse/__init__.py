@@ -33,18 +33,26 @@ from repro.sparse.dispatch import (  # noqa: F401
 )
 from repro.sparse.plan import (  # noqa: F401
     SLICE_K,
+    KPlan,
     block_reduce_lhs,
     block_reduce_rhs,
     counts_to_steps,
+    element_activity_lhs,
+    element_activity_rhs,
     front_pack,
     grouped_counts_to_steps,
+    grouped_kcondensed_counts,
+    kcondensed_counts,
     kplan_shardable,
     plan_from_activity,
     plan_grouped_activity,
+    plan_grouped_kcondensed,
+    plan_kcondensed,
     plan_operands,
     shard_plan,
     slice_activity_lhs,
     slice_activity_rhs,
+    stable_partition,
 )
 from repro.sparse.weights import (  # noqa: F401
     PlannedWeight,

@@ -69,6 +69,16 @@ class SparseActivation:
             slice_act=self.slice_act.reshape(-1, self.slice_act.shape[-1]),
             slice_k=self.slice_k)
 
+    def element_mask(self) -> jax.Array:
+        """The exact (..., K) element mask, unpacked from the bitmap.
+
+        The element-granular planning input (kernel-side K-condensation,
+        DESIGN.md §12) — always from the packed bitmap, never from the
+        values, so the encode happens exactly once per activation.
+        """
+        k = self.values.shape[-1]
+        return bm.unpack_bits(self.bitmap, axis=-1)[..., :k]
+
     def row_slice_activity(self, slice_k: int) -> jax.Array:
         """Per-row activity at an arbitrary slice granularity.
 
@@ -78,9 +88,7 @@ class SparseActivation:
         """
         if slice_k == self.slice_k:
             return self.slice_act
-        k = self.values.shape[-1]
-        mask = bm.unpack_bits(self.bitmap, axis=-1)[..., :k]
-        return pln.slice_activity_lhs(mask, slice_k)
+        return pln.slice_activity_lhs(self.element_mask(), slice_k)
 
 
 def _pack_mask(mask: jax.Array) -> jax.Array:

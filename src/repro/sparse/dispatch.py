@@ -26,6 +26,15 @@ Modes mirror ``DualSparseLinear``:
   :func:`matmul`, ragged grouped for :func:`grouped_matmul` —
   DESIGN.md §9).
 
+Orthogonally, ``condense="k"`` (``ModelConfig.sparse_kcondense``) plans
+at *element* granularity instead of whole k-slices: the bitmap AND is
+taken per contraction index, stable-front-packed per output block, and
+the fused kernels gather the packed k's out of their resident operand
+panels — executed slices become ``ceil(nnz_AND / slice_k)`` rather than
+quantising at ``slice_k`` (DESIGN.md §12).  The stats tape counts the
+same element-granular schedule, so executed == counted stays the proof
+of real elided work.
+
 All modes compute exactly ``x @ w`` — sparsity changes the schedule, not
 the math.
 """
@@ -47,6 +56,7 @@ Operand = Union[jax.Array, SparseActivation]
 Weight = Union[jax.Array, PlannedWeight]
 
 MODES = ("dense", "weight", "dual")
+CONDENSE = (None, "k")
 
 # keys already warned about — configuration mismatches (a kernel that
 # cannot run, a cached plan that cannot be sliced) must be *audible*, but
@@ -76,7 +86,8 @@ def kwargs_from_config(cfg, out_dtype=None) -> dict:
     """
     kw = dict(mode=cfg.sparse_mode, block_m=cfg.sparse_block_m,
               block_n=cfg.sparse_block_n, slice_k=cfg.sparse_slice_k,
-              use_kernel=cfg.sparse_use_kernel)
+              use_kernel=cfg.sparse_use_kernel,
+              condense="k" if cfg.sparse_kcondense else None)
     if out_dtype is not None:
         kw["out_dtype"] = out_dtype
     return kw
@@ -119,6 +130,44 @@ def _rhs_activity(w: Weight, block_n: int, slice_k: int) -> jax.Array:
     return pln.block_reduce_rhs(cols, block_n)
 
 
+def _lhs_element(x: Operand, x2: jax.Array, block_m: int,
+                 mode: str) -> jax.Array:
+    """(Mt, K) block-row *element* k-activity of the activation side.
+
+    The ``condense="k"`` planning input (DESIGN.md §12): from the packed
+    bitmap when the operand carries one (never from the values), from
+    ``x != 0`` otherwise; all-true in weight mode.
+
+    Exactness contract for *claimed* masks: the fused kernels' tail
+    lanes gather k's this AND declares inactive, relying on their raw
+    outer products being zero.  A SparseActivation whose bitmap declares
+    a position zero while the value is non-zero is therefore only valid
+    when the discrepancy is K-uniform per row (the KV score operand:
+    whole slots masked ⇒ a block is either fully scheduled along k or
+    fully skipped) or the values really are zero (the KV value operand:
+    softmax-masked probabilities).  Masks that vary along K over
+    non-zero values would make tail lanes add garbage — don't build
+    such operands (pinned by test_kcondense_fused's KV decode parity).
+    """
+    mt = pln._cdiv(x2.shape[0], block_m)
+    if mode == "weight":  # activation treated as dense
+        return jnp.ones((mt, x2.shape[1]), dtype=bool)
+    if isinstance(x, SparseActivation):
+        return pln.element_activity_lhs(
+            x.flatten_leading().element_mask(), block_m)
+    return pln.element_activity_lhs(x2, block_m)
+
+
+def _rhs_element(w_arr: jax.Array, block_n: int) -> jax.Array:
+    """(K, Nt) block-col element k-activity of the weight side.
+
+    ``PlannedWeight`` stores its pruning mask applied to the values, so
+    ``w != 0`` is the exact static element structure on either operand
+    form.
+    """
+    return pln.element_activity_rhs(w_arr, block_n)
+
+
 def matmul(
     x: Operand,
     w: Weight,
@@ -128,6 +177,7 @@ def matmul(
     block_n: int = 128,
     slice_k: int = pln.SLICE_K,
     use_kernel: bool = False,
+    condense: Optional[str] = None,
     interpret: Optional[bool] = None,
     collect_stats: bool = False,
     name: str = "matmul",
@@ -142,9 +192,16 @@ def matmul(
     path (``preferred_element_type`` on XLA, the f32-scratch flush dtype
     on the kernels) — the sparse KV decode path uses f32 here to match
     the dense attention's accumulation exactly.
+    ``condense="k"`` plans (and with ``use_kernel`` executes) the
+    schedule at element granularity — the fused K-condensation of
+    DESIGN.md §12 — so unstructured sparsity inside k-slices is skipped,
+    not just counted.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if condense not in CONDENSE:
+        raise ValueError(
+            f"condense must be one of {CONDENSE}, got {condense!r}")
     w_arr = _weight_array(w)
     if w_arr.ndim != 2:
         raise ValueError(f"matmul expects 2-D weights, got {w_arr.shape}; "
@@ -177,6 +234,12 @@ def matmul(
                 "sparse.matmul: use_kernel has no effect in dense mode — "
                 "the block-skip kernel only runs a condensed schedule; "
                 "executing the XLA matmul (executed == dense steps)")
+        if condense:
+            warn_once(
+                "matmul:dense+condense",
+                "sparse.matmul: condense='k' has no effect in dense mode "
+                "— there is no schedule to condense; executing the XLA "
+                "matmul (executed == dense steps)")
         y = _xla_matmul()
         if want_stats:
             dense = jnp.asarray(mt * nt * s)
@@ -185,21 +248,40 @@ def matmul(
     else:
         # plan only when something consumes it: the kernel's schedule or
         # the stats accounting (under jit XLA would DCE a dead plan, but
-        # eager callers would pay the argsort for nothing)
+        # eager callers would pay the pack for nothing)
         if use_kernel or want_stats:
-            col = _lhs_activity(x, x2, block_m, slice_k, mode)
-            row = _rhs_activity(w, block_n, slice_k)
-            if use_kernel:
-                ks, counts = pln.plan_from_activity(col, row)
-            else:  # stats only: skip the schedule's argsort
-                counts = pln.counts_from_activity(col, row)
+            if condense == "k":
+                # element granularity: the fused kernel gathers packed
+                # k's, so both the schedule and the accounting are
+                # ceil(nnz_AND / slice_k) per block (DESIGN.md §12)
+                col_e = _lhs_element(x, x2, block_m, mode)
+                row_e = _rhs_element(w_arr, block_n)
+                if use_kernel:
+                    kplan = pln.plan_kcondensed(col_e, row_e, slice_k)
+                    counts = kplan.counts
+                else:  # stats only: skip the schedules' pack
+                    counts = pln.kcondensed_counts(col_e, row_e, slice_k)
+            else:
+                col = _lhs_activity(x, x2, block_m, slice_k, mode)
+                row = _rhs_activity(w, block_n, slice_k)
+                if use_kernel:
+                    ks, counts = pln.plan_from_activity(col, row)
+                else:  # stats only: skip the schedule's pack
+                    counts = pln.counts_from_activity(col, row)
             if want_stats:
                 steps = pln.counts_to_steps(counts, s)
         if use_kernel:
             from repro.kernels import bitmap_spgemm as bsk
-            y = bsk.bitmap_spgemm_planned(
-                x2, w_arr, ks, counts, block_m=block_m, block_n=block_n,
-                slice_k=slice_k, interpret=interp, out_dtype=out_dtype)
+            if condense == "k":
+                y = bsk.bitmap_spgemm_kfused_planned(
+                    x2, w_arr, kplan.gk, kplan.counts, block_m=block_m,
+                    block_n=block_n, slice_k=slice_k, interpret=interp,
+                    out_dtype=out_dtype)
+            else:
+                y = bsk.bitmap_spgemm_planned(
+                    x2, w_arr, ks, counts, block_m=block_m,
+                    block_n=block_n, slice_k=slice_k, interpret=interp,
+                    out_dtype=out_dtype)
         else:
             y = _xla_matmul()
     if steps is not None:
@@ -236,6 +318,24 @@ def _grouped_rhs_activity(w: Weight, w_arr: jax.Array, block_n: int,
     return jax.vmap(lambda a: pln.block_reduce_rhs(a, block_n))(cols)
 
 
+def _grouped_lhs_element(x: Operand, xv: jax.Array, block_m: int,
+                         mode: str) -> jax.Array:
+    """(E, Mt, K) per-expert block-row element k-activity."""
+    e, c, k = xv.shape
+    mt = pln._cdiv(c, block_m)
+    if mode == "weight":  # activation treated as dense
+        return jnp.ones((e, mt, k), dtype=bool)
+    mask = x.element_mask() if isinstance(x, SparseActivation) else xv
+    return jax.vmap(
+        lambda mi: pln.element_activity_lhs(mi, block_m))(mask)
+
+
+def _grouped_rhs_element(w_arr: jax.Array, block_n: int) -> jax.Array:
+    """(E, K, Nt) per-expert block-col element k-activity."""
+    return jax.vmap(
+        lambda wi: pln.element_activity_rhs(wi, block_n))(w_arr)
+
+
 def grouped_matmul(
     x: Operand,
     w: Weight,
@@ -245,6 +345,7 @@ def grouped_matmul(
     block_n: int = 128,
     slice_k: int = pln.SLICE_K,
     use_kernel: bool = False,
+    condense: Optional[str] = None,
     interpret: Optional[bool] = None,
     collect_stats: bool = False,
     name: str = "grouped_matmul",
@@ -260,10 +361,15 @@ def grouped_matmul(
     and executes the per-expert condensed schedules — the blocks the tape
     counts as skipped are never scheduled (DESIGN.md §9).  Without it,
     compute falls back to one XLA einsum with the same schedule
-    accounting.
+    accounting.  ``condense="k"`` plans (and with ``use_kernel``
+    executes) per-expert schedules at element granularity
+    (DESIGN.md §12), same contract as :func:`matmul`.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if condense not in CONDENSE:
+        raise ValueError(
+            f"condense must be one of {CONDENSE}, got {condense!r}")
     w_arr = _weight_array(w)
     xv = _values(x)
     if xv.ndim != 3 or w_arr.ndim != 3:
@@ -293,6 +399,12 @@ def grouped_matmul(
             "sparse.grouped_matmul: use_kernel has no effect in dense "
             "mode — the ragged grouped kernel only runs a condensed "
             "schedule; executing the XLA einsum (executed == dense steps)")
+    if condense and mode == "dense":
+        warn_once(
+            "grouped_matmul:dense+condense",
+            "sparse.grouped_matmul: condense='k' has no effect in dense "
+            "mode — there is no schedule to condense; executing the XLA "
+            "einsum (executed == dense steps)")
     if mode == "dense":
         y = _xla_grouped()
         if want_stats:
@@ -303,19 +415,38 @@ def grouped_matmul(
             tape.record(name, steps)
     else:
         if run_kernel or want_stats:
-            cols = _grouped_lhs_activity(x, xv, block_m, slice_k, mode)
-            rows = _grouped_rhs_activity(w, w_arr, block_n, slice_k)
-            if run_kernel:
-                ks, counts = pln.plan_grouped_activity(cols, rows)
-            else:  # stats only: skip the schedule's argsort
-                counts = pln.grouped_counts_from_activity(cols, rows)
+            if condense == "k":
+                cols_e = _grouped_lhs_element(x, xv, block_m, mode)
+                rows_e = _grouped_rhs_element(w_arr, block_n)
+                if run_kernel:
+                    kplan = pln.plan_grouped_kcondensed(cols_e, rows_e,
+                                                        slice_k)
+                    counts = kplan.counts
+                else:  # stats only: skip the schedules' pack
+                    counts = pln.grouped_kcondensed_counts(cols_e, rows_e,
+                                                           slice_k)
+            else:
+                cols = _grouped_lhs_activity(x, xv, block_m, slice_k,
+                                             mode)
+                rows = _grouped_rhs_activity(w, w_arr, block_n, slice_k)
+                if run_kernel:
+                    ks, counts = pln.plan_grouped_activity(cols, rows)
+                else:  # stats only: skip the schedule's pack
+                    counts = pln.grouped_counts_from_activity(cols, rows)
             if want_stats:
                 steps = pln.grouped_counts_to_steps(counts, s)
         if run_kernel:
             from repro.kernels import grouped_spgemm as gsk
-            y = gsk.grouped_spgemm_planned(
-                xv, w_arr, ks, counts, block_m=block_m, block_n=block_n,
-                slice_k=slice_k, interpret=interp, out_dtype=out_dtype)
+            if condense == "k":
+                y = gsk.grouped_spgemm_kfused_planned(
+                    xv, w_arr, kplan.gk, kplan.counts, block_m=block_m,
+                    block_n=block_n, slice_k=slice_k, interpret=interp,
+                    out_dtype=out_dtype)
+            else:
+                y = gsk.grouped_spgemm_planned(
+                    xv, w_arr, ks, counts, block_m=block_m,
+                    block_n=block_n, slice_k=slice_k, interpret=interp,
+                    out_dtype=out_dtype)
         else:
             y = _xla_grouped()
         if steps is not None:

@@ -95,19 +95,51 @@ def block_reduce_rhs(col_act: jax.Array, block_n: int) -> jax.Array:
 # step 3: front-pack ("condensing")
 # ---------------------------------------------------------------------------
 
+def stable_partition(act: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Cumsum/scatter stable partition of indices along the last axis.
+
+    act: (..., S) bool.  Returns (order (..., S) int32, counts (...)
+    int32): per fiber, the active indices in ascending order followed by
+    the *inactive* indices in ascending order — exactly
+    ``argsort(~act, stable=True)``, but built from two cumsums and one
+    permutation-inverting scatter (O(S) per fiber instead of the sort's
+    O(S log S)).  Every condensing schedule in the repo derives from
+    this: :func:`front_pack` overwrites the inactive tail with the
+    repeat-last index (the slice/block schedules, where tails must
+    re-map to a resident block), while :func:`plan_kcondensed` keeps the
+    inactive tail as-is (the element schedules, where tail lanes must
+    gather k's whose outer product is zero).
+    """
+    s = act.shape[-1]
+    act = act.astype(bool)
+    counts = jnp.sum(act, axis=-1, dtype=jnp.int32)
+    rank_active = jnp.cumsum(act, axis=-1, dtype=jnp.int32) - 1
+    rank_inactive = jnp.cumsum(~act, axis=-1, dtype=jnp.int32) - 1
+    # destination of each source index under the partition…
+    pos = jnp.where(act, rank_active, counts[..., None] + rank_inactive)
+    # …inverted (dest → source) with one batched scatter.  ``pos`` is a
+    # permutation per fiber, so indices are unique and none drop.
+    flat = pos.reshape(-1, s)
+    rows = jnp.arange(flat.shape[0], dtype=jnp.int32)[:, None]
+    src = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), flat.shape)
+    order = jnp.zeros(flat.shape, jnp.int32).at[rows, flat].set(
+        src, unique_indices=True)
+    return order.reshape(act.shape), counts
+
+
 def front_pack(act: jax.Array, cap: Optional[int] = None
                ) -> Tuple[jax.Array, jax.Array]:
     """Stable-front-pack active indices along the last axis.
 
     act: (..., S) bool.  Returns (indices (..., cap), counts (...)): the
-    active indices of each fiber pushed to the front in ascending order;
-    the inactive tail repeats the last active index (all-zeros for fibers
-    with no active entry) so skipped grid steps re-map to an
-    already-resident block and trigger no DMA.
+    active indices of each fiber pushed to the front in ascending order
+    (:func:`stable_partition`, cumsum-based — no argsort); the inactive
+    tail repeats the last active index (all-zeros for fibers with no
+    active entry) so skipped grid steps re-map to an already-resident
+    block and trigger no DMA.
     """
     s = act.shape[-1]
-    counts = jnp.sum(act, axis=-1, dtype=jnp.int32)
-    order = jnp.argsort(~act, axis=-1, stable=True).astype(jnp.int32)
+    order, counts = stable_partition(act)
     arange = jnp.arange(s, dtype=jnp.int32)
     last = jnp.maximum(counts - 1, 0)[..., None]
     idx = jnp.where(arange < counts[..., None],
@@ -184,6 +216,122 @@ def plan_operands(a: jax.Array, b: jax.Array, block_m: int, block_n: int,
     col = block_reduce_lhs(slice_activity_lhs(a, slice_k), block_m)
     row = block_reduce_rhs(slice_activity_rhs(b, slice_k), block_n)
     return plan_from_activity(col, row)
+
+
+# ---------------------------------------------------------------------------
+# element-granular K-condensation schedules (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def element_activity_lhs(a: jax.Array, block_m: int) -> jax.Array:
+    """Per-block-row *element* k-activity of a left operand.
+
+    a: (M, K) values or bool mask.  Returns (Mt, K) bool: k is active
+    for block-row i iff some row of the block has a non-zero at column
+    k.  The element-granular analogue of
+    :func:`slice_activity_lhs` + :func:`block_reduce_lhs` — no slice
+    quantisation, so unstructured (k-fiber) sparsity survives.
+    """
+    m, k = a.shape
+    mt = _cdiv(m, block_m)
+    mask = jnp.pad(a != 0, ((0, mt * block_m - m), (0, 0)))
+    return jnp.any(mask.reshape(mt, block_m, k), axis=1)
+
+
+def element_activity_rhs(b: jax.Array, block_n: int) -> jax.Array:
+    """Per-block-col element k-activity of a right operand.
+
+    b: (K, N) values or bool mask.  Returns (K, Nt) bool: k is active
+    for block-col j iff some column of the block has a non-zero at row
+    k.
+    """
+    k, n = b.shape
+    nt = _cdiv(n, block_n)
+    mask = jnp.pad(b != 0, ((0, 0), (0, nt * block_n - n)))
+    return jnp.any(mask.reshape(k, nt, block_n), axis=2)
+
+
+class KPlan(NamedTuple):
+    """A per-output-block packed active-k schedule (``plan_kcondensed``).
+
+    gk     : (..., Mt, Nt, S, slice_k) int32 — for condensed step t,
+             lane l gathers contraction index ``gk[..., t, l]``.  Heads
+             (the first ``nnz`` lanes across steps) are exactly the
+             block's element-AND active k's in ascending order; tail
+             lanes continue with the *inactive* k's in ascending order,
+             whose outer products are identically zero, so a partial
+             last step needs no lane predication (DESIGN.md §12).
+    counts : (..., Mt, Nt) int32 — executed condensed steps per output
+             block, ``ceil(nnz / slice_k)``.
+    nnz    : (..., Mt, Nt) int32 — element-AND active k's per block.
+    """
+    gk: jax.Array
+    counts: jax.Array
+    nnz: jax.Array
+
+
+def _kpack(act: jax.Array, slice_k: int) -> KPlan:
+    """(..., K) element activity → packed-k schedule at ``slice_k``."""
+    *lead, k = act.shape
+    s = _cdiv(k, slice_k)
+    act = jnp.pad(act, [(0, 0)] * len(lead) + [(0, s * slice_k - k)])
+    order, nnz = stable_partition(act)
+    counts = -(-nnz // slice_k)      # ceil: executed condensed steps
+    return KPlan(gk=order.reshape(*lead, s, slice_k),
+                 counts=counts.astype(jnp.int32), nnz=nnz)
+
+
+def plan_kcondensed(col: jax.Array, row: jax.Array,
+                    slice_k: int = SLICE_K) -> KPlan:
+    """Element-granular condensed schedule from the two sides' element
+    activities.
+
+    col: (Mt, K) A-side block-row element activity
+    (:func:`element_activity_lhs`); row: (K, Nt) B-side
+    (:func:`element_activity_rhs`).  Returns the :class:`KPlan` the
+    fused kernels (:func:`repro.kernels.bitmap_spgemm.
+    bitmap_spgemm_kfused_planned`) consume: the bitmap AND of the
+    paper's condensing step (Fig. 4c), stable-front-packed per output
+    block by :func:`stable_partition` — executed slices become
+    ``ceil(nnz_AND / slice_k)`` instead of quantising at whole k-slices.
+
+    The intermediate AND is materialised at (Mt, Nt, K) — fine for the
+    repo's planning shapes; the compact carrier for larger problems is
+    the factorized (col, row) bitmap pair itself (DESIGN.md §12).
+    """
+    act = col[:, None, :] & row.T[None, :, :]        # (Mt, Nt, K)
+    return _kpack(act, slice_k)
+
+
+def plan_grouped_kcondensed(cols: jax.Array, rows: jax.Array,
+                            slice_k: int = SLICE_K) -> KPlan:
+    """Batched (per-expert) element-condensed schedule.
+
+    cols: (E, Mt, K); rows: (E, K, Nt).  Returns a :class:`KPlan` with
+    leading expert axis — gk (E, Mt, Nt, S, slice_k) — for
+    :func:`repro.kernels.grouped_spgemm.grouped_spgemm_kfused_planned`.
+    """
+    act = cols[:, :, None, :] & rows.transpose(0, 2, 1)[:, None, :, :]
+    return _kpack(act, slice_k)
+
+
+def kcondensed_counts(col: jax.Array, row: jax.Array,
+                      slice_k: int = SLICE_K) -> jax.Array:
+    """Condensed-step counts without building the gather maps.
+
+    Same AND as :func:`plan_kcondensed` but only ``ceil(nnz/slice_k)``
+    per block — the stats-only path (XLA fallback), sparing the pack.
+    """
+    nnz = jnp.sum(col[:, None, :] & row.T[None, :, :], axis=-1,
+                  dtype=jnp.int32)
+    return (-(-nnz // slice_k)).astype(jnp.int32)
+
+
+def grouped_kcondensed_counts(cols: jax.Array, rows: jax.Array,
+                              slice_k: int = SLICE_K) -> jax.Array:
+    """(E, Mt, Nt) condensed-step counts, schedule-free."""
+    act = cols[:, :, None, :] & rows.transpose(0, 2, 1)[:, None, :, :]
+    nnz = jnp.sum(act, axis=-1, dtype=jnp.int32)
+    return (-(-nnz // slice_k)).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------

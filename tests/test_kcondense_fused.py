@@ -1,0 +1,276 @@
+"""Fused element-granular K-condensation (DESIGN.md §12).
+
+Parity matrix of the fused kernels against the dense reference pre-pass
+(``bitmap_spgemm_kcondensed`` — kept exactly for this purpose) and XLA,
+across unstructured sparsity levels × dtypes × odd K; plus the
+dispatch-level contract: executed == counted at element granularity on
+both the 2-D and grouped kernels, with executed slices within one slice
+per block of ``ceil(nnz_AND / slice_k)``.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import sparse as sp
+from repro.sparse import plan as pln
+from repro.kernels.bitmap_spgemm import (bitmap_spgemm_kcondensed,
+                                         bitmap_spgemm_kfused,
+                                         bitmap_spgemm_kfused_planned,
+                                         kcondense)
+from repro.kernels.grouped_spgemm import grouped_spgemm_kfused
+from tests.conftest import sparse_matrix
+
+
+def _kfiber_operands(rng, m, k, n, sa, sb, dtype=np.float32):
+    """Element-granular (k-fiber) dual sparsity, no slice alignment."""
+    a = rng.normal(size=(m, k)).astype(dtype)
+    a[:, rng.random(k) < sa] = 0
+    b = rng.normal(size=(k, n)).astype(dtype)
+    b[rng.random(k) < sb, :] = 0
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# parity matrix: sparsity levels × dtypes × odd K, fused vs reference vs XLA
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [120, 200])          # odd (non-slice-multiple)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sa,sb", [(0.3, 0.3), (0.6, 0.5), (0.9, 0.9)])
+def test_fused_parity_matrix(rng, k, dtype, sa, sb):
+    a, b = _kfiber_operands(rng, 24, k, 24, sa, sb)
+    aj = jnp.asarray(a).astype(dtype)
+    bj = jnp.asarray(b).astype(dtype)
+    kw = dict(block_m=16, block_n=16, slice_k=16, interpret=True)
+    fused = bitmap_spgemm_kfused(aj, bj, **kw)
+    ref = bitmap_spgemm_kcondensed(aj, bj, **kw)
+    xla = jnp.dot(aj, bj)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(fused, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(fused, np.float32),
+                               np.asarray(xla, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_fused_matches_dense_on_any_density(rng):
+    # no k-fiber structure at all — per-block AND still exact
+    a = sparse_matrix(rng, (40, 72), 0.5)
+    b = sparse_matrix(rng, (72, 40), 0.5)
+    out = bitmap_spgemm_kfused(jnp.asarray(a), jnp.asarray(b), block_m=16,
+                               block_n=16, slice_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), a @ b, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_fused_all_zero_and_all_dense(rng):
+    a = np.zeros((16, 48), np.float32)
+    b = rng.normal(size=(48, 16)).astype(np.float32)
+    out = bitmap_spgemm_kfused(jnp.asarray(a), jnp.asarray(b), block_m=8,
+                               block_n=8, slice_k=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+    a = rng.normal(size=(16, 48)).astype(np.float32)
+    out = bitmap_spgemm_kfused(jnp.asarray(a), jnp.asarray(b), block_m=8,
+                               block_n=8, slice_k=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), a @ b, rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# active-k sets: the fused planner's per-block AND vs the reference's
+# global AND (identical on a single-block geometry)
+# ---------------------------------------------------------------------------
+
+def test_fused_active_k_set_matches_kcondense(rng):
+    m, k, n = 24, 100, 24
+    a, b = _kfiber_operands(rng, m, k, n, 0.5, 0.5)
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    # one output block covering the whole problem: per-block AND == the
+    # reference pre-pass's global AND
+    kp = pln.plan_kcondensed(pln.element_activity_lhs(aj, m),
+                             pln.element_activity_rhs(bj, n), 16)
+    _, _, nact = kcondense(aj, bj)
+    want = np.flatnonzero(np.any(a != 0, 0) & np.any(b != 0, 1))
+    assert int(kp.nnz[0, 0]) == int(nact) == want.size
+    got = np.asarray(kp.gk[0, 0]).reshape(-1)[:want.size]
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# dispatch contract: executed == counted at element granularity; executed
+# slices within 1 slice/block of ceil(nnz_AND / slice_k) (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_dispatch_2d_executed_equals_element_counted(rng):
+    m, k, n = 48, 160, 40
+    bm, bn, sk = 16, 16, 32
+    a, b = _kfiber_operands(rng, m, k, n, 0.5, 0.5)
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    kw = dict(mode="dual", block_m=bm, block_n=bn, slice_k=sk,
+              collect_stats=True)
+    with sp.tape.collect() as entries:
+        y_f, _ = sp.matmul(aj, bj, use_kernel=True, condense="k",
+                           interpret=True, name="fused", **kw)
+        y_u, _ = sp.matmul(aj, bj, use_kernel=True, interpret=True,
+                           name="unfused", **kw)
+        _, _ = sp.matmul(aj, bj, use_kernel=False, condense="k",
+                         name="stats", **kw)
+    summ = {e["name"]: e for e in sp.tape.summarize(entries)}
+    fused, unfused, stats_only = (summ["fused"], summ["unfused"],
+                                  summ["stats"])
+    np.testing.assert_allclose(np.asarray(y_f), a @ b, rtol=1e-4,
+                               atol=1e-4)
+    # executed == counted on the kernel; stats-only path counts the same
+    # element-granular schedule but executes dense XLA
+    assert fused["executed_steps"] == fused["sparse_steps"]
+    assert stats_only["sparse_steps"] == fused["sparse_steps"]
+    assert stats_only["executed_steps"] == stats_only["dense_steps"]
+    # acceptance: within 1 slice per block of ceil(nnz_AND / slice_k),
+    # vs the unfused path's near-dense slice count
+    kp = pln.plan_kcondensed(pln.element_activity_lhs(aj, bm),
+                             pln.element_activity_rhs(bj, bn), sk)
+    want = int(jnp.sum(-(-kp.nnz // sk)))
+    n_blocks = kp.nnz.shape[0] * kp.nnz.shape[1]
+    assert abs(fused["executed_steps"] - want) <= n_blocks
+    assert fused["sparse_steps"] < unfused["sparse_steps"]
+
+
+def test_dispatch_grouped_executed_equals_element_counted(rng):
+    e, c, k, n = 3, 24, 96, 24
+    bm, bn, sk = 8, 8, 16
+    a = np.stack([_kfiber_operands(rng, c, k, n, 0.5, 0.5)[0]
+                  for _ in range(e)])
+    b = np.stack([_kfiber_operands(rng, c, k, n, 0.5, 0.5)[1]
+                  for _ in range(e)])
+    a[2, 12:] = 0                       # ragged occupancy
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    kw = dict(mode="dual", block_m=bm, block_n=bn, slice_k=sk,
+              collect_stats=True)
+    with sp.tape.collect() as entries:
+        y_f, _ = sp.grouped_matmul(aj, bj, use_kernel=True, condense="k",
+                                   interpret=True, name="fused", **kw)
+        y_u, _ = sp.grouped_matmul(aj, bj, use_kernel=True,
+                                   interpret=True, name="unfused", **kw)
+    summ = {x["name"]: x for x in sp.tape.summarize(entries)}
+    fused, unfused = summ["fused"], summ["unfused"]
+    np.testing.assert_allclose(
+        np.asarray(y_f), np.einsum("eck,ekn->ecn", a, b),
+        rtol=1e-4, atol=1e-4)
+    assert fused["executed_steps"] == fused["sparse_steps"]
+    assert fused["sparse_steps"] <= unfused["sparse_steps"]
+    cols = jnp.stack([pln.element_activity_lhs(aj[i], bm)
+                      for i in range(e)])
+    rows = jnp.stack([pln.element_activity_rhs(bj[i], bn)
+                      for i in range(e)])
+    kp = pln.plan_grouped_kcondensed(cols, rows, sk)
+    want = int(jnp.sum(-(-kp.nnz // sk)))
+    n_blocks = int(np.prod(kp.nnz.shape))
+    assert abs(fused["executed_steps"] - want) <= n_blocks
+
+
+def test_dispatch_weight_mode_condense(rng):
+    # activation treated dense; condensation rides the weight side only
+    a = rng.normal(size=(32, 96)).astype(np.float32)
+    w = rng.normal(size=(96, 32)).astype(np.float32)
+    w[rng.random(96) < 0.5, :] = 0
+    aj, wj = jnp.asarray(a), jnp.asarray(w)
+    with sp.tape.collect() as entries:
+        y, _ = sp.matmul(aj, wj, mode="weight", block_m=16, block_n=16,
+                         slice_k=16, use_kernel=True, condense="k",
+                         interpret=True, collect_stats=True, name="w")
+    (entry,) = sp.tape.summarize(entries)
+    np.testing.assert_allclose(np.asarray(y), a @ w, rtol=1e-4, atol=1e-4)
+    assert entry["executed_steps"] == entry["sparse_steps"]
+    assert entry["sparse_steps"] < entry["dense_steps"]
+
+
+def test_grouped_kernel_direct_parity(rng):
+    e = 2
+    a = np.stack([_kfiber_operands(rng, 16, 72, 16, 0.6, 0.4)[0]
+                  for _ in range(e)])
+    b = np.stack([_kfiber_operands(rng, 16, 72, 16, 0.6, 0.4)[1]
+                  for _ in range(e)])
+    out = grouped_spgemm_kfused(jnp.asarray(a), jnp.asarray(b), block_m=8,
+                                block_n=8, slice_k=8, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.einsum("eck,ekn->ecn", a, b),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_condense_rejects_unknown_value(rng):
+    a = jnp.ones((8, 8))
+    with pytest.raises(ValueError):
+        sp.matmul(a, a, mode="dual", condense="m")
+    with pytest.raises(ValueError):
+        sp.grouped_matmul(jnp.ones((2, 8, 8)), jnp.ones((2, 8, 8)),
+                          mode="dual", condense="nm")
+
+
+def test_planned_schedule_roundtrip(rng):
+    # external schedule == on-the-fly wrapper result
+    a, b = _kfiber_operands(rng, 32, 64, 32, 0.5, 0.5)
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    bm, bn, sk = 16, 16, 16
+    kp = pln.plan_kcondensed(pln.element_activity_lhs(aj, bm),
+                             pln.element_activity_rhs(bj, bn), sk)
+    out = bitmap_spgemm_kfused_planned(aj, bj, kp.gk, kp.counts,
+                                       block_m=bm, block_n=bn, slice_k=sk,
+                                       interpret=True)
+    out2 = bitmap_spgemm_kfused(aj, bj, block_m=bm, block_n=bn,
+                                slice_k=sk, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+    np.testing.assert_allclose(np.asarray(out), a @ b, rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# sparse_kv × sparse_kcondense: condense="k" flows through
+# kwargs_from_config into the bitmap-scheduled decode path (DESIGN.md
+# §10) — pin that the claimed-mask operands stay exact under element
+# condensation (see dispatch._lhs_element's contract)
+# ---------------------------------------------------------------------------
+
+def test_sparse_kv_decode_with_kcondense_matches_dense(rng):
+    import dataclasses
+    import jax
+    from repro.configs.base import ModelConfig
+    from repro.models import attention as attn
+    from repro.models import cache as kvc
+    from repro.models import nn
+    from repro.sparse import kvcache as skv
+
+    ctx = 24
+    cfg = ModelConfig(
+        name="kv_kc", family="dense", n_layers=1, d_model=64, n_heads=8,
+        n_kv_heads=4, d_ff=128, vocab_size=256, sparse_mode="dual",
+        sparse_use_kernel=True, sparse_kcondense=True, sparse_kv=True,
+        sparse_block_t=8, sparse_block_m=8, sparse_block_n=16,
+        sparse_slice_k=16)
+    dcfg = dataclasses.replace(cfg, sparse_mode="dense", sparse_kv=False,
+                               sparse_use_kernel=False,
+                               sparse_kcondense=False)
+    params, _ = nn.unzip(attn.init_attention(jax.random.PRNGKey(0), cfg))
+    x = jnp.asarray(rng.normal(size=(1, ctx + 1, cfg.d_model)) * 0.3,
+                    jnp.float32)
+    sc = skv.init_sparse_cache(1, ctx + 1, cfg.n_kv_heads, cfg.hd,
+                               window=ctx + 1, block_t=cfg.sparse_block_t,
+                               dtype=jnp.float32)
+    dc = kvc.init_cache(1, ctx + 1, cfg.n_kv_heads, cfg.hd,
+                        dtype=jnp.float32)
+    pos = jnp.arange(ctx, dtype=jnp.int32)
+    _, sc = attn.attention_forward(params, x[:, :ctx], cfg,
+                                   positions=pos, cache=sc)
+    _, dc = attn.attention_forward(params, x[:, :ctx], dcfg,
+                                   positions=pos, cache=dc)
+    p1 = jnp.asarray([ctx], jnp.int32)
+    with sp.tape.collect() as entries:
+        ys, _ = attn.attention_forward(params, x[:, ctx:], cfg,
+                                       positions=p1, cache=sc)
+    yd, _ = attn.attention_forward(params, x[:, ctx:], dcfg,
+                                   positions=p1, cache=dc)
+    assert float(jnp.abs(ys - yd).max()) <= 1e-4
+    summ = sp.tape.summarize(entries)
+    assert summ, "decode recorded no tape entries"
+    for e in summ:
+        assert e["executed_steps"] == e["sparse_steps"], e

@@ -240,3 +240,136 @@ def test_kplan_shardable_iff_boundaries_align(k_loc, n_shards, slice_k):
                 and pln.effective_slice_k(k_loc, slice_k)
                 == pln.effective_slice_k(k, slice_k)))
     assert pln.kplan_shardable(k, n_shards, slice_k) == want
+
+
+# ---------------------------------------------------------------------------
+# element-granular K-condensation schedules (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+@given(act=_activity())
+def test_stable_partition_equals_stable_argsort(act):
+    """The cumsum/scatter pack is bit-identical to the argsort it
+    replaced: active indices ascending, then inactive ascending."""
+    order, counts = pln.stable_partition(jnp.asarray(act))
+    np.testing.assert_array_equal(
+        np.asarray(order), np.argsort(~act, axis=-1, kind="stable"))
+    np.testing.assert_array_equal(np.asarray(counts), act.sum(-1))
+
+
+@st.composite
+def _element_operands(draw):
+    m = draw(st.integers(1, 16))
+    k = draw(st.integers(1, 40))
+    n = draw(st.integers(1, 16))
+    block_m = draw(st.sampled_from([2, 3, 4, 8]))
+    block_n = draw(st.sampled_from([2, 3, 4, 8]))
+    slice_k = draw(st.sampled_from([2, 3, 4, 8, 16]))
+    a = _rand_mask(draw, (m, k)).astype(np.float32)
+    b = _rand_mask(draw, (k, n)).astype(np.float32)
+    return a, b, block_m, block_n, slice_k
+
+
+@given(ops=_element_operands())
+def test_kpack_head_is_the_bitmap_and_active_set(ops):
+    """Per output block, the packed-k schedule's head is exactly the
+    element-granular bitmap-AND active set, ascending — the invariant
+    the fused kernels' gather rests on."""
+    a, b, block_m, block_n, slice_k = ops
+    kp = pln.plan_kcondensed(
+        pln.element_activity_lhs(jnp.asarray(a), block_m),
+        pln.element_activity_rhs(jnp.asarray(b), block_n), slice_k)
+    gk, counts, nnz = (np.asarray(kp.gk), np.asarray(kp.counts),
+                       np.asarray(kp.nnz))
+    m, k = a.shape
+    n = b.shape[1]
+    mt, nt = gk.shape[:2]
+    for i in range(mt):
+        for j in range(nt):
+            ab = a[i * block_m:(i + 1) * block_m]
+            bb = b[:, j * block_n:(j + 1) * block_n]
+            want = np.flatnonzero(np.any(ab != 0, 0) & np.any(bb != 0, 1))
+            assert nnz[i, j] == want.size
+            assert counts[i, j] == -(-want.size // slice_k)
+            flatk = gk[i, j].reshape(-1)
+            np.testing.assert_array_equal(flatk[:want.size], want)
+            # the whole schedule is a permutation of [0, K_pad)
+            np.testing.assert_array_equal(np.sort(flatk),
+                                          np.arange(flatk.size))
+
+
+@given(ops=_element_operands())
+def test_kpack_tails_reference_only_inactive_ks(ops):
+    """Lanes past a block's nnz gather only *inactive* k's — whose outer
+    products are identically zero — so the last partial condensed step
+    needs no lane predication (the §12 exactness argument)."""
+    a, b, block_m, block_n, slice_k = ops
+    kp = pln.plan_kcondensed(
+        pln.element_activity_lhs(jnp.asarray(a), block_m),
+        pln.element_activity_rhs(jnp.asarray(b), block_n), slice_k)
+    gk, nnz = np.asarray(kp.gk), np.asarray(kp.nnz)
+    k = a.shape[1]
+    kpad = gk.shape[-2] * gk.shape[-1]
+    ap = np.pad(a, ((0, 0), (0, kpad - k)))
+    bp = np.pad(b, ((0, kpad - k), (0, 0)))
+    mt, nt = gk.shape[:2]
+    for i in range(mt):
+        for j in range(nt):
+            ab = ap[i * block_m:(i + 1) * block_m]
+            bb = bp[:, j * block_n:(j + 1) * block_n]
+            active = np.any(ab != 0, 0) & np.any(bb != 0, 1)
+            tail = gk[i, j].reshape(-1)[nnz[i, j]:]
+            assert not active[tail].any()
+            # inactive k ⇒ the whole outer product is zero
+            for t in tail[:4]:
+                assert not (ab[:, t].any() and bb[t].any())
+
+
+@given(ops=_element_operands())
+def test_condensed_matmul_exact_for_dropped_ks(ops):
+    """Summing only the scheduled condensed steps reproduces A @ B
+    exactly: dropped k's contribute zero outer products (the reason
+    K-side condensation needs no output scatter, DESIGN.md §8/§12)."""
+    a, b, block_m, block_n, slice_k = ops
+    kp = pln.plan_kcondensed(
+        pln.element_activity_lhs(jnp.asarray(a), block_m),
+        pln.element_activity_rhs(jnp.asarray(b), block_n), slice_k)
+    gk, counts = np.asarray(kp.gk), np.asarray(kp.counts)
+    m, k = a.shape
+    n = b.shape[1]
+    mt, nt, s, _ = gk.shape
+    kpad = s * slice_k
+    ap = np.pad(a, ((0, mt * block_m - m), (0, kpad - k)))
+    bp = np.pad(b, ((0, kpad - k), (0, nt * block_n - n)))
+    out = np.zeros((mt * block_m, nt * block_n), np.float32)
+    for i in range(mt):
+        for j in range(nt):
+            acc = np.zeros((block_m, block_n), np.float32)
+            for t in range(counts[i, j]):
+                idx = gk[i, j, t]
+                acc += ap[i * block_m:(i + 1) * block_m][:, idx] \
+                    @ bp[idx][:, j * block_n:(j + 1) * block_n]
+            out[i * block_m:(i + 1) * block_m,
+                j * block_n:(j + 1) * block_n] = acc
+    np.testing.assert_allclose(out[:m, :n], a @ b, rtol=1e-5, atol=1e-5)
+
+
+@given(ops=_element_operands(), e=st.integers(1, 3))
+def test_grouped_kpack_matches_per_expert_kpack(ops, e):
+    """The batched (E, …) element plan is exactly E stacked 2-D plans."""
+    a, b, block_m, block_n, slice_k = ops
+    rng = np.random.default_rng(0)
+    av = np.stack([a * _rand_mask_np(rng, a.shape) for _ in range(e)])
+    bv = np.stack([b * _rand_mask_np(rng, b.shape) for _ in range(e)])
+    cols = jnp.stack([pln.element_activity_lhs(jnp.asarray(ai), block_m)
+                      for ai in av])
+    rows = jnp.stack([pln.element_activity_rhs(jnp.asarray(bi), block_n)
+                      for bi in bv])
+    kp_g = pln.plan_grouped_kcondensed(cols, rows, slice_k)
+    for i in range(e):
+        kp_i = pln.plan_kcondensed(cols[i], rows[i], slice_k)
+        np.testing.assert_array_equal(np.asarray(kp_g.gk[i]),
+                                      np.asarray(kp_i.gk))
+        np.testing.assert_array_equal(np.asarray(kp_g.counts[i]),
+                                      np.asarray(kp_i.counts))
+        np.testing.assert_array_equal(np.asarray(kp_g.nnz[i]),
+                                      np.asarray(kp_i.nnz))
