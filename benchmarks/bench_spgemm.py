@@ -25,7 +25,7 @@ import numpy as np
 from repro.core import pruning, stats
 from repro.kernels.bitmap_spgemm import bitmap_spgemm
 from benchmarks.bench_utils import (dump_json, emit, kfiber_sparse, sparse,
-                                    time_fn)
+                                    time_fn, tune_timer)
 
 GRID_A = [0.0, 0.25, 0.50, 0.75, 0.90, 0.99, 0.999]
 GRID_B = [0.0, 0.50, 0.75, 0.99]
@@ -236,6 +236,42 @@ def run_kcondensed(smoke: bool = False):
           f"{gu['sparse_steps']}); executed == counted on both kernels")
 
 
+def run_tune(smoke: bool = False):
+    """Knob/backend sweep on the raw Fig-21 SpGEMM shape (DESIGN.md §13).
+
+    One dual-sparse square GEMM per sparsity regime through
+    :func:`repro.sparse.autotune.tune_matmul`, printing every candidate
+    the sweep timed — the microscope view of what ``bench_models --tune``
+    does per call site.  Uses a private cache so it never perturbs the
+    persisted ``BENCH_autotune_cache.json``.
+    """
+    from repro import sparse as sp
+    atn = sp.autotune
+    n = 128 if smoke else 512
+    rng = np.random.default_rng(0)
+    cache = atn.TuningCache()
+    print("# spgemm autotune: per-candidate sweep on the Fig-21 shape")
+    for sa in (0.5, 0.9):
+        a = jnp.asarray(kfiber_sparse(rng, (n, n), sa, axis=1))
+        b = jnp.asarray(kfiber_sparse(rng, (n, n), 0.5, axis=0))
+        row = atn.tune_matmul(
+            a, b, mode="dual", sparsity=sa, w_sparsity=0.5,
+            interpret=True, max_candidates=4 if smoke else 6,
+            timer=tune_timer(warmup=1, repeat=3), cache=cache)
+        for cand in row["sweep"]:
+            emit(f"spgemm/tune/sa{sa:g}/{cand['backend']}"
+                 f"_m{cand['block_m']}n{cand['block_n']}"
+                 f"k{cand['slice_k']}", cand["us"],
+                 f"is_baseline={int(cand['is_baseline'])}")
+        assert row["tuned"]["us"] <= row["baseline"]["us"], row
+        print(f"#   sa={sa:g}: {row['tuned']['backend']} "
+              f"m{row['tuned']['block_m']}n{row['tuned']['block_n']}"
+              f"k{row['tuned']['slice_k']} wins at "
+              f"{row['tuned']['us']:.0f}us "
+              f"({row['speedup']:.2f}x vs config baseline)")
+    print(f"# OK: {len(cache.entries)} cache entries tuned")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -244,10 +280,15 @@ if __name__ == "__main__":
                     help="only run the ragged grouped-kernel benchmark")
     ap.add_argument("--kcondensed", action="store_true",
                     help="only run the fused K-condensation benchmark")
+    ap.add_argument("--tune", action="store_true",
+                    help="only run the per-candidate autotune sweep on "
+                         "the Fig-21 shape (DESIGN.md §13)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write machine-readable results to PATH")
     args = ap.parse_args()
-    if args.grouped:
+    if args.tune:
+        run_tune(smoke=args.smoke)
+    elif args.grouped:
         run_grouped(smoke=args.smoke)
     elif args.kcondensed:
         run_kcondensed(smoke=args.smoke)

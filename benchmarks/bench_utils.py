@@ -31,6 +31,19 @@ def time_fn(fn, *args, warmup: int = 2, repeat: int = 5) -> float:
     return float(np.median(times))
 
 
+def tune_timer(warmup: int = 1, repeat: int = 3):
+    """A ``fn -> median µs`` adapter for the autotune sweeps.
+
+    ``repro.sparse.autotune.tune_matmul/tune_grouped`` take a
+    ``timer(fn)`` callable; this closes :func:`time_fn` over a
+    warmup/repeat budget so every bench's sweep shares the same
+    measurement discipline as its other numbers.
+    """
+    def timer(fn):
+        return time_fn(fn, warmup=warmup, repeat=repeat)
+    return timer
+
+
 def _parse_derived(derived: str) -> dict:
     """``k=v;k=v`` → dict with numeric coercion (raw string fallback)."""
     out = {}

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV lines (plus commented summaries).
   Fig. 22    → bench_models
   kernels    → bench_kernels  (Pallas interpret-mode micro-benches)
   §Roofline  → bench_roofline (aggregates dry-run artifacts)
+  §13 tuner  → bench_models --tune / bench_spgemm --tune (run directly)
 
 ``--json PATH`` additionally persists every emitted record (parsed
 derived fields + run metadata) to one machine-readable file — the CI
@@ -15,9 +16,42 @@ artifact that makes the perf trajectory diffable across PRs.
 import argparse
 import inspect
 
+TUNE_HELP = """\
+The autotune workflow (DESIGN.md §13) runs outside this harness:
+
+  PYTHONPATH=src python -m benchmarks.bench_models --tune [--smoke]
+      sweeps the model-zoo call sites (prefill AND decode shapes),
+      writes the report to BENCH_autotune.json and the persistent
+      tuning cache to BENCH_autotune_cache.json at the repo root;
+  PYTHONPATH=src python -m benchmarks.bench_spgemm --tune [--smoke]
+      per-candidate microscope sweep on the Fig-21 shape.
+
+Cache-file format (version %d, JSON):
+
+  {"version": 1,
+   "entries": {
+     "<platform>|<dtype>|<op>|m<M>|n<N>|k<K>|s<bucket>[|e<E>]": {
+       "backend": "xla|kernel|kfused",
+       "block_m": int, "block_n": int, "slice_k": int,
+       "us": float, "baseline_us": float, "source": "tuned"}}}
+
+Keys bucket M/N/K to the next power of two (decode M=1 and prefill
+M=seq are distinct first-class keys) and activation sparsity to the
+nearest of %s bins ('any' when the call has no hint; tuned entries
+are mirrored into 'any' when faster).  Serving consumes the cache via
+ModelConfig.sparse_autotune=True + sparse_tune_cache=<path>: each
+dispatch call probes its bucketed key, a hit overrides the config
+geometry/backend, and a miss or stale entry falls back to the config
+constants (numerics identical either way).
+"""
+
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    from repro.sparse import autotune as _atn
+    ap = argparse.ArgumentParser(
+        epilog=TUNE_HELP % (_atn.CACHE_VERSION,
+                            "/".join(f"{b:g}" for b in _atn.SPARSITY_BINS)),
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--smoke", action="store_true",
                     help="reduced grids/sizes (forwarded to benches "
                          "that support it)")

@@ -64,6 +64,15 @@ class ModelConfig:
     # only with a non-dense sparse_mode (dense mode keeps plain caches).
     sparse_kv: bool = False        # SparseKVCache + bitmap-scheduled decode
     sparse_block_t: int = 32       # cache slots per occupancy block
+    # per-call autotuning (repro.sparse.autotune, DESIGN.md §13): consult
+    # the persistent tuning cache per dispatch; the sparse_block_*/
+    # slice_k/use_kernel/kcondense constants above become the fallback
+    # tier on a cache miss.
+    sparse_autotune: bool = False
+    sparse_tune_cache: str = ""    # cache file to load ("" = in-memory)
+    # static activation-sparsity hint the cache keys bucket under
+    # (< 0 = no hint → the 'any' bucket)
+    sparse_tune_sparsity: float = -1.0
     # norms / embeddings
     norm_kind: str = "rms"         # rms | layer
     norm_eps: float = 1e-5
@@ -84,6 +93,8 @@ class ModelConfig:
                  "the Pallas kernels only run condensed schedules"),
                 ("sparse_kcondense", self.sparse_kcondense,
                  "there is no schedule to condense"),
+                ("sparse_autotune", self.sparse_autotune,
+                 "dense mode never consults the tuning cache"),
             ]
             for flag, value, why in ineffective:
                 if value:
@@ -177,6 +188,10 @@ class RunConfig:
     kv_quant: bool = False         # int8 KV cache
     decode_2d: bool = False        # 2-D weight sharding at decode (§Perf)
     seq_shard: bool = True         # Megatron-style sequence sharding
+    # serving-grade XLA latency flags (repro.launch.flags): async
+    # collectives + latency-hiding scheduler, applied to XLA_FLAGS
+    # before backend init by the launch entry points.
+    latency_flags: bool = False
     attn_chunk: int = 2048         # KV-chunked attention threshold/size
     learning_rate: float = 3e-4
     weight_decay: float = 0.1

@@ -175,6 +175,68 @@ def step_costs(cfg: ModelConfig, shape: ShapeConfig, rc: RunConfig, *,
     }
 
 
+# ---------------------------------------------------------------------------
+# sparse executed-step prediction (autotuner candidate scoring, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def sparse_step_fraction(block_m: int, block_n: int, slice_k: int, k: int,
+                         *, a_density: float = 1.0, w_density: float = 1.0,
+                         condense=None) -> float:
+    """Expected executed-step fraction of a dual-side sparse schedule.
+
+    The analytic mirror of what the StepCounts tape measures, under an
+    iid-Bernoulli element model: each A element non-zero with prob
+    ``a_density``, each B element with ``w_density``.
+
+    Slice-granular (``condense=None``): a (block, slice) pair is active
+    iff any of its block_m·slice_k A elements (resp. block_n·slice_k B
+    elements) is non-zero, and a step executes iff both sides are active
+    — fraction = p_A · p_B.
+
+    Element-granular (``condense="k"``): a contraction index k survives
+    the AND iff some A row of the block and some B column of the block
+    are non-zero there; executed steps are ceil(nnz_AND / slice_k), so
+    the fraction is nnz/K (clamped to at least one step's worth when
+    anything survives — the condensed grid can't run fractional steps).
+    """
+    a = min(max(float(a_density), 0.0), 1.0)
+    w = min(max(float(w_density), 0.0), 1.0)
+    s = max(-(-k // slice_k), 1)
+    if condense == "k":
+        p_a = 1.0 - (1.0 - a) ** block_m
+        p_b = 1.0 - (1.0 - w) ** block_n
+        nnz = k * p_a * p_b
+        if nnz <= 0.0:
+            return 0.0
+        return min(max(nnz / slice_k, 1.0), float(s)) / s
+    p_a = 1.0 - (1.0 - a) ** (block_m * slice_k)
+    p_b = 1.0 - (1.0 - w) ** (block_n * slice_k)
+    return p_a * p_b
+
+
+def predict_sparse_steps(m: int, n: int, k: int, block_m: int, block_n: int,
+                         slice_k: int, *, a_density: float = 1.0,
+                         w_density: float = 1.0, condense=None
+                         ) -> Dict[str, float]:
+    """StepCounts-shaped prediction for one (m, n, k) matmul.
+
+    Returns dense grid steps, predicted executed steps, and the executed
+    fraction — the quantity :mod:`repro.launch.roofline.sparse_matmul`
+    folds into its arithmetic-intensity term, and the analytic stand-in
+    for a measured ``tape.summarize`` entry when the autotuner scores
+    candidates before timing anything.
+    """
+    mt = -(-m // block_m)
+    nt = -(-n // block_n)
+    s = -(-k // slice_k)
+    frac = sparse_step_fraction(block_m, block_n, slice_k, k,
+                                a_density=a_density, w_density=w_density,
+                                condense=condense)
+    dense = float(mt * nt * s)
+    return {"dense_steps": dense, "executed_steps": dense * frac,
+            "executed_fraction": frac}
+
+
 def _attn_layer_count(cfg: ModelConfig) -> int:
     n = sum(1 for p in range(cfg.period)
             if cfg.layer_kind(p) in ("attn", "cross")) * cfg.n_periods

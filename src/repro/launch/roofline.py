@@ -120,3 +120,59 @@ def model_flops(n_active_params: float, tokens: float, kind: str) -> float:
     """6·N·D (train) / 2·N·D (inference) per the assignment's definition."""
     per_tok = 6.0 if kind == "train" else 2.0
     return per_tok * n_active_params * tokens
+
+
+def sparse_matmul(m: int, n: int, k: int, *, executed_fraction: float = 1.0,
+                  block_m: int = 128, block_n: int = 128,
+                  dtype_bytes: int = 2, backend: str = "kernel",
+                  step_overhead_s: float = 0.0) -> Dict[str, Any]:
+    """Sparse-aware roofline terms for one (m, n, k) matmul.
+
+    The autotuner's candidate scorer (DESIGN.md §13): folds the
+    StepCounts-predicted executed-step fraction
+    (:func:`repro.launch.costmodel.sparse_step_fraction`) into both the
+    FLOP term and — backend-dependently — the HBM term, yielding a
+    sparse *arithmetic intensity* rather than the dense one.
+
+    * ``backend="xla"`` — the dense fallback: full FLOPs, standard tiled
+      traffic (A streamed once per column-block-panel, B once per
+      row-block-panel, C written once).
+    * ``backend="kernel"`` — slice-granular block-skip: skipped steps
+      elide both their FLOPs and their operand DMA, so FLOPs *and*
+      operand bytes scale by the executed fraction.
+    * ``backend="kfused"`` — element-granular condensation: FLOPs scale
+      by the (smaller) condensed fraction, but the full-K operand
+      panels stay resident per output block, so operand traffic does
+      *not* shrink with the schedule — condensation buys compute, not
+      bandwidth.
+
+    ``step_overhead_s`` charges a fixed cost per executed grid step —
+    zero on hardware, decidedly non-zero under ``interpret=True`` where
+    every step is a Python-level emulation (the term that makes CPU
+    smoke sweeps rank candidates realistically).
+    """
+    mt = -(-m // block_m)
+    nt = -(-n // block_n)
+    frac = min(max(float(executed_fraction), 0.0), 1.0)
+    flops = 2.0 * m * n * k
+    a_bytes = m * k * nt * dtype_bytes       # A panel re-read per col block
+    b_bytes = k * n * mt * dtype_bytes       # B panel re-read per row block
+    c_bytes = m * n * dtype_bytes
+    if backend == "xla":
+        frac = 1.0
+    elif backend == "kernel":
+        a_bytes *= frac
+        b_bytes *= frac
+    # kfused: resident full-K panels — operand bytes stay dense
+    flops *= frac
+    hbm = a_bytes + b_bytes + c_bytes
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_o = 0.0 if backend == "xla" else (
+        step_overhead_s * mt * nt * max(frac, 1e-9))
+    predict = max(t_c, t_m) + t_o
+    return {"flops": flops, "hbm_bytes": hbm,
+            "arithmetic_intensity": flops / hbm if hbm else 0.0,
+            "compute_s": t_c, "memory_s": t_m, "overhead_s": t_o,
+            "predict_s": predict,
+            "bound": "compute" if t_c >= t_m else "memory"}

@@ -4,6 +4,7 @@
         --smoke --requests 4
 """
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -11,6 +12,7 @@ import jax
 from repro.configs import get_config, get_run_config, smoke_config
 from repro.configs.base import RunConfig
 from repro.distributed import sharding as shd
+from repro.launch import flags
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import nn, transformer as tfm
 from repro.serving.engine import Engine, Request
@@ -24,16 +26,23 @@ def main():
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--capacity", type=int, default=128)
+    ap.add_argument("--latency-flags", action="store_true",
+                    help="apply serving-grade XLA latency flags (async "
+                    "collectives + latency-hiding scheduler) before "
+                    "backend init")
     args = ap.parse_args()
 
     if args.smoke:
         cfg = smoke_config(args.arch)
-        mesh = make_host_mesh()
-        rc = RunConfig()
+        rc = RunConfig(latency_flags=args.latency_flags)
     else:
         cfg = get_config(args.arch)
-        mesh = make_production_mesh()
         rc = get_run_config(args.arch, "decode_32k")
+        if args.latency_flags:
+            rc = dataclasses.replace(rc, latency_flags=True)
+    if rc.latency_flags:
+        flags.apply_latency_flags()
+    mesh = make_host_mesh() if args.smoke else make_production_mesh()
     rules = shd.make_rules("decode")
 
     with mesh, nn.axis_rules(rules, mesh=mesh):

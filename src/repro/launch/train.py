@@ -20,6 +20,7 @@ from repro.configs import get_config, get_run_config, smoke_config
 from repro.configs.base import RunConfig
 from repro.data.pipeline import Prefetcher, SyntheticTokens
 from repro.distributed import sharding as shd
+from repro.launch import flags
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import nn, transformer as tfm
 from repro.training import optimizer as opt
@@ -40,12 +41,18 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--latency-flags", action="store_true",
+                    help="apply async-collective/latency-hiding XLA "
+                    "flags before backend init")
     args = ap.parse_args()
 
+    if args.latency_flags:
+        flags.apply_latency_flags()
     if args.smoke:
         cfg = smoke_config(args.arch)
         mesh = make_host_mesh()
-        rc = RunConfig(microbatches=2, learning_rate=1e-3)
+        rc = RunConfig(microbatches=2, learning_rate=1e-3,
+                       latency_flags=args.latency_flags)
     else:
         cfg = get_config(args.arch)
         mesh = make_production_mesh(multi_pod=args.multi_pod)

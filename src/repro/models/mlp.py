@@ -63,16 +63,21 @@ def mlp_forward(params: Dict, x: jax.Array, cfg: ModelConfig,
     # residual stream; the activation's bitmap is built once here and
     # reused by the down-projection planner.
     kw = sp.dispatch.kwargs_from_config(cfg)
+    # element-granular plans ("@elem" siblings) attach only under
+    # kcondense — the slice-granular paths never read them
+    ebn = cfg.sparse_block_n if cfg.sparse_kcondense else 0
     h, _ = sp.matmul(
         x, sp.weights.planned_or_array(params["w_up"], plans, "w_up",
-                                       x.dtype, cfg.sparse_slice_k),
+                                       x.dtype, cfg.sparse_slice_k,
+                                       block_n=ebn),
         name="mlp.up", **kw)
     gate = None
     if "w_gate" in params:
         gate, _ = sp.matmul(
             x, sp.weights.planned_or_array(params["w_gate"], plans,
                                            "w_gate", x.dtype,
-                                           cfg.sparse_slice_k),
+                                           cfg.sparse_slice_k,
+                                           block_n=ebn),
             name="mlp.gate", **kw)
     h = sp.activate(h, gate, cfg.mlp_type,
                     slice_k=sp.plan.effective_slice_k(
@@ -83,7 +88,8 @@ def mlp_forward(params: Dict, x: jax.Array, cfg: ModelConfig,
         h = nn.shard_act(h, "batch", "seq", "mlp")
     y, _ = sp.matmul(
         h, sp.weights.planned_or_array(params["w_down"], plans, "w_down",
-                                       x.dtype, cfg.sparse_slice_k),
+                                       x.dtype, cfg.sparse_slice_k,
+                                       block_n=ebn),
         name="mlp.down", **kw)
     return nn.shard_act(y, "batch", "seq", "embed")
 

@@ -89,17 +89,19 @@ def _expert_ffn(params: Dict, xe, cfg: ModelConfig, plans=None, *,
     else:
         x_in = sp.sparsify(xe, slice_k=sk) \
             if cfg.sparse_mode == "dual" else xe
+    ebn = cfg.sparse_block_n if cfg.sparse_kcondense else 0
     h, steps["moe.up"] = sp.grouped_matmul(
         x_in,
         sp.weights.planned_or_array(params["w_up"], plans, "w_up", dt,
-                                    cfg.sparse_slice_k),
+                                    cfg.sparse_slice_k, block_n=ebn),
         name="moe.up", **kw)
     gate = None
     if "w_gate" in params:
         gate, steps["moe.gate"] = sp.grouped_matmul(
             x_in,
             sp.weights.planned_or_array(params["w_gate"], plans, "w_gate",
-                                        dt, cfg.sparse_slice_k),
+                                        dt, cfg.sparse_slice_k,
+                                        block_n=ebn),
             name="moe.gate", **kw)
     h = sp.activate(h, gate, cfg.mlp_type,
                     slice_k=sp.plan.effective_slice_k(
@@ -111,7 +113,8 @@ def _expert_ffn(params: Dict, xe, cfg: ModelConfig, plans=None, *,
         h = nn.shard_act(h, "experts", "expert_cap", None)
     ye, steps["moe.down"] = sp.grouped_matmul(
         h, sp.weights.planned_or_array(params["w_down"], plans, "w_down",
-                                       dt, cfg.sparse_slice_k),
+                                       dt, cfg.sparse_slice_k,
+                                       block_n=ebn),
         name="moe.down", **kw)
     return ye, {k: v for k, v in steps.items() if v is not None}
 

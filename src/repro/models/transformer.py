@@ -152,8 +152,13 @@ def plan_weight_activities(params: Dict, cfg: ModelConfig
         out: Dict[str, Any] = {}
         for blk in ("mlp", "moe"):
             if blk in stack:
+                # with kcondense the element-granular k-activities ride
+                # along as "@elem" siblings, so condense="k" dispatches
+                # never re-reduce w != 0 per call (DESIGN.md §12)
                 out[blk] = sparse.weights.plan_layer_weights(
-                    stack[blk], slice_k=sk)
+                    stack[blk], slice_k=sk,
+                    block_n=(cfg.sparse_block_n if cfg.sparse_kcondense
+                             else None))
         for blk in ("attn", "cross_attn"):
             if blk in stack:
                 out[blk] = attn_plans(stack[blk])

@@ -55,6 +55,11 @@ class Engine:
         # (weights don't change at inference), reused by every prefill
         # and decode step (DESIGN.md §4.3).
         self.weight_plans = tfm.plan_weight_activities(params, cfg)
+        # per-call autotuning (DESIGN.md §13): make the persisted tuning
+        # cache available before the first trace — lookups happen at
+        # trace time, so the cache must be loaded, not lazily discovered
+        if cfg.sparse_autotune and cfg.sparse_tune_cache:
+            sparse.autotune.load_cache(cfg.sparse_tune_cache)
 
         self._decode_one = jax.jit(self._decode_one_impl)
 
@@ -138,6 +143,47 @@ class Engine:
         report = sparse.tape.summarize(entries)
         report.extend(self._cache_occupancy_entries(caches))
         return report
+
+    def autotune_keys(self, prompt_len: int = 8,
+                      decode_steps: int = 1) -> List[str]:
+        """Discover the tuning-cache keys this engine's forwards consult.
+
+        Runs one eager prefill over a synthetic prompt plus
+        ``decode_steps`` greedy decode steps with ``sparse_autotune``
+        forced on, and returns the cache keys the dispatch layer looked
+        up (hit or miss) during that window — the closed-loop surface
+        for ``bench_models --tune``: because M buckets differ, the M=1
+        decode matmuls of the PR 3 KV path appear as their own
+        first-class keys, separate from the M=prompt_len prefill ones,
+        so prefill and decode tune independently (DESIGN.md §13).
+        Returns ``[]`` in dense mode (nothing is routed).
+        """
+        if self.cfg.sparse_mode == "dense":
+            return []
+        cfg = dataclasses.replace(self.cfg, sparse_autotune=True)
+        rc = dataclasses.replace(self.rc or RunConfig(), scan_unroll=True)
+        before = set(sparse.autotune.OBSERVED)
+        toks = jnp.ones((1, prompt_len), jnp.int32)
+        caches = tfm.init_caches(cfg, 1, self.capacity,
+                                 quantized=bool(self.rc
+                                                and self.rc.kv_quant))
+        with sparse.dispatch.warnings_suppressed():
+            out = tfm.forward(self.params, {"tokens": toks}, cfg,
+                              mode="prefill", caches=caches,
+                              positions=jnp.arange(prompt_len,
+                                                   dtype=jnp.int32),
+                              rc=rc, weight_plans=self.weight_plans)
+            caches, pos = out.caches, prompt_len
+            nxt = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
+            for _ in range(decode_steps):
+                out = tfm.forward(self.params, {"tokens": nxt[:, None]},
+                                  cfg, mode="decode", caches=caches,
+                                  positions=jnp.asarray([pos], jnp.int32),
+                                  rc=rc, weight_plans=self.weight_plans)
+                caches, pos = out.caches, pos + 1
+                nxt = jnp.argmax(out.logits[:, 0],
+                                 axis=-1).astype(jnp.int32)
+        return sorted(set(sparse.autotune.OBSERVED) - before)
 
     def _cache_occupancy_entries(self, caches) -> List[dict]:
         """Per-layer sparse-cache occupancy, from the maintained bitmaps."""

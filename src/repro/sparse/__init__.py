@@ -16,6 +16,8 @@ and the model zoo (DESIGN.md §4):
   serving and benchmarks.
 * :mod:`~repro.sparse.kvcache`    — :class:`SparseKVCache`, the
   bitmap-scheduled KV cache for decode-path attention (DESIGN.md §10).
+* :mod:`~repro.sparse.autotune`   — the per-(arch × shape) knob/backend
+  autotuner and its persistent tuning cache (DESIGN.md §13).
 """
 from repro.sparse import tape  # noqa: F401
 from repro.sparse.activation import (  # noqa: F401
@@ -59,7 +61,9 @@ from repro.sparse.weights import (  # noqa: F401
     as_planned,
     plan_weight,
 )
-# imported last: kvcache pulls in repro.models.cache, which may re-enter
-# this package mid-initialisation (everything above must already be bound)
+# imported last: kvcache pulls in repro.models.cache, and autotune pulls
+# in repro.launch — both may re-enter this package mid-initialisation
+# (everything above must already be bound)
 from repro.sparse import kvcache  # noqa: E402,F401
 from repro.sparse.kvcache import SparseKVCache  # noqa: E402,F401
+from repro.sparse import autotune  # noqa: E402,F401

@@ -40,6 +40,7 @@ the math.
 """
 from __future__ import annotations
 
+import contextlib
 import warnings
 from typing import Optional, Tuple, Union
 
@@ -62,6 +63,7 @@ CONDENSE = (None, "k")
 # cannot run, a cached plan that cannot be sliced) must be *audible*, but
 # once per process, not once per matmul
 _WARNED: set = set()
+_SUPPRESS_WARNINGS = False
 
 
 def warn_once(key: str, message: str) -> None:
@@ -70,9 +72,28 @@ def warn_once(key: str, message: str) -> None:
     The dispatch layer's contract is that an unsupported combination
     never *silently* changes what the stats tape reports — it either
     raises or warns here (ISSUE 4 / DESIGN.md §11)."""
-    if key not in _WARNED:
+    if key not in _WARNED and not _SUPPRESS_WARNINGS:
         _WARNED.add(key)
         warnings.warn(message, RuntimeWarning, stacklevel=3)
+
+
+@contextlib.contextmanager
+def warnings_suppressed():
+    """Silence :func:`warn_once` within a region.
+
+    For passes whose *purpose* is to hit the fallback paths — e.g.
+    ``Engine.autotune_keys`` discovering cache keys by running with an
+    unpopulated cache, where every miss is expected, not a
+    misconfiguration.  Suppressed keys are not marked warned, so a real
+    later miss stays audible.
+    """
+    global _SUPPRESS_WARNINGS
+    prev = _SUPPRESS_WARNINGS
+    _SUPPRESS_WARNINGS = True
+    try:
+        yield
+    finally:
+        _SUPPRESS_WARNINGS = prev
 
 
 def kwargs_from_config(cfg, out_dtype=None) -> dict:
@@ -83,6 +104,13 @@ def kwargs_from_config(cfg, out_dtype=None) -> dict:
     accumulation through it so the XLA fallback matches dense attention
     bit-for-bit; ``moe._expert_ffn`` forwards it the same way for
     callers that need a pinned accumulation dtype.
+
+    With ``cfg.sparse_autotune`` the returned kwargs also carry the
+    per-call tuning-cache consultation (DESIGN.md §13): at each dispatch
+    the cache is probed for the call's bucketed key, and on a hit the
+    served knob vector overrides the config geometry/backend.  The
+    config constants above stay in the dict as the fallback tier — a
+    miss (or stale entry) executes exactly what an untuned run would.
     """
     kw = dict(mode=cfg.sparse_mode, block_m=cfg.sparse_block_m,
               block_n=cfg.sparse_block_n, slice_k=cfg.sparse_slice_k,
@@ -90,7 +118,35 @@ def kwargs_from_config(cfg, out_dtype=None) -> dict:
               condense="k" if cfg.sparse_kcondense else None)
     if out_dtype is not None:
         kw["out_dtype"] = out_dtype
+    if getattr(cfg, "sparse_autotune", False):
+        kw["autotune"] = True
+        ts = getattr(cfg, "sparse_tune_sparsity", -1.0)
+        if ts is not None and ts >= 0:
+            kw["tune_sparsity"] = float(ts)
     return kw
+
+
+def _consult_autotune(op: str, m: int, n: int, k: int, dtype,
+                      tune_sparsity, interp: bool, extra: str = ""):
+    """Probe the tuning cache for one call site (autotune=True paths).
+
+    Returns the served :class:`~repro.sparse.autotune.Knobs` or None;
+    a miss is audible once per bucketed key and falls back to the
+    caller's config constants — the cache can change the schedule only,
+    so numerics are untouched either way.
+    """
+    from repro.sparse import autotune as atn
+    kn = atn.lookup(op, m, n, k, dtype=dtype, sparsity=tune_sparsity,
+                    interpret=interp, extra=extra)
+    if kn is None:
+        key = atn.make_key(op, m, n, k, dtype=dtype,
+                           sparsity=tune_sparsity, extra=extra)
+        warn_once(
+            f"autotune:miss:{key}",
+            f"sparse.{op}: no tuning-cache entry for {key} — falling "
+            "back to the config constants (run `bench_models --tune` "
+            "to populate the cache)")
+    return kn
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -158,13 +214,16 @@ def _lhs_element(x: Operand, x2: jax.Array, block_m: int,
     return pln.element_activity_lhs(x2, block_m)
 
 
-def _rhs_element(w_arr: jax.Array, block_n: int) -> jax.Array:
+def _rhs_element(w: Weight, w_arr: jax.Array, block_n: int) -> jax.Array:
     """(K, Nt) block-col element k-activity of the weight side.
 
     ``PlannedWeight`` stores its pruning mask applied to the values, so
     ``w != 0`` is the exact static element structure on either operand
-    form.
+    form; a plan built with ``block_n`` serves the memoized activity
+    instead of re-reducing it per call.
     """
+    if isinstance(w, PlannedWeight):
+        return w.col_element_activity(block_n)
     return pln.element_activity_rhs(w_arr, block_n)
 
 
@@ -182,6 +241,8 @@ def matmul(
     collect_stats: bool = False,
     name: str = "matmul",
     out_dtype=None,
+    autotune: bool = False,
+    tune_sparsity: Optional[float] = None,
 ) -> Tuple[jax.Array, Optional[stats.StepCounts]]:
     """y = x @ w with mode-selectable dual-side sparse scheduling.
 
@@ -196,6 +257,13 @@ def matmul(
     schedule at element granularity — the fused K-condensation of
     DESIGN.md §12 — so unstructured sparsity inside k-slices is skipped,
     not just counted.
+    ``autotune`` consults the persistent tuning cache
+    (:mod:`repro.sparse.autotune`) for this call's bucketed
+    (platform, dtype, M/N/K, sparsity) key; a hit overrides the
+    geometry *and* backend knobs above, a miss warns once per key and
+    keeps them — schedule-only either way, so outputs are unchanged.
+    ``tune_sparsity`` is the static activation-sparsity hint the key is
+    bucketed under (None → the 'any' bucket).
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -215,6 +283,16 @@ def matmul(
     w_arr = w_arr.astype(xv.dtype)
 
     interp = _auto_interpret(interpret)
+    if autotune and mode != "dense":
+        kn = _consult_autotune("matmul", t, n, k, x2.dtype,
+                               tune_sparsity, interp)
+        if kn is not None:
+            tuned = kn.kwargs()
+            block_m, block_n, slice_k = (tuned["block_m"],
+                                         tuned["block_n"],
+                                         tuned["slice_k"])
+            use_kernel = tuned["use_kernel"]
+            condense = tuned["condense"]
     block_m, block_n, slice_k = pln.clamp_geometry(
         t, n, k, block_m, block_n, slice_k, interp)
     mt, nt, s = (pln._cdiv(t, block_m), pln._cdiv(n, block_n),
@@ -255,7 +333,7 @@ def matmul(
                 # k's, so both the schedule and the accounting are
                 # ceil(nnz_AND / slice_k) per block (DESIGN.md §12)
                 col_e = _lhs_element(x, x2, block_m, mode)
-                row_e = _rhs_element(w_arr, block_n)
+                row_e = _rhs_element(w, w_arr, block_n)
                 if use_kernel:
                     kplan = pln.plan_kcondensed(col_e, row_e, slice_k)
                     counts = kplan.counts
@@ -330,8 +408,12 @@ def _grouped_lhs_element(x: Operand, xv: jax.Array, block_m: int,
         lambda mi: pln.element_activity_lhs(mi, block_m))(mask)
 
 
-def _grouped_rhs_element(w_arr: jax.Array, block_n: int) -> jax.Array:
-    """(E, K, Nt) per-expert block-col element k-activity."""
+def _grouped_rhs_element(w: Weight, w_arr: jax.Array,
+                         block_n: int) -> jax.Array:
+    """(E, K, Nt) per-expert block-col element k-activity (memoized on
+    a ``block_n``-planned :class:`PlannedWeight`)."""
+    if isinstance(w, PlannedWeight):
+        return w.col_element_activity(block_n)
     return jax.vmap(
         lambda wi: pln.element_activity_rhs(wi, block_n))(w_arr)
 
@@ -350,6 +432,8 @@ def grouped_matmul(
     collect_stats: bool = False,
     name: str = "grouped_matmul",
     out_dtype=None,
+    autotune: bool = False,
+    tune_sparsity: Optional[float] = None,
 ) -> Tuple[jax.Array, Optional[stats.StepCounts]]:
     """Batched-weights matmul: x (E, C, K) @ w (E, K, N) → (E, C, N).
 
@@ -363,7 +447,9 @@ def grouped_matmul(
     compute falls back to one XLA einsum with the same schedule
     accounting.  ``condense="k"`` plans (and with ``use_kernel``
     executes) per-expert schedules at element granularity
-    (DESIGN.md §12), same contract as :func:`matmul`.
+    (DESIGN.md §12), same contract as :func:`matmul` — as are
+    ``autotune``/``tune_sparsity`` (the grouped key additionally carries
+    the expert-count bucket).
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -380,6 +466,18 @@ def grouped_matmul(
     w_arr = w_arr.astype(xv.dtype)
 
     interp = _auto_interpret(interpret)
+    if autotune and mode != "dense":
+        from repro.sparse import autotune as atn
+        kn = _consult_autotune("grouped", c, n, k, xv.dtype,
+                               tune_sparsity, interp,
+                               extra=f"e{atn.bucket_dim(e)}")
+        if kn is not None:
+            tuned = kn.kwargs()
+            block_m, block_n, slice_k = (tuned["block_m"],
+                                         tuned["block_n"],
+                                         tuned["slice_k"])
+            use_kernel = tuned["use_kernel"]
+            condense = tuned["condense"]
     block_m, block_n, slice_k = pln.clamp_geometry(
         c, n, k, block_m, block_n, slice_k, interp)
     s = pln._cdiv(k, slice_k)
@@ -417,7 +515,7 @@ def grouped_matmul(
         if run_kernel or want_stats:
             if condense == "k":
                 cols_e = _grouped_lhs_element(x, xv, block_m, mode)
-                rows_e = _grouped_rhs_element(w_arr, block_n)
+                rows_e = _grouped_rhs_element(w, w_arr, block_n)
                 if run_kernel:
                     kplan = pln.plan_grouped_kcondensed(cols_e, rows_e,
                                                         slice_k)

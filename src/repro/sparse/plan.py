@@ -498,6 +498,90 @@ def effective_slice_k(k: int, slice_k: int = SLICE_K) -> int:
     return min(slice_k, max(8, k))
 
 
+# ---------------------------------------------------------------------------
+# knob validity (autotuner contract, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+# Per-core VMEM budget the kfused kernels' resident panels must fit in
+# (TPU v5e has ~16 MiB/core; leave headroom for the grid machinery).
+VMEM_BYTES = 16 * 2 ** 20
+SUBLANE = 8     # second-minor tile unit
+LANE = 128      # minor (lane) tile unit
+F32_BYTES = 4   # accumulator scratch dtype
+
+
+def _round_up(x: int, unit: int) -> int:
+    return _cdiv(max(x, 1), unit) * unit
+
+
+def kfused_panel_bytes(block_m: int, block_n: int, k: int, slice_k: int,
+                       dtype_bytes: int = 4) -> int:
+    """Resident-panel footprint of the kfused kernels for one grid step.
+
+    ``bitmap_spgemm_kfused_planned`` keeps the full-K operand panels
+    VMEM-resident so the packed-k gathers never leave the core:
+    a (block_m, Kp) A panel + a (Kp, block_n) B panel at the compute
+    dtype, plus the (block_m, block_n) f32 accumulator scratch, where
+    Kp = ceil(K / slice_k) · slice_k.
+    """
+    kp = _cdiv(max(k, 1), slice_k) * slice_k
+    return ((block_m * kp + kp * block_n) * dtype_bytes
+            + block_m * block_n * F32_BYTES)
+
+
+def slice_panel_bytes(block_m: int, block_n: int, slice_k: int,
+                      dtype_bytes: int = 4) -> int:
+    """Resident footprint of the slice-granular kernel for one grid step:
+    one (block_m, slice_k) A block + (slice_k, block_n) B block + the
+    f32 accumulator."""
+    return ((block_m * slice_k + slice_k * block_n) * dtype_bytes
+            + block_m * block_n * F32_BYTES)
+
+
+def knobs_valid(m: int, n: int, k: int, block_m: int, block_n: int,
+                slice_k: int, *, use_kernel: bool = False,
+                condense: Optional[str] = None, interpret: bool = False,
+                dtype_bytes: int = 4) -> bool:
+    """Is a (block_m, block_n, slice_k) knob vector valid for an
+    (m, n, k) problem?
+
+    The predicate every cache-served knob vector must satisfy before the
+    dispatch applies it (a stale cache must degrade to the config
+    fallback, never to a mis-tiled kernel):
+
+    * tile divisibility — block_m a multiple of the 8-sublane unit,
+      block_n a multiple of the 128-lane unit (8 under interpret, where
+      lanes are emulated), slice_k a multiple of 8;
+    * no over-tiling — each knob at most the problem dimension rounded
+      up to its tile unit (``clamp_geometry`` would silently shrink
+      anything larger, so the served vector would not be the one that
+      was tuned);
+    * slice_k ≤ K (rounded up to the sublane unit);
+    * VMEM panel fit for the kernel backends — the kfused kernels hold
+      full-K operand panels resident, the slice-granular kernel one
+      slice per step (:func:`kfused_panel_bytes` /
+      :func:`slice_panel_bytes` ≤ :data:`VMEM_BYTES`).
+    """
+    if min(m, n, k, block_m, block_n, slice_k) <= 0:
+        return False
+    lane = SUBLANE if interpret else LANE
+    if block_m % SUBLANE or block_n % lane or slice_k % SUBLANE:
+        return False
+    if block_m > _round_up(m, SUBLANE) or block_n > _round_up(n, lane):
+        return False
+    if slice_k > _round_up(k, SUBLANE):
+        return False
+    if use_kernel:
+        if condense == "k":
+            if kfused_panel_bytes(block_m, block_n, k, slice_k,
+                                  dtype_bytes) > VMEM_BYTES:
+                return False
+        elif slice_panel_bytes(block_m, block_n, slice_k,
+                               dtype_bytes) > VMEM_BYTES:
+            return False
+    return True
+
+
 def clamp_geometry(m: int, n: int, k: int, block_m: int, block_n: int,
                    slice_k: int, interpret: bool) -> Tuple[int, int, int]:
     """Clamp block sizes for small problems, keeping lane alignment.

@@ -32,14 +32,23 @@ PLAN_BUILDS = 0
 class PlannedWeight:
     """A (masked) weight matrix plus its precomputed slice activity.
 
-    w         : (K, N) weights with the pruning mask already applied, or
-                (E, K, N) stacked per-expert weights.
-    slice_act : (S, N) bool per-column k-slice activity (or (E, S, N)).
-    slice_k   : static granularity of ``slice_act``.
+    w            : (K, N) weights with the pruning mask already applied,
+                   or (E, K, N) stacked per-expert weights.
+    slice_act    : (S, N) bool per-column k-slice activity (or (E, S, N)).
+    slice_k      : static granularity of ``slice_act``.
+    elem_act     : optional (K, Nt) bool per-block-col *element*
+                   k-activity (or (E, K, Nt)) — the ``condense="k"``
+                   planning input, memoized at plan build so the
+                   dispatch never re-reduces ``w != 0`` per call.
+    elem_block_n : static block_n granularity of ``elem_act`` (0 = not
+                   cached).
     """
     w: jax.Array
     slice_act: jax.Array
     slice_k: int = dataclasses.field(metadata=dict(static=True))
+    elem_act: Optional[jax.Array] = None
+    elem_block_n: int = dataclasses.field(default=0,
+                                          metadata=dict(static=True))
 
     @property
     def shape(self):
@@ -58,14 +67,31 @@ class PlannedWeight:
             return pln.slice_activity_rhs(self.w, slice_k)
         return jax.vmap(lambda w: pln.slice_activity_rhs(w, slice_k))(self.w)
 
+    def col_element_activity(self, block_n: int) -> jax.Array:
+        """(K, Nt) element k-activity at ``block_n`` (cached fast path
+        when granularities match — re-planning at a different block_n,
+        e.g. after the autotuner retunes the geometry, re-reduces from
+        the stored masked values, bit-identically)."""
+        if self.elem_act is not None and block_n == self.elem_block_n:
+            return self.elem_act
+        if self.w.ndim == 2:
+            return pln.element_activity_rhs(self.w, block_n)
+        return jax.vmap(
+            lambda w: pln.element_activity_rhs(w, block_n))(self.w)
+
 
 def plan_weight(w: jax.Array, mask: Optional[jax.Array] = None,
-                slice_k: int = pln.SLICE_K) -> PlannedWeight:
+                slice_k: int = pln.SLICE_K,
+                block_n: Optional[int] = None) -> PlannedWeight:
     """Build the static weight-side plan (call once per layer).
 
     w: (K, N) or (E, K, N); mask (same shape, optional) is the pruning
     mask — applied to the stored values so downstream compute never
-    re-multiplies it.
+    re-multiplies it.  ``block_n`` additionally memoizes the
+    element-granular k-activity at that block granularity (the
+    ``condense="k"`` planning input); invalidation is by replanning —
+    the activity is derived from the stored masked values, so a new
+    ``plan_weight`` call is the only way the structure can change.
     """
     global PLAN_BUILDS
     PLAN_BUILDS += 1
@@ -73,11 +99,17 @@ def plan_weight(w: jax.Array, mask: Optional[jax.Array] = None,
         w = w * mask.astype(w.dtype)
     if w.ndim == 2:
         act = pln.slice_activity_rhs(w, slice_k)
+        elem = (pln.element_activity_rhs(w, block_n)
+                if block_n else None)
     elif w.ndim == 3:
         act = jax.vmap(lambda wi: pln.slice_activity_rhs(wi, slice_k))(w)
+        elem = (jax.vmap(
+            lambda wi: pln.element_activity_rhs(wi, block_n))(w)
+            if block_n else None)
     else:
         raise ValueError(f"plan_weight expects 2-D or 3-D, got {w.shape}")
-    return PlannedWeight(w=w, slice_act=act, slice_k=slice_k)
+    return PlannedWeight(w=w, slice_act=act, slice_k=slice_k,
+                         elem_act=elem, elem_block_n=block_n or 0)
 
 
 def stacked_slice_activity(w: jax.Array, slice_k: int = pln.SLICE_K
@@ -103,30 +135,60 @@ def as_planned(w, slice_k: int = pln.SLICE_K) -> PlannedWeight:
     return plan_weight(jnp.asarray(w), slice_k=slice_k)
 
 
+def stacked_element_activity(w: jax.Array, block_n: int) -> jax.Array:
+    """Element k-activity for arbitrarily stacked weights.
+
+    w: (..., K, N) → (..., K, Nt) bool — the ``condense="k"`` weight-side
+    planning input, built once at init/load like
+    :func:`stacked_slice_activity` (and counted as part of the same plan
+    build, not a separate one)."""
+    fn = functools.partial(pln.element_activity_rhs, block_n=block_n)
+    for _ in range(w.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(w)
+
+
 def plan_layer_weights(params, keys=("w_up", "w_down", "w_gate"),
-                       slice_k: int = pln.SLICE_K) -> dict:
+                       slice_k: int = pln.SLICE_K,
+                       block_n: Optional[int] = None) -> dict:
     """Build the plans dict for one layer's params (the glue every
     caller of ``mlp_forward(..., plans=...)`` needs): slice activities at
     the effective granularity the dispatch will clamp to, keyed like the
-    params, so :func:`planned_or_array` hits the cached fast path."""
-    return {
+    params, so :func:`planned_or_array` hits the cached fast path.
+
+    ``block_n`` additionally stores each weight's element k-activity
+    under a ``"<key>@elem"`` sibling entry (consumed by
+    :func:`planned_or_array`, ignored by consumers that iterate the
+    weight keys only — e.g. the shard_map MoE in_specs)."""
+    plans = {
         k: stacked_slice_activity(
             params[k], pln.effective_slice_k(params[k].shape[-2], slice_k))
         for k in keys if k in params}
+    if block_n:
+        for k in keys:
+            if k in params:
+                plans[f"{k}@elem"] = stacked_element_activity(
+                    params[k], block_n)
+    return plans
 
 
-def planned_or_array(w: jax.Array, plans, key: str, dtype, slice_k: int):
+def planned_or_array(w: jax.Array, plans, key: str, dtype, slice_k: int,
+                     block_n: int = 0):
     """Attach a cached slice activity (``plans[key]``) to a weight.
 
     The shared model-side glue: casts ``w`` to the activation dtype
     (casting never changes zero structure) and, when the plans pytree
     carries ``key``, wraps it as a :class:`PlannedWeight` at the
     effective granularity the dispatch will clamp to — otherwise returns
-    the bare array and the dispatch re-plans on the fly.
+    the bare array and the dispatch re-plans on the fly.  A
+    ``"<key>@elem"`` sibling entry (see :func:`plan_layer_weights`)
+    rides along as the memoized ``condense="k"`` element activity.
     """
     w = w.astype(dtype)
     if plans is not None and key in plans:
+        elem = plans.get(f"{key}@elem") if block_n else None
         return PlannedWeight(
             w=w, slice_act=plans[key],
-            slice_k=pln.effective_slice_k(w.shape[-2], slice_k))
+            slice_k=pln.effective_slice_k(w.shape[-2], slice_k),
+            elem_act=elem, elem_block_n=block_n if elem is not None else 0)
     return w

@@ -1,0 +1,311 @@
+"""Autotuner + tuning cache + latency flags (DESIGN.md §13, ISSUE 6).
+
+The §13 contract under test:
+
+* the persistent cache round-trips (save → reset → load) byte-exactly
+  and rejects foreign versions;
+* a served vector really overrides the dispatch (the executed schedule
+  changes), while a miss or stale entry degrades to the config
+  constants with identical numerics and a single audible warning;
+* tuned-vs-untuned parity ≤1e-4 on the whisper-ReLU and
+  nemotron-squared-ReLU MLP blocks — the cache changes schedules,
+  never math;
+* the serving-grade XLA latency flags apply additively and
+  idempotently to an environment (dryrun against a dict).
+
+The hypothesis properties (cache-served knobs always satisfy the
+planner validity predicates) live in ``test_autotune_properties.py``.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import sparse as sp
+from repro.configs.base import ModelConfig
+from repro.core import pruning
+from repro.launch import flags
+from repro.models import mlp as mlpm
+from repro.models import nn
+from repro.sparse import autotune as atn
+from repro.sparse import dispatch as dsp
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache():
+    """Each test gets a fresh global cache, telemetry, and warn-once set."""
+    atn.reset()
+    warned = set(dsp._WARNED)
+    yield
+    atn.reset()
+    dsp._WARNED.clear()
+    dsp._WARNED.update(warned)
+
+
+def _mlp_cfg(mlp_type: str, d: int = 64, f: int = 256) -> ModelConfig:
+    return ModelConfig(
+        name=f"tune_{mlp_type}", family="dense", n_layers=1, d_model=d,
+        n_heads=4, n_kv_heads=4, d_ff=f, vocab_size=256, mlp_type=mlp_type,
+        sparse_mode="dual", sparse_use_kernel=True,
+        sparse_block_m=8, sparse_block_n=16, sparse_slice_k=16)
+
+
+# ---------------------------------------------------------------------------
+# cache persistence
+# ---------------------------------------------------------------------------
+
+def test_cache_roundtrip(tmp_path):
+    path = str(tmp_path / "cache.json")
+    k1 = atn.record("matmul", 64, 128, 256, dtype=jnp.float32,
+                    sparsity=0.5, knobs=atn.Knobs("xla", 8, 8, 8),
+                    us=10.0, baseline_us=20.0)
+    k2 = atn.record("grouped", 16, 32, 64, dtype=jnp.float32,
+                    sparsity=None, knobs=atn.Knobs("kernel", 16, 16, 16),
+                    us=5.0, extra="e4")
+    before = dict(atn.get_cache().entries)
+    assert atn.save_cache(path) == path
+    atn.reset()
+    assert atn.get_cache().get(k1) is None
+    atn.load_cache(path)
+    assert atn.get_cache().entries == before
+    assert atn.get_cache().get(k1) == atn.Knobs("xla", 8, 8, 8)
+    assert atn.get_cache().get(k2) == atn.Knobs("kernel", 16, 16, 16)
+
+
+def test_cache_rejects_foreign_version(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text('{"version": 999, "entries": {}}')
+    with pytest.raises(ValueError, match="version"):
+        atn.load_cache(str(path))
+
+
+def test_record_mirrors_into_any_bucket_when_faster():
+    atn.record("matmul", 64, 64, 64, dtype=jnp.float32, sparsity=0.5,
+               knobs=atn.Knobs("kernel", 8, 8, 8), us=50.0)
+    assert atn.lookup("matmul", 64, 64, 64, dtype=jnp.float32,
+                      interpret=True) is not None  # no hint → 'any'
+    # a faster entry from another sparsity bucket takes the 'any' slot
+    atn.record("matmul", 64, 64, 64, dtype=jnp.float32, sparsity=0.9,
+               knobs=atn.Knobs("xla", 8, 8, 8), us=5.0)
+    assert atn.lookup("matmul", 64, 64, 64, dtype=jnp.float32,
+                      interpret=True) == atn.Knobs("xla", 8, 8, 8)
+
+
+# ---------------------------------------------------------------------------
+# keys + knob mapping
+# ---------------------------------------------------------------------------
+
+def test_decode_and_prefill_are_distinct_keys():
+    dec = atn.make_key("matmul", 1, 256, 512, dtype=jnp.float32)
+    pre = atn.make_key("matmul", 256, 256, 512, dtype=jnp.float32)
+    assert dec != pre and "|m1|" in dec and "|m256|" in pre
+
+
+def test_knobs_backend_mapping():
+    assert atn.Knobs("xla", 8, 8, 8).kwargs() == dict(
+        block_m=8, block_n=8, slice_k=8, use_kernel=False, condense=None)
+    assert atn.Knobs("kernel", 8, 8, 8).kwargs()["use_kernel"]
+    assert atn.Knobs("kfused", 8, 8, 8).kwargs()["condense"] == "k"
+    cfg = _mlp_cfg("relu")
+    assert atn.knobs_from_config(cfg).backend == "kernel"
+    assert atn.knobs_from_config(
+        dataclasses.replace(cfg, sparse_kcondense=True)).backend == "kfused"
+    assert atn.knobs_from_config(
+        dataclasses.replace(cfg, sparse_use_kernel=False)).backend == "xla"
+
+
+def test_kwargs_from_config_carries_autotune():
+    cfg = _mlp_cfg("relu")
+    assert "autotune" not in dsp.kwargs_from_config(cfg)
+    acfg = dataclasses.replace(cfg, sparse_autotune=True)
+    kw = dsp.kwargs_from_config(acfg)
+    assert kw["autotune"] and "tune_sparsity" not in kw
+    kw = dsp.kwargs_from_config(
+        dataclasses.replace(acfg, sparse_tune_sparsity=0.5))
+    assert kw["tune_sparsity"] == 0.5
+
+
+# ---------------------------------------------------------------------------
+# dispatch consultation: hit overrides, miss/stale fall back
+# ---------------------------------------------------------------------------
+
+def _operands(rng, m=16, n=32, k=64):
+    x = jnp.asarray(rng.normal(size=(1, m, k)).astype(np.float32))
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    w = w * np.asarray(pruning.block_mask(jnp.asarray(w), 0.5,
+                                          block=(8, 8)), np.float32)
+    return x, jnp.asarray(w)
+
+
+def test_served_knobs_override_dispatch(rng):
+    x, w = _operands(rng)
+    kw = dict(mode="dual", block_m=8, block_n=8, slice_k=8,
+              use_kernel=True, collect_stats=True, interpret=True)
+    with sp.tape.collect() as entries:
+        y0, _ = sp.matmul(x, w, name="cfg", **kw)
+    # serve XLA knobs for this call site: the executed schedule must
+    # switch from the kernel's condensed steps to the dense fallback
+    atn.record("matmul", 16, 32, 64, dtype=jnp.float32, sparsity=None,
+               knobs=atn.Knobs("xla", 8, 8, 8), us=1.0)
+    hits0 = atn.HITS
+    with sp.tape.collect() as entries2:
+        y1, _ = sp.matmul(x, w, name="tuned", autotune=True, **kw)
+    assert atn.HITS == hits0 + 1
+    cfg_e = sp.tape.summarize(entries)[0]
+    tuned_e = sp.tape.summarize(entries2)[0]
+    assert cfg_e["executed_steps"] == cfg_e["sparse_steps"]
+    assert tuned_e["executed_steps"] == tuned_e["dense_steps"]
+    assert float(jnp.abs(y1 - y0).max()) <= 1e-4
+
+
+def test_miss_warns_once_and_matches_untuned(rng):
+    x, w = _operands(rng)
+    kw = dict(mode="dual", block_m=8, block_n=8, slice_k=8,
+              use_kernel=True, interpret=True)
+    y0, _ = sp.matmul(x, w, name="plain", **kw)
+    misses0 = atn.MISSES
+    with pytest.warns(RuntimeWarning, match="tuning-cache"):
+        y1, _ = sp.matmul(x, w, name="miss", autotune=True, **kw)
+    assert atn.MISSES > misses0
+    assert float(jnp.abs(y1 - y0).max()) == 0.0
+    # second miss on the same key is silent (warn-once)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        sp.matmul(x, w, name="miss2", autotune=True, **kw)
+    assert not [r for r in rec if "tuning-cache" in str(r.message)]
+
+
+def test_warnings_suppressed_keeps_later_miss_audible(rng):
+    x, w = _operands(rng)
+    kw = dict(mode="dual", block_m=8, block_n=8, slice_k=8,
+              use_kernel=True, interpret=True)
+    with dsp.warnings_suppressed():
+        sp.matmul(x, w, name="quiet", autotune=True, **kw)
+    with pytest.warns(RuntimeWarning, match="tuning-cache"):
+        sp.matmul(x, w, name="loud", autotune=True, **kw)
+
+
+def test_stale_entry_degrades_to_config(rng):
+    x, w = _operands(rng)
+    key = atn.make_key("matmul", 16, 32, 64, dtype=jnp.float32)
+    # slice_k=12 violates the sublane-divisibility predicate: the entry
+    # must be treated as stale, never reach a kernel
+    atn.get_cache().entries[key] = {
+        "backend": "kernel", "block_m": 8, "block_n": 8, "slice_k": 12,
+        "us": 1.0, "baseline_us": None, "source": "tuned"}
+    kw = dict(mode="dual", block_m=8, block_n=8, slice_k=8,
+              use_kernel=True, interpret=True)
+    y0, _ = sp.matmul(x, w, name="plain", **kw)
+    stale0 = atn.STALE
+    with dsp.warnings_suppressed():
+        y1, _ = sp.matmul(x, w, name="stale", autotune=True, **kw)
+    assert atn.STALE > stale0
+    assert float(jnp.abs(y1 - y0).max()) == 0.0
+
+
+def test_lookup_records_observations():
+    assert atn.lookup("matmul", 1, 32, 64, dtype=jnp.float32,
+                      interpret=True) is None
+    (key, obs), = atn.OBSERVED.items()
+    assert "|m1|" in key and obs["m"] == 1 and obs["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end parity on the model blocks: schedules change, math doesn't
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mlp_type,serve", [
+    ("relu", atn.Knobs("xla", 8, 8, 8)),        # whisper-style
+    ("relu2", atn.Knobs("kernel", 8, 8, 8)),    # nemotron-style
+])
+def test_tuned_mlp_block_matches_untuned(rng, mlp_type, serve):
+    cfg = _mlp_cfg(mlp_type)
+    params, _ = nn.unzip(mlpm.init_mlp(jax.random.PRNGKey(0), cfg))
+    for key in ("w_up", "w_down"):
+        mask = pruning.block_mask(params[key], 0.5, block=(1, 8))
+        params[key] = params[key] * mask.astype(params[key].dtype)
+    plans = sp.weights.plan_layer_weights(params,
+                                         slice_k=cfg.sparse_slice_k)
+    x = jnp.asarray(rng.normal(size=(1, 16, cfg.d_model))
+                    .astype(np.float32))
+    y0 = mlpm.mlp_forward(params, x, cfg, plans=plans)
+
+    # discovery pass: the block's own dispatches name the keys to serve
+    acfg = dataclasses.replace(cfg, sparse_autotune=True)
+    with dsp.warnings_suppressed():
+        mlpm.mlp_forward(params, x, acfg, plans=plans)
+    assert atn.OBSERVED
+    for obs in list(atn.OBSERVED.values()):
+        atn.record(obs["op"], obs["m"], obs["n"], obs["k"],
+                   dtype=jnp.dtype(obs["dtype"]), sparsity=obs["sparsity"],
+                   knobs=serve, us=1.0, extra=obs["extra"])
+
+    hits0 = atn.HITS
+    y1 = mlpm.mlp_forward(params, x, acfg, plans=plans)
+    assert atn.HITS > hits0
+    assert float(jnp.abs(y1 - y0).max()) <= 1e-4
+
+
+def test_engine_autotune_keys_surface_decode_shapes():
+    from repro.configs import smoke_config
+    from repro.models import transformer as tfm
+    from repro.serving.engine import Engine
+
+    cfg = smoke_config("qwen1.5-110b")
+    if cfg.sparse_mode == "dense":
+        cfg = dataclasses.replace(cfg, sparse_mode="dual")
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, slots=1, capacity=16)
+    keys = eng.autotune_keys(prompt_len=8, decode_steps=1)
+    assert keys
+    assert any("|m1|" in k for k in keys), keys      # decode, first-class
+    assert any("|m8|" in k for k in keys), keys      # prefill
+    assert all(k in atn.OBSERVED for k in keys)
+
+
+# ---------------------------------------------------------------------------
+# serving-grade XLA latency flags (dryrun against a dict env)
+# ---------------------------------------------------------------------------
+
+def test_latency_flags_apply_to_env_dict():
+    env = {}
+    merged = flags.apply_latency_flags("gpu", env=env)
+    assert env["XLA_FLAGS"] == merged
+    for f in flags.LATENCY_FLAGS["gpu"]:
+        assert f in merged.split()
+
+
+def test_latency_flags_idempotent_and_additive():
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+    once = flags.apply_latency_flags("gpu", env=env)
+    twice = flags.apply_latency_flags("gpu", env=env)
+    assert once == twice
+    parts = twice.split()
+    assert parts[0] == "--xla_force_host_platform_device_count=8"
+    assert len(parts) == 1 + len(flags.LATENCY_FLAGS["gpu"])
+
+
+def test_latency_flags_resolve_platform_from_env():
+    # only the running platform's flags apply — XLA aborts on options
+    # its build doesn't register, so there is no "all platforms" mode
+    env = {"JAX_PLATFORMS": "tpu,cpu"}
+    merged = flags.apply_latency_flags(env=env)
+    assert set(merged.split()) == set(flags.LATENCY_FLAGS["tpu"])
+    assert not any(f in merged for f in flags.LATENCY_FLAGS["gpu"])
+    env2 = {"XLA_FLAGS": "--keep=1", "JAX_PLATFORM_NAME": "cpu"}
+    assert flags.apply_latency_flags(env=env2) == "--keep=1"  # cpu no-op
+
+
+def test_latency_flags_unknown_platform_warns_and_applies_nothing():
+    env = {}
+    with pytest.warns(RuntimeWarning, match="platform"):
+        assert flags.apply_latency_flags(env=env) == ""
+
+
+def test_runconfig_carries_latency_flags_toggle():
+    from repro.configs.base import RunConfig
+    assert RunConfig().latency_flags is False
+    assert RunConfig(latency_flags=True).latency_flags is True

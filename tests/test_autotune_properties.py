@@ -1,0 +1,86 @@
+"""Property tests: cache-served knobs satisfy the planner predicates.
+
+The safety half of the §13 contract: whatever is *in* the tuning cache
+— a stale entry from another repo state, a hand-edited file, outright
+junk — a :func:`repro.sparse.autotune.lookup` either re-validates the
+vector against :func:`repro.sparse.plan.knobs_valid` for the actual
+call-site shape or returns None (config fallback).  Tile divisibility,
+``slice_k ≤ K``, and the VMEM panel bound can never be violated by a
+cache hit, so a served schedule always reaches a kernel the planner
+could have built itself.
+
+Runs under a deterministic hypothesis profile (derandomized) so CI is
+reproducible; set ``HYPOTHESIS_PROFILE=dev`` for local random exploring.
+"""
+import os
+
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import autotune as atn
+from repro.sparse import plan as pln
+
+settings.register_profile("ci", max_examples=50, deadline=None,
+                          derandomize=True)
+settings.register_profile("dev", max_examples=50, deadline=None)
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+
+_shapes = st.tuples(st.integers(1, 300), st.integers(1, 300),
+                    st.integers(1, 300))
+
+
+@given(shape=_shapes,
+       backend=st.sampled_from(atn.BACKENDS),
+       bm=st.integers(1, 512), bn=st.integers(1, 1024),
+       sk=st.integers(1, 2048),
+       interpret=st.booleans())
+def test_lookup_never_serves_invalid_knobs(shape, backend, bm, bn, sk,
+                                           interpret):
+    atn.reset()
+    m, n, k = shape
+    key = atn.make_key("matmul", m, n, k, dtype=jnp.float32)
+    atn.get_cache().entries[key] = {
+        "backend": backend, "block_m": bm, "block_n": bn, "slice_k": sk,
+        "us": 1.0, "baseline_us": None, "source": "tuned"}
+    kn = atn.lookup("matmul", m, n, k, dtype=jnp.float32,
+                    interpret=interpret)
+    if kn is not None:
+        kw = kn.kwargs()
+        assert pln.knobs_valid(m, n, k, kn.block_m, kn.block_n, kn.slice_k,
+                               use_kernel=kw["use_kernel"],
+                               condense=kw["condense"],
+                               interpret=interpret)
+        assert kn.slice_k <= pln._round_up(k, 8)
+        assert kn.backend != "kfused" or pln.kfused_panel_bytes(
+            kn.block_m, kn.block_n, k, kn.slice_k) <= pln.VMEM_BYTES
+
+
+@given(shape=_shapes, a_sp=st.floats(0.0, 1.0), w_sp=st.floats(0.0, 1.0),
+       interpret=st.booleans())
+def test_candidates_are_valid_and_include_xla(shape, a_sp, w_sp, interpret):
+    """Everything the generator proposes could actually be dispatched —
+    and the XLA fallback stays in every sweep so the kernel-vs-XLA
+    crossover is always measured, never assumed."""
+    m, n, k = shape
+    cands = atn.candidates(m, n, k, a_sparsity=a_sp, w_sparsity=w_sp,
+                           interpret=interpret, max_candidates=6)
+    assert cands, (m, n, k)
+    assert any(c.backend == "xla" for c in cands)
+    for c in cands:
+        assert c.valid_for(m, n, k, interpret=interpret), (c, m, n, k)
+
+
+@given(m=st.integers(1, 512), s=st.one_of(
+    st.none(), st.floats(-0.5, 1.5, allow_nan=False)))
+def test_key_buckets_are_stable(m, s):
+    """Same observation → same key; decode (M=1) never collides with a
+    multi-row bucket."""
+    k1 = atn.make_key("matmul", m, 64, 64, dtype=jnp.float32, sparsity=s)
+    k2 = atn.make_key("matmul", m, 64, 64, dtype=jnp.float32, sparsity=s)
+    assert k1 == k2
+    if m > 1:
+        assert k1 != atn.make_key("matmul", 1, 64, 64, dtype=jnp.float32,
+                                  sparsity=s)
