@@ -1,0 +1,121 @@
+"""Continuous-batching engine benchmark: throughput vs slot count.
+
+A fixed workload of requests with mixed prompt lengths runs through the
+paged ``repro.serving.engine.Engine`` at increasing slot counts.  Each
+configuration does one untimed warmup wave (compiles the bucketed
+prefill, the insert scatter, and the single batched decode step) and
+then a timed wave on the same engine, so the steady-state numbers
+measure dispatch + execution, not tracing.
+
+Per configuration we emit
+
+* ``serving.tick.slots{N}`` — median-free wall time per engine tick
+  (one tick == exactly one jitted batched decode call spanning all
+  active slots), with derived tokens/s over the timed wave, and
+* the compile evidence from ``Engine.stats()``: ``decode_traces`` must
+  stay 1 per engine regardless of slot count (the decode step is traced
+  once for the ``(slots,)`` batch and reused every tick) and
+  ``prefill_traces`` stays at the number of distinct bucket geometries,
+  not the number of admissions.  The timed wave must add zero traces.
+
+``--sparse`` routes decode through the bitmap-scheduled sparse KV path
+(grouped_matmul with one E=B*KV grid spanning slots) instead of dense
+attention over the paged pool.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.bench_utils import dump_json, emit
+from repro.configs import smoke_config
+from repro.configs.base import ServeConfig
+from repro.models import transformer as tfm
+from repro.serving.engine import Engine, Request
+
+RNG = np.random.default_rng(0)
+
+
+def _workload(n_req: int, lens, vocab: int, max_new: int, uid0: int = 0):
+    reqs = []
+    for i in range(n_req):
+        length = lens[i % len(lens)]
+        prompt = [int(t) for t in RNG.integers(1, vocab, size=length)]
+        reqs.append(Request(uid=uid0 + i, prompt=prompt,
+                            max_new_tokens=max_new))
+    return reqs
+
+
+def _drive(eng: Engine, reqs) -> float:
+    """Submit + run to completion; return elapsed wall seconds."""
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_to_completion()
+    assert len(done) == len(reqs)
+    return time.perf_counter() - t0
+
+
+def run(smoke: bool = False, sparse: bool = False) -> None:
+    cfg = smoke_config("qwen1.5-110b")
+    if sparse:
+        cfg = dataclasses.replace(cfg, sparse_mode="dual", sparse_kv=True,
+                                  sparse_block_t=8)
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    mode = "sparse" if sparse else "dense"
+
+    slot_counts = (1, 2, 4) if smoke else (1, 2, 4, 8)
+    n_req = 6 if smoke else 16
+    max_new = 6 if smoke else 16
+    lens = (3, 5, 8, 12)           # mixed prompt lengths (two buckets)
+
+    print(f"# bench_serving [{mode}]: {n_req} requests, prompt lens "
+          f"{lens}, {max_new} new tokens each")
+    for slots in slot_counts:
+        sv = ServeConfig(slots=slots, capacity=64)
+        eng = Engine(params, cfg, serve=sv)
+        # warmup wave: compiles prefill (per bucket), insert, decode
+        _drive(eng, _workload(n_req, lens, cfg.vocab_size, max_new))
+        warm = eng.stats()
+        # timed wave on the same engine: must hit the jit caches only
+        reqs = _workload(n_req, lens, cfg.vocab_size, max_new,
+                         uid0=n_req)
+        dt = _drive(eng, reqs)
+        st = eng.stats()
+        new_traces = (st["prefill_traces"] - warm["prefill_traces"]
+                      + st["decode_traces"] - warm["decode_traces"])
+        assert st["decode_traces"] == 1, st
+        assert new_traces == 0, (warm, st)
+        ticks = st["ticks"] - warm["ticks"]
+        decode_calls = st["decode_calls"] - warm["decode_calls"]
+        assert decode_calls <= ticks      # one batched decode per tick
+        toks = sum(len(r.output) for r in reqs)
+        emit(f"serving.tick.slots{slots}.{mode}",
+             dt / max(ticks, 1) * 1e6,
+             f"tok_s={toks / dt:.1f};ticks={ticks};"
+             f"decode_calls={decode_calls};"
+             f"decode_traces={st['decode_traces']};"
+             f"prefill_traces={st['prefill_traces']};"
+             f"evictions={st['evictions']};"
+             f"pages_free={st['pages_free']};"
+             f"pages_total={st['pages_total']}")
+    print(f"# OK [{mode}]: decode traced once per engine, timed wave "
+          "added zero traces, one batched decode call per tick")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shapes for CI")
+    ap.add_argument("--sparse", action="store_true",
+                    help="also run the bitmap-scheduled sparse KV decode "
+                         "path (in addition to dense)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write machine-readable results to PATH")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+    if args.sparse:
+        run(smoke=args.smoke, sparse=True)
+    dump_json(args.json, {"bench": "bench_serving", "smoke": args.smoke})

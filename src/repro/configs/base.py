@@ -157,6 +157,37 @@ def _lcm(a: int, b: int) -> int:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Continuous-batching engine knobs (repro.serving, DESIGN.md §14).
+
+    The engine decodes a fixed ``slots``-wide batch in one jitted step;
+    every slot's KV history lives in pages of one shared physical pool
+    (``pages`` × ``page_size`` cache slots) indexed through a per-slot
+    block table, so freed pages recycle across requests and the pool may
+    be over-subscribed (``pages`` < ``slots`` × blocks-per-slot) with
+    preemption on exhaustion.
+    """
+    slots: int = 4
+    capacity: int = 256        # logical per-slot cache slots (rounded up
+                               # to a page multiple)
+    page_size: int = 0         # cache slots per page; 0 → sparse_block_t
+                               # (page occupancy ≡ the level-2 bitmap)
+    pages: int = 0             # physical pool pages; 0 → fully
+                               # provisioned (slots × capacity/page_size)
+    prefill_bucket: int = 0    # pad prompts up to a bucket multiple so
+                               # prefill compiles once per bucket;
+                               # 0 → page_size (exact length for MoE
+                               # models — token-count-dependent expert
+                               # capacity makes padding non-neutral)
+    max_prefill_batch: int = 4  # same-bucket admissions packed into one
+                                # batched prefill call
+    policy: str = "fcfs"       # admission order: fcfs | cost (cheapest
+                               # estimated sparse compute first, from the
+                               # StepCounts tape)
+    eos_id: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
 class ShapeConfig:
     """One assigned (input-shape) cell."""
     name: str                      # train_4k | prefill_32k | decode_32k | long_500k

@@ -33,14 +33,17 @@ def _rope_angles(positions: jax.Array, dim: int, theta: float) -> Tuple[
 
 def apply_rope(x: jax.Array, positions: jax.Array, style: str,
                theta: float) -> jax.Array:
-    """x: (B, S, H, hd); positions: (S,) absolute token positions."""
+    """x: (B, S, H, hd); positions: (S,) shared or (B, S) per-row
+    absolute token positions (the multi-slot batched decode)."""
     if style == "none":
         return x
     hd = x.shape[-1]
     rot = hd if style == "half" else hd // 2  # chatglm "2d": half the dims
-    cos, sin = _rope_angles(positions, rot, theta)       # (S, rot/2)
-    cos = cos[None, :, None, :].astype(x.dtype)
-    sin = sin[None, :, None, :].astype(x.dtype)
+    cos, sin = _rope_angles(positions, rot, theta)  # (S|B,S, rot/2)
+    if positions.ndim == 1:
+        cos, sin = cos[None], sin[None]
+    cos = cos[:, :, None, :].astype(x.dtype)
+    sin = sin[:, :, None, :].astype(x.dtype)
     xr, xp = x[..., :rot], x[..., rot:]
     x1, x2 = jnp.split(xr, 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
@@ -81,19 +84,24 @@ def _attend_block(q, k, v, qpos, kpos, window) -> Tuple[jax.Array, jax.Array,
     """Unnormalised attention over one KV block.
 
     q: (B, Sq, KV, G, hd); k/v: (B, Skv, KV, hd);
-    qpos: (Sq,), kpos: (Skv,) absolute positions (-1 = invalid slot).
+    qpos: (Sq,) / kpos: (Skv,) absolute positions (-1 = invalid slot),
+    each optionally batched with a (B, ·) leading dim (per-slot serving
+    decode) — broadcasting keeps the shared form bit-identical.
     Returns (acc (B,Sq,KV,G,hd) f32, row max m, row sumexp l).
     """
     scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
                         preferred_element_type=jnp.float32)
     scores = scores * (q.shape[-1] ** -0.5)
-    valid = (kpos[None, :] >= 0) & (kpos[None, :] <= qpos[:, None])
+    kp = kpos[..., None, :]                 # (1|B, 1, Skv)-broadcastable
+    qp = qpos[..., :, None]                 # (1|B, Sq, 1)-broadcastable
+    valid = (kp >= 0) & (kp <= qp)
     if window is not None:
-        valid &= kpos[None, :] > (qpos[:, None] - window)
-    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+        valid &= kp > (qp - window)
+    vb = valid if valid.ndim == 3 else valid[None]      # (B|1, Sq, Skv)
+    scores = jnp.where(vb[:, None, None], scores, NEG_INF)
     m = jnp.max(scores, axis=-1)                       # (B,KV,G,Sq)
     e = jnp.exp(scores - m[..., None])
-    e = jnp.where(valid[None, None, None], e, 0.0)
+    e = jnp.where(vb[:, None, None], e, 0.0)
     l = jnp.sum(e, axis=-1)
     acc = jnp.einsum("bkgqs,bskd->bqkgd", e, v.astype(jnp.float32),
                      preferred_element_type=jnp.float32)
@@ -130,7 +138,10 @@ def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
         nc = skv // chunk
         ks_ = k.reshape(b, nc, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
         vs_ = v.reshape(b, nc, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
-        kposc = kpos.reshape(nc, chunk)
+        if kpos.ndim == 1:
+            kposc = kpos.reshape(nc, chunk)
+        else:  # per-row key positions (paged multi-slot decode)
+            kposc = kpos.reshape(b, nc, chunk).transpose(1, 0, 2)
         if k_scale is None:
             xs = (ks_, vs_, kposc)
         else:
@@ -200,14 +211,21 @@ def attend_sparse(q: jax.Array, cache, cfg: ModelConfig, *,
     g = h // kvh
     ne = b * kvh
 
-    # dequantise / cast exactly like the dense decode branches
-    if cache.quantized:
+    # dequantise / cast exactly like the dense decode branches; paged
+    # caches gather their logical per-slot view first (DESIGN.md §14)
+    paged = isinstance(cache, skvc.PagedSparseKVCache)
+    if paged:
+        kd, vd = skvc.paged_read(cache, dtype=q.dtype)
+        occ = skvc.paged_occupancy_mask(cache)          # (B, T)
+    elif cache.quantized:
         kd = (cache.k.astype(jnp.bfloat16)
               * cache.k_scale.astype(jnp.bfloat16)).astype(q.dtype)
         vd = (cache.v.astype(jnp.bfloat16)
               * cache.v_scale.astype(jnp.bfloat16)).astype(q.dtype)
+        occ = skvc.occupancy_mask(cache)                # (T,)
     else:
         kd, vd, _ = kvc.read(cache, dtype=q.dtype)
+        occ = skvc.occupancy_mask(cache)
     kd_e = kd.transpose(0, 2, 1, 3).reshape(ne, t, hd)
     vd_e = vd.transpose(0, 2, 1, 3).reshape(ne, t, hd)
     qw = q.reshape(b, kvh, g, hd).transpose(0, 1, 3, 2).reshape(ne, hd, g)
@@ -216,8 +234,18 @@ def attend_sparse(q: jax.Array, cache, cfg: ModelConfig, *,
     # Occupancy ≡ kpos >= 0 (property-tested), so ``sched`` doubles as
     # the dense path's softmax validity mask bit-for-bit; the dispatch
     # layer derives the block-level front-pack from the operand metadata.
-    sched = pln.kv_decode_slots(skvc.occupancy_mask(cache), kpos,
-                                qpos[0], window)
+    # Paged multi-slot decode carries per-row positions: qpos (B, 1) and
+    # kpos (B, T) yield a per-slot (B, T) schedule, expanded over the kv
+    # heads of each slot to per-problem (E, T) metadata.
+    qref = qpos[0] if qpos.ndim == 1 else qpos
+    sched = pln.kv_decode_slots(occ, kpos, qref, window)
+    if sched.ndim == 2:
+        sched_e = jnp.broadcast_to(
+            sched[:, None, :], (b, kvh, t)).reshape(ne, t)
+        occ_e = jnp.broadcast_to(
+            occ[:, None, :], (b, kvh, t)).reshape(ne, t)
+    else:
+        sched_e, occ_e = sched, occ
     bt = pln.effective_slice_k(t, cfg.sparse_block_t)
     sk_hd = pln.effective_slice_k(hd, cfg.sparse_slice_k)
     # f32 accumulation pinned through the dispatch kwargs so the XLA
@@ -225,22 +253,23 @@ def attend_sparse(q: jax.Array, cache, cfg: ModelConfig, *,
     # per-matmul geometry overrides the config defaults below
     kw = sp.dispatch.kwargs_from_config(cfg, out_dtype=jnp.float32)
 
-    x_k = skvc.score_operand(kd_e, sched, sk_hd)
+    x_k = skvc.score_operand(kd_e, sched_e, sk_hd)
     scores_t, _ = sp.grouped_matmul(
         x_k, qw, name="attn.score",
         **{**kw, "block_m": cfg.sparse_block_t})
     scores = scores_t.reshape(b, kvh, t, g).transpose(0, 1, 3, 2)
     scores = scores[:, :, :, None, :] * (hd ** -0.5)   # (B,KV,G,1,T)
 
-    valid = sched[None, :]                             # (Sq=1, T)
-    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    valid = (sched[:, None, None, None, :] if sched.ndim == 2
+             else sched[None, None, None, None, :])    # (B|1,1,1,1,T)
+    scores = jnp.where(valid, scores, NEG_INF)
     m = jnp.max(scores, axis=-1)
     e = jnp.exp(scores - m[..., None])
-    e = jnp.where(valid[None, None, None], e, 0.0)
+    e = jnp.where(valid, e, 0.0)
     l = jnp.sum(e, axis=-1)                            # (B,KV,G,1)
 
     p_e = e[:, :, :, 0, :].reshape(ne, g, t)
-    x_p, w_v = skvc.value_operands(cache, p_e, vd_e, sched, bt)
+    x_p, w_v = skvc.value_operands(occ_e, p_e, vd_e, sched_e, bt)
     acc_e, _ = sp.grouped_matmul(
         x_p, w_v, name="attn.value",
         **{**kw, "slice_k": cfg.sparse_block_t})
@@ -332,19 +361,36 @@ def attention_forward(
     big = jnp.int32(2 ** 30)
 
     if cache is not None:
+        is_paged = isinstance(cache, sp.PagedSparseKVCache)
         if update_cache:
-            cache = (sp.kvcache.update(cache, k, v)
-                     if isinstance(cache, sp.SparseKVCache)
-                     else kvc.update(cache, k, v))
+            if is_paged:
+                cache = sp.kvcache.paged_update(cache, k, v)
+            elif isinstance(cache, sp.SparseKVCache):
+                cache = sp.kvcache.update(cache, k, v)
+            else:
+                cache = kvc.update(cache, k, v)
         qpos = positions if causal else jnp.full_like(positions, big)
-        kpos = kvc.key_positions(cache)
-        if (isinstance(cache, sp.SparseKVCache)
+        kpos = (sp.kvcache.paged_key_positions(cache) if is_paged
+                else kvc.key_positions(cache))
+        if ((is_paged or isinstance(cache, sp.SparseKVCache))
                 and cfg.sparse_mode != "dense" and q.shape[1] == 1
                 and causal):
             # bitmap-scheduled decode: both attention matmuls route
             # through the sparse dispatch (DESIGN.md §10)
             out = attend_sparse(q, cache, cfg, qpos=qpos, kpos=kpos,
                                 window=window)
+        elif is_paged:
+            # dense-mode paged decode: gather the logical per-slot view
+            # and run the shared masked attend (per-row positions)
+            if cache.quantized:
+                kp_, vp_, ksp, vsp = sp.kvcache.paged_view(cache)
+                out = attend(q, kp_, vp_, qpos=qpos, kpos=kpos,
+                             window=window, chunk=chunk,
+                             k_scale=ksp, v_scale=vsp)
+            else:
+                kd, vd = sp.kvcache.paged_read(cache, dtype=x.dtype)
+                out = attend(q, kd, vd, qpos=qpos, kpos=kpos,
+                             window=window, chunk=chunk)
         elif cache.quantized:
             # raw int8 KV + per-chunk dequant inside attend
             out = attend(q, cache.k, cache.v, qpos=qpos, kpos=kpos,

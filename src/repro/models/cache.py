@@ -122,18 +122,25 @@ def written_slot_mask(pos: jax.Array, window: jax.Array, capacity: int,
     return (slots < window) & (((slots - start) % window) < n)
 
 
-def key_positions(cache: KVCache) -> jax.Array:
+def key_positions_at(pos: jax.Array, window: jax.Array, capacity: int
+                     ) -> jax.Array:
     """Absolute token position held in each slot (-1 = empty).
 
     Slot i holds position p with p ≡ i (mod window), the newest such
     p < pos.  For never-wrapping full caches this reduces to p = i for
-    i < pos (same formula).
+    i < pos (same formula).  ``pos`` may carry leading dims — a (B,)
+    per-slot cursor (the paged serving cache) yields (B, capacity).
     """
-    slots = jnp.arange(cache.capacity, dtype=jnp.int32)
-    last = cache.pos - 1
-    kpos = last - ((last - slots) % cache.window)
-    return jnp.where((slots < cache.window) & (kpos >= 0)
-                     & (cache.pos > 0), kpos, -1)
+    slots = jnp.arange(capacity, dtype=jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)[..., None]
+    window = jnp.asarray(window, jnp.int32)
+    last = pos - 1
+    kpos = last - ((last - slots) % window)
+    return jnp.where((slots < window) & (kpos >= 0) & (pos > 0), kpos, -1)
+
+
+def key_positions(cache: KVCache) -> jax.Array:
+    return key_positions_at(cache.pos, cache.window, cache.capacity)
 
 
 def read(cache: KVCache, dtype=jnp.bfloat16) -> Tuple[jax.Array, jax.Array,

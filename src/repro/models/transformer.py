@@ -182,7 +182,8 @@ def plan_weight_activities(params: Dict, cfg: ModelConfig
 
 def init_caches(cfg: ModelConfig, batch: int, capacity: int, *,
                 quantized: bool = False, dtype=jnp.bfloat16,
-                sparse: Optional[bool] = None) -> Dict:
+                sparse: Optional[bool] = None,
+                full_history: bool = False) -> Dict:
     """Per-period-position stacked caches for serving.
 
     ``sparse`` (default: ``cfg.sparse_kv`` in a non-dense sparse mode —
@@ -193,10 +194,18 @@ def init_caches(cfg: ModelConfig, batch: int, capacity: int, *,
     Sliding-window models keep full history (the window is applied as the
     attention mask, equivalent to the ring by the ring≡full identity);
     the out-of-window blocks are what the decode planner then skips.
+
+    ``full_history`` forces dense caches to allocate all ``capacity``
+    slots with no ring wrap even for sliding-window models — token i
+    lives in slot i.  The serving engine's prefill caches need this
+    layout so ``insert_prefill`` can lift contiguous rows into pool
+    pages (the model window still applies as the attention mask).
     """
     caches: Dict[str, Any] = {}
     np_, kvh, hd = cfg.n_periods, cfg.n_kv_heads, cfg.hd
     window = min(cfg.sliding_window or capacity, capacity)
+    if full_history:
+        window = capacity
     if sparse is None:
         sparse = cfg.sparse_kv and cfg.sparse_mode != "dense"
     for pos in range(cfg.period):
@@ -208,8 +217,10 @@ def init_caches(cfg: ModelConfig, batch: int, capacity: int, *,
                 quantized=quantized, window=capacity,
                 block_t=cfg.sparse_block_t)
         elif kind in ("attn",):
+            ring = capacity if full_history else (
+                window if cfg.sliding_window else capacity)
             c["kv"] = kvc.init_cache(
-                batch, window if cfg.sliding_window else capacity,
+                batch, ring,
                 kvh, hd, stack=(np_,), dtype=dtype, quantized=quantized,
                 window=window)
         if kind == "cross":
@@ -225,6 +236,42 @@ def init_caches(cfg: ModelConfig, batch: int, capacity: int, *,
         if cfg.is_encoder_decoder:
             c["cross_kv"] = kvc.init_cache(batch, cfg.encoder_len, kvh, hd,
                                            stack=(np_,), dtype=dtype)
+        caches[f"pos{pos}"] = c
+    return caches
+
+
+def init_paged_caches(cfg: ModelConfig, slots: int, pages: int,
+                      page_size: int, capacity: int, *,
+                      quantized: bool = False,
+                      dtype=jnp.bfloat16) -> Dict:
+    """Paged decode caches for the continuous-batching engine (§14).
+
+    Self-attention layers get a :class:`PagedSparseKVCache` — one shared
+    physical page pool per period position, with per-serving-slot block
+    tables.  Mamba layers keep per-slot recurrent state (O(1) per slot —
+    nothing to page).  Cross-attention / encoder-decoder stacks are not
+    paged (their memory K/V are per-request, fixed-size).
+    """
+    if cfg.is_encoder_decoder or "cross" in [
+            cfg.layer_kind(p) for p in range(cfg.period)]:
+        raise ValueError(
+            "paged serving supports decoder-only self-attention stacks")
+    caches: Dict[str, Any] = {}
+    np_, kvh, hd = cfg.n_periods, cfg.n_kv_heads, cfg.hd
+    for pos in range(cfg.period):
+        kind = cfg.layer_kind(pos)
+        c: Dict[str, Any] = {}
+        if kind == "attn":
+            c["kv"] = sparse_kvc.init_paged_cache(
+                slots, pages, page_size, capacity, kvh, hd,
+                stack=(np_,), dtype=dtype, quantized=quantized)
+        if kind == "mamba":
+            c["ssm"] = ssmm.SSMState(
+                state=jnp.zeros((np_, slots, cfg.ssm_heads,
+                                 cfg.ssm_head_dim, cfg.ssm_state),
+                                jnp.float32),
+                conv=jnp.zeros((np_, slots, cfg.ssm_conv - 1,
+                                ssmm.conv_dim(cfg)), dtype))
         caches[f"pos{pos}"] = c
     return caches
 
@@ -427,9 +474,11 @@ def forward(
         memory = nn.apply_norm(params["enc_final_norm"], enc_x,
                                cfg.norm_eps)
     if cfg.abs_positions:
-        # absolute sinusoidal positions, gathered so decode works too
-        pe_full = nn.sinusoidal_positions(65536, cfg.d_model, x.dtype)
-        x = x + pe_full[positions][None]
+        # absolute sinusoidal positions, gathered so decode works too;
+        # (B, S) positions (multi-slot batched decode) gather per-row
+        pe = nn.sinusoidal_positions(65536, cfg.d_model,
+                                     x.dtype)[positions]
+        x = x + (pe if positions.ndim == 2 else pe[None])
 
     x, new_caches, aux = _scan_layers(
         params["layers"], x, cfg, positions=positions, caches=caches,

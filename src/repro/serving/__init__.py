@@ -1,4 +1,5 @@
-"""Serving substrate: step functions + continuous-batching engine."""
-from repro.serving import engine, serve_loop
+"""Serving: jitted prefill/decode steps + the continuous-batching
+control plane (paged KV cache, admission/eviction scheduling)."""
+from repro.serving import engine, scheduler, serve_loop
 
-__all__ = ["engine", "serve_loop"]
+__all__ = ["engine", "scheduler", "serve_loop"]

@@ -1,25 +1,45 @@
-"""Continuous-batching serving engine (slot-based, vLLM-lite).
+"""Continuous-batching serving engine (paged, batched, vLLM-lite).
 
-A fixed number of batch slots share one decode step; finished slots are
-refilled from the request queue without stopping decode for the others.
-Prefill runs per-request into the slot's cache region (padded to the slot
-capacity).  This is the host-side control plane around the jitted
-prefill/decode steps — on a real cluster it runs on the coordinator with
-steps dispatched to the mesh.
+The host-side control plane around three jitted cores (DESIGN.md §14):
+
+* **prefill** — admitted requests pack into shape-bucketed batches and
+  run one jitted prefill per (batch, padded_len) bucket into contiguous
+  full-history caches (compiled once per bucket, in ``__init__``-hoisted
+  jit — never re-traced per admission);
+* **insert** — each prefilled row scatters into the shared
+  :class:`~repro.sparse.kvcache.PagedSparseKVCache` page pool at the
+  physical pages the host allocator backed for its slot;
+* **decode** — ONE jitted step per engine tick advances every slot
+  together: tokens (B, 1), per-slot positions (B, 1), and with a
+  non-dense sparse mode both attention matmuls route through
+  ``grouped_matmul`` with a single E = B·KV grouped grid spanning slots.
+
+Slots share one physical cache; pages freed by retired (or preempted)
+requests recycle across requests through :class:`PageAllocator`, with
+per-page occupancy doubling as the level-2 bitmap of the sparse decode
+planner.  Admission order and preemption victims come from
+:class:`repro.serving.scheduler.Scheduler` — under the ``cost`` policy
+the per-request signal is the StepCounts tape (scheduled MXU steps of
+one eager prefill).
+
+Encoder-decoder / cross-attention stacks (whisper, llama-vision) fall
+back to the legacy per-slot sequential control plane — their memory K/V
+are per-request and fixed-size, so there is nothing to page.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import sparse
-from repro.configs.base import ModelConfig, RunConfig
+from repro.configs.base import ModelConfig, RunConfig, ServeConfig
+from repro.models import ssm as ssmm
 from repro.models import transformer as tfm
+from repro.serving.scheduler import PageAllocator, Scheduler, pack_prefills
 
 
 @dataclasses.dataclass
@@ -29,28 +49,72 @@ class Request:
     max_new_tokens: int
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # recompute-preemption resume point: prompt + output at eviction time
+    # (the user-visible ``prompt`` is never mutated)
+    resume_prompt: Optional[List[int]] = dataclasses.field(
+        default=None, repr=False)
+
+
+def _round_up(x: int, unit: int) -> int:
+    return -(-x // unit) * unit
 
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
                  capacity: int = 256, rc: Optional[RunConfig] = None,
-                 eos_id: int = -1):
+                 eos_id: int = -1, serve: Optional[ServeConfig] = None,
+                 scheduler: Optional[Scheduler] = None):
+        if serve is None:
+            serve = ServeConfig(slots=slots, capacity=capacity,
+                                eos_id=eos_id)
         self.params = params
         self.cfg = cfg
         self.rc = rc
-        self.slots = slots
-        self.capacity = capacity
-        self.eos_id = eos_id
-        self.queue: Deque[Request] = deque()
+        self.serve = serve
+        self.slots = serve.slots
+        self.capacity = serve.capacity      # retire bound (user-visible)
+        self.eos_id = serve.eos_id
+        self.quantized = bool(rc and rc.kv_quant)
+
+        # page geometry: page size == the sparse planner's block_t, so a
+        # page's occupied count is the level-2 bitmap entry (§14)
+        self.page = serve.page_size or cfg.sparse_block_t
+        self.cap_pages = _round_up(self.capacity, self.page)
+        self.n_blocks = self.cap_pages // self.page
+        self.n_pages = serve.pages or self.slots * self.n_blocks
+        kinds = [cfg.layer_kind(p) for p in range(cfg.period)]
+        # exact-length, unpacked prefill where padding or co-batching
+        # perturbs per-request numerics: MoE expert capacity scales with
+        # the token count, SSM recurrent state integrates padded steps
+        self._exact_prefill = cfg.n_experts > 0 or "mamba" in kinds
+        self.bucket = 1 if self._exact_prefill else (
+            serve.prefill_bucket or self.page)
+
+        # per-request accounting
         self.active: Dict[int, Optional[Request]] = {
-            i: None for i in range(slots)}
-        # one cache per slot (batch=1) so slots prefill independently
-        self.caches = [
-            tfm.init_caches(cfg, 1, capacity,
-                            quantized=bool(rc and rc.kv_quant))
-            for _ in range(slots)]
-        self.pos = [0] * slots
-        self.last_tok = np.zeros((slots,), np.int32)
+            i: None for i in range(self.slots)}
+        self.pos = [0] * self.slots
+        self.last_tok = np.zeros((self.slots,), np.int32)
+        self.pages_held: Dict[int, List[int]] = {}
+        self.admitted_tick: Dict[int, int] = {}
+        self._early: List[Request] = []
+        self.allocator = PageAllocator(self.n_pages)
+        if scheduler is None:
+            cost_fn = (self._request_cost
+                       if serve.policy == "cost" else None)
+            scheduler = Scheduler(serve.policy, cost_fn=cost_fn)
+        self.scheduler = scheduler
+
+        # control-plane counters (trace counters increment as a python
+        # side effect inside the jitted bodies — once per compile)
+        self.ticks = 0
+        self.evictions = 0
+        self.prefill_traces = 0
+        self.prefill_calls = 0
+        self.insert_traces = 0
+        self.decode_traces = 0
+        self.decode_calls = 0
+
         # static weight-side sparse plans: built exactly once per engine
         # (weights don't change at inference), reused by every prefill
         # and decode step (DESIGN.md §4.3).
@@ -61,15 +125,71 @@ class Engine:
         if cfg.sparse_autotune and cfg.sparse_tune_cache:
             sparse.autotune.load_cache(cfg.sparse_tune_cache)
 
+        # jitted cores, hoisted here so admissions never re-jit: the jit
+        # cache is keyed by operand shapes, so every same-bucket prefill
+        # and every tick's decode reuse one executable
+        self._prefill = jax.jit(self._prefill_impl)
+        self._insert = jax.jit(self._insert_impl)
+        self._decode = jax.jit(self._decode_impl)
         self._decode_one = jax.jit(self._decode_one_impl)
 
+        try:
+            self.caches = tfm.init_paged_caches(
+                cfg, self.slots, self.n_pages, self.page, self.cap_pages,
+                quantized=self.quantized)
+            self.paged = True
+            self.table_host = np.zeros((self.slots, self.n_blocks),
+                                       np.int32)
+            self._table_dirty = False
+        except ValueError:
+            # legacy per-slot control plane (enc-dec / cross-attention)
+            self.paged = False
+            self.caches = [
+                tfm.init_caches(cfg, 1, self.capacity,
+                                quantized=self.quantized)
+                for _ in range(self.slots)]
+
     # -- jitted cores ------------------------------------------------
-    def _prefill_impl(self, tokens, caches):
+    def _prefill_impl(self, tokens, true_len, caches):
+        """Batched bucket prefill; logits gathered at each true length."""
+        self.prefill_traces += 1
         s = tokens.shape[1]
         out = tfm.forward(self.params, {"tokens": tokens}, self.cfg,
                           mode="prefill", caches=caches,
                           positions=jnp.arange(s, dtype=jnp.int32),
                           rc=self.rc, weight_plans=self.weight_plans)
+        idx = jnp.clip(true_len - 1, 0, s - 1)
+        logits = jnp.take_along_axis(out.logits, idx[:, None, None],
+                                     axis=1)[:, 0]
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return out.caches, nxt
+
+    def _insert_impl(self, caches, pre, row, slot, pages, true_len):
+        """Lift one prefilled row into the paged pool / per-slot state."""
+        self.insert_traces += 1
+        new = {}
+        for posk, c in caches.items():
+            nc = dict(c)
+            if "kv" in c:
+                nc["kv"] = sparse.kvcache.insert_prefill(
+                    c["kv"], pre[posk]["kv"], row, slot, pages, true_len)
+            if "ssm" in c:
+                st, old = pre[posk]["ssm"], c["ssm"]
+                nc["ssm"] = ssmm.SSMState(
+                    state=old.state.at[:, slot].set(
+                        jnp.take(st.state, row, axis=1)),
+                    conv=old.conv.at[:, slot].set(
+                        jnp.take(st.conv, row, axis=1)))
+            new[posk] = nc
+        return new
+
+    def _decode_impl(self, toks, pos, caches):
+        """One batched decode step over every serving slot."""
+        self.decode_traces += 1
+        out = tfm.forward(self.params, {"tokens": toks[:, None]},
+                          self.cfg, mode="decode", caches=caches,
+                          positions=pos[:, None], rc=self.rc,
+                          weight_plans=self.weight_plans)
         nxt = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
         return out.caches, nxt
 
@@ -118,9 +238,8 @@ class Engine:
         if toks.ndim == 1:
             toks = toks[None]
         rc = dataclasses.replace(self.rc or RunConfig(), scan_unroll=True)
-        quant = bool(self.rc and self.rc.kv_quant)
         caches = tfm.init_caches(self.cfg, toks.shape[0], self.capacity,
-                                 quantized=quant)
+                                 quantized=self.quantized)
         with sparse.tape.collect() as entries:
             out = tfm.forward(self.params, {"tokens": toks}, self.cfg,
                               mode="prefill", caches=caches,
@@ -165,8 +284,7 @@ class Engine:
         before = set(sparse.autotune.OBSERVED)
         toks = jnp.ones((1, prompt_len), jnp.int32)
         caches = tfm.init_caches(cfg, 1, self.capacity,
-                                 quantized=bool(self.rc
-                                                and self.rc.kv_quant))
+                                 quantized=self.quantized)
         with sparse.dispatch.warnings_suppressed():
             out = tfm.forward(self.params, {"tokens": toks}, cfg,
                               mode="prefill", caches=caches,
@@ -209,29 +327,289 @@ class Engine:
                 })
         return out
 
+    def _request_cost(self, req: Request) -> float:
+        """StepCounts-tape admission cost: scheduled MXU steps of one
+        eager prefill over the request's (resume) prompt.  Dense mode
+        routes nothing through the dispatch, so cost degrades to prompt
+        length there."""
+        prompt = req.resume_prompt or req.prompt
+        if self.cfg.sparse_mode == "dense":
+            return float(len(prompt))
+        rc = dataclasses.replace(self.rc or RunConfig(), scan_unroll=True)
+        toks = jnp.asarray(prompt, jnp.int32)[None]
+        with sparse.tape.collect() as entries:
+            tfm.forward(self.params, {"tokens": toks}, self.cfg,
+                        mode="prefill", caches=None,
+                        positions=jnp.arange(len(prompt),
+                                             dtype=jnp.int32),
+                        rc=rc, weight_plans=self.weight_plans)
+        steps = sum(e["sparse_steps"]
+                    for e in sparse.tape.summarize(entries))
+        return float(steps) if steps else float(len(prompt))
+
+    # -- paged control plane ------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        """Control-plane counters (compile evidence for bench_serving)."""
+        return {
+            "ticks": self.ticks,
+            "evictions": self.evictions,
+            "prefill_traces": self.prefill_traces,
+            "prefill_calls": self.prefill_calls,
+            "insert_traces": self.insert_traces,
+            "decode_traces": self.decode_traces,
+            "decode_calls": self.decode_calls,
+            "pages_free": self.allocator.available if self.paged else 0,
+            "pages_total": self.n_pages if self.paged else 0,
+        }
+
+    def pool_stats(self) -> Optional[dict]:
+        """Per-slot paged-cache occupancy report (first attn position)."""
+        if not self.paged:
+            return None
+        for c in self.caches.values():
+            if "kv" in c:
+                return sparse.kvcache.paged_occupancy_report(
+                    c["kv"], mask_window=self.cfg.sliding_window or None)
+        return None
+
+    def _prompt_of(self, req: Request) -> List[int]:
+        return req.resume_prompt or req.prompt
+
+    def _prefill_pages(self, req: Request) -> int:
+        return -(-len(self._prompt_of(req)) // self.page)
+
+    def _push_table(self) -> None:
+        tbl = jnp.asarray(self.table_host)
+        for c in self.caches.values():
+            if "kv" in c:
+                kv = c["kv"]
+                c["kv"] = kv._replace(
+                    table=jnp.broadcast_to(tbl[None], kv.table.shape))
+        self._table_dirty = False
+
+    def _retire(self, slot: int) -> None:
+        self.allocator.free(self.pages_held.pop(slot, []))
+        self.table_host[slot, :] = 0
+        self.active[slot] = None
+        self.admitted_tick.pop(slot, None)
+        self._table_dirty = True
+
+    def _evict_one(self) -> bool:
+        """Recompute-preemption: kick one active request back to the
+        queue (resuming later from prompt + generated-so-far)."""
+        rows = [(i, r, self.admitted_tick.get(i, 0))
+                for i, r in self.active.items() if r is not None]
+        victim = self.scheduler.pick_victim(rows)
+        if victim is None:
+            return False
+        req = self.active[victim]
+        # resume point: the full generated stream so far — ``output``
+        # accumulates across preemptions, so original prompt + output is
+        # exactly the token history a re-prefill must replay
+        req.resume_prompt = req.prompt + req.output
+        self._retire(victim)
+        self.scheduler.requeue(req)
+        self.evictions += 1
+        return True
+
+    def _reclaim_swa(self) -> int:
+        """Free pages whose whole block fell behind the sliding window
+        of every future query — the visibility mask already excludes
+        them, so the pool can recycle the memory."""
+        win = self.cfg.sliding_window
+        if not win:
+            return 0
+        freed = 0
+        for i, req in self.active.items():
+            if req is None:
+                continue
+            dead = sparse.plan.kv_blocks_reclaimable(
+                self.pos[i], win, self.page, self.n_blocks)
+            held = self.pages_held.get(i, [])
+            for b, is_dead in enumerate(dead):
+                pg = int(self.table_host[i, b])
+                if is_dead and pg > 0:
+                    self.table_host[i, b] = 0
+                    if pg in held:
+                        held.remove(pg)
+                    self.allocator.free([pg])
+                    freed += 1
+                    self._table_dirty = True
+        return freed
+
+    def _ensure_pages(self) -> None:
+        """Back the next decode write of every active slot with a real
+        page, reclaiming window-dead pages first and preempting (LIFO /
+        max-cost) when the pool is truly exhausted."""
+        for i in range(self.slots):
+            if self.active[i] is None:
+                continue
+            lb = (self.pos[i] % self.cap_pages) // self.page
+            if self.table_host[i, lb] != 0:
+                continue
+            got = self.allocator.alloc(1)
+            while got is None:
+                if not self._reclaim_swa() and not self._evict_one():
+                    raise RuntimeError("page pool exhausted and nothing "
+                                       "left to evict")
+                if self.active[i] is None:
+                    break              # this very request was the victim
+                got = self.allocator.alloc(1)
+            if self.active[i] is None:
+                continue
+            self.table_host[i, lb] = got[0]
+            self.pages_held.setdefault(i, []).append(got[0])
+            self._table_dirty = True
+
     # -- control plane ------------------------------------------------
     def submit(self, req: Request):
-        self.queue.append(req)
+        if not req.prompt:
+            raise ValueError("empty prompt")
+        if len(req.prompt) > self.capacity - 1:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} exceeds capacity "
+                f"{self.capacity} (one slot must remain for decode)")
+        if self.paged and self._prefill_pages(req) > self.n_pages:
+            raise ValueError("prompt cannot fit the page pool")
+        if req.max_new_tokens <= 0:
+            # nothing to generate: retire at admission with no compute
+            req.done = True
+            self._early.append(req)
+            return
+        self.scheduler.submit(req)
 
-    def _admit(self):
+    def _admit(self) -> List[Request]:
+        if not self.paged:
+            return self._admit_legacy()
+        finished: List[Request] = []
+        free_slots = [i for i in range(self.slots)
+                      if self.active[i] is None]
+        admitted: List[Request] = []
+        reserved = 0
+        while len(admitted) < len(free_slots) and len(self.scheduler):
+            req = self.scheduler.pop_next(
+                max_pages=self.allocator.available - reserved,
+                pages_of=self._prefill_pages)
+            if req is None:
+                break
+            admitted.append(req)
+            reserved += self._prefill_pages(req)
+        if not admitted:
+            return finished
+
+        groups = pack_prefills(
+            admitted, bucket=self.bucket,
+            max_batch=max(1, self.serve.max_prefill_batch),
+            pack=not self._exact_prefill,
+            length_of=lambda r: len(self._prompt_of(r)))
+        for lpad, group in groups:
+            lpad = min(max(lpad, 1), self.cap_pages)
+            n = len(group)
+            toks = np.zeros((n, lpad), np.int32)
+            lens = np.zeros((n,), np.int32)
+            for r_i, req in enumerate(group):
+                p = self._prompt_of(req)
+                toks[r_i, :len(p)] = p
+                lens[r_i] = len(p)
+            pre = tfm.init_caches(self.cfg, n, lpad, sparse=False,
+                                  full_history=True,
+                                  quantized=self.quantized)
+            pre, nxt = self._prefill(jnp.asarray(toks),
+                                     jnp.asarray(lens), pre)
+            self.prefill_calls += 1
+            nxt = np.asarray(nxt)
+            for r_i, req in enumerate(group):
+                tok = int(nxt[r_i])
+                req.output.append(tok)
+                if (len(req.output) >= req.max_new_tokens
+                        or tok == self.eos_id):
+                    # admission-retired: first token already finishes
+                    # the request — it never occupies a slot or pages
+                    req.done = True
+                    finished.append(req)
+                    continue
+                slot = free_slots.pop(0)
+                nbr = self._prefill_pages(req)
+                pages = self.allocator.alloc(nbr)
+                assert pages is not None, "admission reserve violated"
+                self.table_host[slot, :] = 0
+                self.table_host[slot, :nbr] = pages
+                self.pages_held[slot] = list(pages)
+                self.caches = self._insert(
+                    self.caches, pre, jnp.int32(r_i), jnp.int32(slot),
+                    jnp.asarray(pages, jnp.int32),
+                    jnp.int32(int(lens[r_i])))
+                self.pos[slot] = int(lens[r_i])
+                self.last_tok[slot] = tok
+                self.active[slot] = req
+                self.admitted_tick[slot] = self.ticks
+                self._table_dirty = True
+        return finished
+
+    def _admit_legacy(self) -> List[Request]:
+        finished: List[Request] = []
         for i in range(self.slots):
-            if self.active[i] is None and self.queue:
-                req = self.queue.popleft()
-                toks = jnp.asarray(req.prompt, jnp.int32)[None]
+            if self.active[i] is None and len(self.scheduler):
+                req = self.scheduler.pop_next()
+                if req is None:
+                    break
+                prompt = self._prompt_of(req)
+                toks = jnp.asarray(prompt, jnp.int32)[None]
                 self.caches[i] = tfm.init_caches(
-                    self.cfg, 1, self.capacity,
-                    quantized=bool(self.rc and self.rc.kv_quant))
-                caches, nxt = jax.jit(self._prefill_impl)(toks,
-                                                          self.caches[i])
+                    self.cfg, 1, self.capacity, quantized=self.quantized)
+                caches, nxt = self._prefill(
+                    toks, jnp.asarray([len(prompt)], jnp.int32),
+                    self.caches[i])
+                self.prefill_calls += 1
                 self.caches[i] = caches
-                self.pos[i] = len(req.prompt)
-                self.last_tok[i] = int(nxt[0])
-                req.output.append(int(nxt[0]))
+                tok = int(nxt[0])
+                req.output.append(tok)
+                if (len(req.output) >= req.max_new_tokens
+                        or tok == self.eos_id):
+                    req.done = True
+                    finished.append(req)
+                    continue
+                self.pos[i] = len(prompt)
+                self.last_tok[i] = tok
                 self.active[i] = req
+        return finished
 
     def step(self) -> List[Request]:
-        """One engine tick: admit, decode all active slots, retire."""
-        self._admit()
+        """One engine tick: admit, one batched decode, retire."""
+        self.ticks += 1
+        finished = self._early
+        self._early = []
+        finished.extend(self._admit())
+        if not self.paged:
+            return finished + self._step_legacy()
+        if all(r is None for r in self.active.values()):
+            return finished
+        self._ensure_pages()
+        if all(r is None for r in self.active.values()):
+            return finished
+        if self._table_dirty:
+            self._push_table()
+        self.caches, nxt = self._decode(
+            jnp.asarray(self.last_tok),
+            jnp.asarray(self.pos, jnp.int32), self.caches)
+        self.decode_calls += 1
+        nxt = np.asarray(nxt)
+        for i, req in self.active.items():
+            if req is None:
+                continue
+            self.pos[i] += 1
+            tok = int(nxt[i])
+            req.output.append(tok)
+            self.last_tok[i] = tok
+            if (len(req.output) >= req.max_new_tokens
+                    or tok == self.eos_id
+                    or self.pos[i] >= self.capacity - 1):
+                req.done = True
+                finished.append(req)
+                self._retire(i)
+        return finished
+
+    def _step_legacy(self) -> List[Request]:
         finished = []
         for i, req in self.active.items():
             if req is None:
@@ -240,6 +618,7 @@ class Engine:
                 jnp.asarray(self.last_tok[i], jnp.int32),
                 jnp.asarray(self.pos[i], jnp.int32), self.caches[i])
             self.caches[i] = caches
+            self.decode_calls += 1
             self.pos[i] += 1
             tok = int(nxt)
             req.output.append(tok)
@@ -256,7 +635,13 @@ class Engine:
         done: List[Request] = []
         for _ in range(max_ticks):
             done.extend(self.step())
-            if not self.queue and all(v is None
-                                      for v in self.active.values()):
+            if not len(self.scheduler) and not self._early and all(
+                    v is None for v in self.active.values()):
                 break
         return done
+
+    # legacy attribute: tests/tools that poked ``engine.queue`` keep
+    # working against the scheduler's deque
+    @property
+    def queue(self):
+        return self.scheduler.queue

@@ -51,19 +51,29 @@ def make_decode_step(cfg: ModelConfig, rc: Optional[RunConfig] = None, *,
 def generate(params, batch, cfg: ModelConfig, *, max_new_tokens: int,
              capacity: Optional[int] = None,
              rc: Optional[RunConfig] = None) -> jax.Array:
-    """Greedy generation driver (prefill + scan of decode steps)."""
+    """Greedy generation driver (prefill + scan of decode steps).
+
+    Returns exactly ``max_new_tokens`` tokens per row: the prefill's
+    argmax counts as the first token, the remaining ``max_new_tokens-1``
+    come from the decode scan (``lax.scan`` of length 0 is invalid, so
+    the 1- and 0-token edges short-circuit before it).
+    """
     b, s = batch["tokens"].shape
+    if max_new_tokens <= 0:
+        return jnp.zeros((b, 0), jnp.int32)
     cap = capacity or (s + max_new_tokens)
     caches = tfm.init_caches(cfg, b, cap,
                              quantized=bool(rc and rc.kv_quant))
     prefill = make_prefill_step(cfg, rc)
     decode = make_decode_step(cfg, rc)
     state, _ = prefill(params, batch, caches)
+    first = state.last_token[:, 0]
+    if max_new_tokens == 1:
+        return first[:, None]
 
     def step(state, _):
         state, logits = decode(params, state)
         return state, state.last_token[:, 0]
 
     _, toks = jax.lax.scan(step, state, None, length=max_new_tokens - 1)
-    first = state.last_token[:, 0]
     return jnp.concatenate([first[None], toks], axis=0).T  # (B, new)

@@ -65,5 +65,8 @@ from repro.sparse.weights import (  # noqa: F401
 # in repro.launch — both may re-enter this package mid-initialisation
 # (everything above must already be bound)
 from repro.sparse import kvcache  # noqa: E402,F401
-from repro.sparse.kvcache import SparseKVCache  # noqa: E402,F401
+from repro.sparse.kvcache import (  # noqa: E402,F401
+    PagedSparseKVCache,
+    SparseKVCache,
+)
 from repro.sparse import autotune  # noqa: E402,F401

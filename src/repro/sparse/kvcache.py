@@ -186,18 +186,22 @@ def score_operand(k_deq: jax.Array, sched_slots: jax.Array,
     """Wrap the dequantised cache K as the score matmul's activation side.
 
     k_deq: (E, T, hd) stacked per-(batch × kv-head) cache keys;
-    sched_slots: the (T,) ``slots`` level of a
-    :class:`repro.sparse.plan.KVDecodePlan` (occupancy AND visibility).
+    sched_slots: the ``slots`` level of a
+    :class:`repro.sparse.plan.KVDecodePlan` (occupancy AND visibility) —
+    (T,) shared across problems, or (E, T) per-problem (the multi-slot
+    batched decode, where each serving slot carries its own schedule).
     Rows outside the schedule are declared inactive — their scores are
     about to be masked to -inf, so the kernel may skip them; the XLA
     fallback computes them densely and stays bit-identical to the dense
     path.
     """
-    mask = jnp.broadcast_to(sched_slots[None, :, None], k_deq.shape)
+    if sched_slots.ndim == 1:
+        sched_slots = sched_slots[None, :]
+    mask = jnp.broadcast_to(sched_slots[..., None], k_deq.shape)
     return sparsify(k_deq, mask=mask, slice_k=slice_k)
 
 
-def value_operands(cache: SparseKVCache, p: jax.Array, v_deq: jax.Array,
+def value_operands(occ_slots: jax.Array, p: jax.Array, v_deq: jax.Array,
                    sched_slots: jax.Array, block_t: int
                    ) -> Tuple[SparseActivation, PlannedWeight]:
     """Wrap (p, V) for the value matmul ``out[e] = p[e] @ V[e]``.
@@ -207,11 +211,292 @@ def value_operands(cache: SparseKVCache, p: jax.Array, v_deq: jax.Array,
     in every mode), while window-masked rows of the probability tensor
     ``p`` (zeroed by the softmax mask) ride the activation side, so the
     dual-mode AND skips both never-written and evicted history.
+
+    occ_slots / sched_slots: (T,) shared, or (E, T) per-problem (the
+    batched multi-slot decode; E = B·KV with the occupancy broadcast
+    over the kv heads of each serving slot).
     """
-    occ_blocks = pln.slot_block_reduce(occupancy_mask(cache), block_t)
-    w_act = jnp.broadcast_to(occ_blocks[None, :, None],
+    if occ_slots.ndim == 1:
+        occ_slots = occ_slots[None, :]
+    if sched_slots.ndim == 1:
+        sched_slots = sched_slots[None, :]
+    occ_blocks = pln.slot_block_reduce(occ_slots, block_t)
+    w_act = jnp.broadcast_to(occ_blocks[..., None],
                              (v_deq.shape[0], occ_blocks.shape[-1],
                               v_deq.shape[-1]))
     w = PlannedWeight(w=v_deq, slice_act=w_act, slice_k=block_t)
-    p_mask = jnp.broadcast_to(sched_slots[None, None, :], p.shape)
+    p_mask = jnp.broadcast_to(sched_slots[:, None, :], p.shape)
     return sparsify(p, mask=p_mask, slice_k=block_t), w
+
+
+# ---------------------------------------------------------------------------
+# paged pool cache (continuous-batching serving, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+class PagedSparseKVCache(NamedTuple):
+    """Multi-slot KV cache: one physical page pool + per-slot block tables.
+
+    The serving engine's decode state (DESIGN.md §14).  Every serving
+    slot sees a *logical* cache of ``capacity`` slots; physically the
+    K/V live in pages of ``page_size`` cache slots drawn from one shared
+    pool, indexed through ``table``.  Page size equals the occupancy
+    block size (``ModelConfig.sparse_block_t``), so each page's occupied
+    count in ``blk`` *is* the level-2 bitmap entry of the PR 3 planner —
+    the block table and the sparse decode schedule describe the same
+    blocks, and a page freed by one request is exactly a block the next
+    owner's occupancy bitmap re-covers (stale contents are never
+    scheduled).
+
+    Physical page 0 is the *trash page*: block-table entries of
+    unmapped logical blocks (and every entry of an inactive slot) point
+    at it, so the batched decode write lands somewhere harmless without
+    per-slot control flow.  The allocator (serving.scheduler) hands out
+    pages 1..P and recycles frees across requests.
+
+    k/v      : (..., P+1, page, KV, hd) physical pool (bf16 or int8)
+    k_scale/
+    v_scale  : (..., P+1, page, KV, 1)  f32 (ones when unquantised)
+    pos      : (..., B) per-slot tokens written
+    window   : (...,)   logical ring size (== capacity: the engine
+               retires at capacity, masks any model window)
+    table    : (..., B, NB) int32 physical page per logical block
+    occ      : (..., B, W) packed per-slot occupancy bitmap
+    blk      : (..., B, NB) occupied count per logical block (== the
+               per-page occupancy of the page mapped there)
+    """
+    k: jax.Array
+    v: jax.Array
+    k_scale: jax.Array
+    v_scale: jax.Array
+    pos: jax.Array
+    window: jax.Array
+    table: jax.Array
+    occ: jax.Array
+    blk: jax.Array
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[-3]
+
+    @property
+    def n_pages(self) -> int:
+        """Allocatable pages (the +1 trash page excluded)."""
+        return self.k.shape[-4] - 1
+
+    @property
+    def n_slots(self) -> int:
+        return self.table.shape[-2]
+
+    @property
+    def n_blocks(self) -> int:
+        return self.table.shape[-1]
+
+    @property
+    def capacity(self) -> int:
+        return self.n_blocks * self.page_size
+
+    @property
+    def quantized(self) -> bool:
+        return self.k.dtype == jnp.int8
+
+
+def init_paged_cache(slots: int, pages: int, page_size: int,
+                     capacity: int, n_kv: int, hd: int, *,
+                     stack: Tuple[int, ...] = (), dtype=jnp.bfloat16,
+                     quantized: bool = False) -> PagedSparseKVCache:
+    """Zero pool, empty tables (every block → trash page 0).
+
+    ``capacity`` must be a page multiple (the engine rounds up); the
+    pool allocates ``pages`` usable pages plus the trash page.
+    """
+    assert capacity % page_size == 0, (capacity, page_size)
+    nb = capacity // page_size
+    shape = (*stack, pages + 1, page_size, n_kv, hd)
+    sshape = (*stack, pages + 1, page_size, n_kv, 1)
+    kv_dtype = jnp.int8 if quantized else dtype
+    return PagedSparseKVCache(
+        k=jnp.zeros(shape, kv_dtype),
+        v=jnp.zeros(shape, kv_dtype),
+        k_scale=jnp.ones(sshape, jnp.float32),
+        v_scale=jnp.ones(sshape, jnp.float32),
+        pos=jnp.zeros((*stack, slots), jnp.int32),
+        window=jnp.full(stack, capacity, jnp.int32),
+        table=jnp.zeros((*stack, slots, nb), jnp.int32),
+        occ=bm.pack_bits_padded(jnp.zeros((*stack, slots, capacity),
+                                          bool)),
+        blk=jnp.zeros((*stack, slots, nb), jnp.int32))
+
+
+def paged_occupancy_mask(cache: PagedSparseKVCache) -> jax.Array:
+    """(..., B, capacity) bool per-slot occupancy from the packed bitmap."""
+    return bm.unpack_bits(cache.occ, axis=-1)[..., :cache.capacity]
+
+
+def paged_key_positions(cache: PagedSparseKVCache) -> jax.Array:
+    """(..., B, capacity) absolute position per logical slot (-1 empty)."""
+    return kvc.key_positions_at(cache.pos, cache.window, cache.capacity)
+
+
+def paged_view(cache: PagedSparseKVCache
+               ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Gather the logical (B, capacity, KV, hd) view of the pool.
+
+    Raw dtype (int8 stays int8) + scales — per-layer context only (the
+    stacked leading dim must already be scanned away).  Blocks mapped to
+    the trash page read stale garbage; every consumer masks by
+    occupancy/visibility before it can matter.
+    """
+    assert cache.k.ndim == 4, "paged_view runs inside the layer scan"
+    b, nb = cache.table.shape
+
+    def gather(pool):
+        g = pool[cache.table]                   # (B, NB, page, KV, ...)
+        return g.reshape(b, nb * cache.page_size, *pool.shape[2:])
+
+    return (gather(cache.k), gather(cache.v),
+            gather(cache.k_scale), gather(cache.v_scale))
+
+
+def paged_read(cache: PagedSparseKVCache, dtype=jnp.bfloat16
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Dequantised logical (B, capacity, KV, hd) K/V view.
+
+    Mirrors :func:`repro.models.cache.read` (f32 multiply, then cast)
+    for the unquantised path and the decode branches' bf16 dequant for
+    int8 pools, so the gathered view is value-identical to the
+    contiguous caches it replaces.
+    """
+    k, v, ks, vs = paged_view(cache)
+    if cache.quantized:
+        k = (k.astype(jnp.bfloat16) * ks.astype(jnp.bfloat16))
+        v = (v.astype(jnp.bfloat16) * vs.astype(jnp.bfloat16))
+        return k.astype(dtype), v.astype(dtype)
+    k = k.astype(jnp.float32) * ks
+    v = v.astype(jnp.float32) * vs
+    return k.astype(dtype), v.astype(dtype)
+
+
+def paged_update(cache: PagedSparseKVCache, k_new: jax.Array,
+                 v_new: jax.Array) -> PagedSparseKVCache:
+    """Batched single-token decode append across all slots.
+
+    k_new/v_new: (B, 1, KV, hd) — one new token per serving slot.  Each
+    slot's write lands in the physical page its block table maps the
+    ring cursor to; slots whose block is unmapped (inactive slots, or a
+    cursor the host allocator hasn't backed yet) write the trash page.
+    Occupancy is maintained by the same closed-form ring mask as the
+    contiguous cache — ``written_slot_mask`` already handles the (B,)
+    leading dim.
+    """
+    assert k_new.shape[-3] == 1, "paged caches take batched decode appends"
+    page = cache.page_size
+    if cache.quantized:
+        k_new, ks = kvc._quantize(k_new)
+        v_new, vs = kvc._quantize(v_new)
+    else:
+        k_new = k_new.astype(cache.k.dtype)
+        v_new = v_new.astype(cache.v.dtype)
+        ks = jnp.ones((*k_new.shape[:-1], 1), jnp.float32)
+        vs = ks
+
+    slot = cache.pos % cache.window                      # (B,)
+    lb = slot // page
+    off = slot % page
+    pp = jnp.take_along_axis(cache.table, lb[:, None], axis=-1)[:, 0]
+
+    def put(pool, upd):
+        return pool.at[pp, off].set(upd[:, 0])
+
+    written = kvc.written_slot_mask(cache.pos, cache.window,
+                                    cache.capacity, 1)
+    occ_slots = paged_occupancy_mask(cache) | written
+    blk = jnp.sum(_blocked(occ_slots, page), axis=-1, dtype=jnp.int32)
+    return cache._replace(
+        k=put(cache.k, k_new), v=put(cache.v, v_new),
+        k_scale=put(cache.k_scale, ks), v_scale=put(cache.v_scale, vs),
+        pos=cache.pos + 1, occ=bm.pack_bits_padded(occ_slots), blk=blk)
+
+
+def insert_prefill(cache: PagedSparseKVCache, pre: kvc.KVCache,
+                   row: jax.Array, slot: jax.Array, pages: jax.Array,
+                   true_len: jax.Array) -> PagedSparseKVCache:
+    """Scatter one prefilled contiguous cache row into pool pages.
+
+    The JetStream insert: prefill runs into a contiguous (batch, Tc)
+    cache (``pre``, stacked (np, B, Tc, KV, hd) — full-history, no ring
+    wrap), then row ``row`` moves into serving slot ``slot`` whose first
+    ``len(pages)`` logical blocks the host allocator backed with
+    physical ``pages``.  Only the first ``len(pages) * page`` cache
+    slots are copied — padding past ``true_len`` inside the last page is
+    written but never scheduled (occupancy is rebuilt closed-form from
+    ``true_len``).  Operates on the *stacked* leaves (outside the layer
+    scan); ``row``/``slot``/``true_len`` are traced scalars so one trace
+    serves every slot at a given (Tc, len(pages)) shape.
+    """
+    nbr = pages.shape[0]
+    page = cache.page_size
+    np_ = cache.k.shape[0]
+
+    def put(pool, src):
+        # src: (np, B, Tc, KV, x) → row → (np, nbr, page, KV, x);
+        # exact-length prefills (MoE/SSM stacks) may be shorter than the
+        # backed pages — zero-pad the tail (never scheduled: occupancy
+        # is rebuilt from true_len below)
+        r = jnp.take(src, row, axis=1)
+        need = nbr * page
+        if r.shape[1] < need:
+            r = jnp.pad(r, [(0, 0), (0, need - r.shape[1])]
+                        + [(0, 0)] * (r.ndim - 2))
+        r = r[:, :need].reshape(np_, nbr, page, *src.shape[-2:])
+        return pool.at[:, pages].set(r.astype(pool.dtype))
+
+    cap = cache.capacity
+    # fresh slot at cursor 0 with window == capacity: the ring mask
+    # degenerates to the first true_len slots (true_len is traced, so
+    # written_slot_mask's static-s form does not apply)
+    occ_row = jnp.arange(cap, dtype=jnp.int32) < true_len
+    blk_row = jnp.sum(_blocked(occ_row, page), axis=-1, dtype=jnp.int32)
+    occ = bm.unpack_bits(cache.occ, axis=-1)[..., :cap]
+    occ = occ.at[:, slot].set(occ_row)
+    return cache._replace(
+        k=put(cache.k, pre.k), v=put(cache.v, pre.v),
+        k_scale=put(cache.k_scale, pre.k_scale),
+        v_scale=put(cache.v_scale, pre.v_scale),
+        pos=cache.pos.at[:, slot].set(true_len),
+        occ=bm.pack_bits_padded(occ),
+        blk=cache.blk.at[:, slot].set(blk_row))
+
+
+def paged_occupancy_report(cache: PagedSparseKVCache,
+                           mask_window: Optional[int] = None) -> dict:
+    """Per-slot occupancy + pool mapping stats (host-side, eager).
+
+    Same metrics as :func:`occupancy_report` per serving slot, plus the
+    block-table side: how many logical blocks are backed by real pages.
+    Reads the first stacked layer (metadata is layer-invariant).
+    """
+    c = jax.tree_util.tree_map(lambda a: a[0], cache) \
+        if cache.k.ndim == 5 else cache
+    pos = jnp.asarray(c.pos)
+    ring = jnp.minimum(pos, c.window)
+    w = ring if mask_window is None else jnp.minimum(ring, mask_window)
+    live = jnp.minimum(pos, w)
+    occ = jnp.sum(c.blk, axis=-1)
+    mapped = jnp.sum(c.table > 0, axis=-1)
+
+    def _tolist(x):
+        return [float(v) for v in jnp.ravel(jnp.asarray(x))]
+
+    denom = [max(p, 1.0) for p in _tolist(pos)]
+    return {
+        "written_frac": [o / c.capacity for o in _tolist(occ)],
+        "evicted_frac": [max(p - l, 0.0) / d for p, l, d in
+                         zip(_tolist(pos), _tolist(live), denom)],
+        "live_slots": _tolist(live),
+        "mapped_blocks": _tolist(mapped),
+        "quantized": c.quantized,
+        "capacity": c.capacity,
+        "block_t": c.page_size,
+        "n_blocks": c.n_blocks,
+        "n_pages": c.n_pages,
+    }

@@ -460,6 +460,27 @@ def plan_kv_decode(occ_slots: jax.Array, kpos: jax.Array, qpos: jax.Array,
                         count=count)
 
 
+def kv_blocks_reclaimable(pos: int, window: Optional[int], block_t: int,
+                          n_blocks: int):
+    """Which cache blocks no future query can ever attend (host-side).
+
+    For a full-history cache (no ring wrap: logical slot i holds token
+    i), block b spans slots [b·block_t, (b+1)·block_t); once every slot
+    in it falls out of the sliding window of the *current* cursor —
+    ``(b+1)·block_t - 1 < pos - window + 1`` — it is out for all later
+    queries too (the window only moves forward).  This is the paged
+    engine's page-reclaim predicate: a reclaimable block's physical page
+    can return to the pool, because the decode schedule
+    (:func:`kv_decode_slots`) already excludes every slot in it.
+    Returns a python list of bools, length ``n_blocks``; all-False
+    without a window.
+    """
+    if not window:
+        return [False] * n_blocks
+    horizon = pos - window  # slots <= horizon are invisible forever
+    return [(b + 1) * block_t - 1 <= horizon for b in range(n_blocks)]
+
+
 # ---------------------------------------------------------------------------
 # step-count accounting (shared by all dispatch modes)
 # ---------------------------------------------------------------------------

@@ -1,11 +1,13 @@
 """Serving: generate driver, continuous-batching engine, cache variants."""
+import dataclasses
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.configs import smoke_config
-from repro.configs.base import RunConfig
+from repro.configs.base import RunConfig, ServeConfig
 from repro.models import transformer as tfm
 from repro.serving import serve_loop
 from repro.serving.engine import Engine, Request
@@ -88,3 +90,177 @@ def test_swa_engine(rng):
     out = serve_loop.generate(params, {"tokens": toks}, cfg,
                               max_new_tokens=4, capacity=64)
     assert out.shape == (1, 4)
+
+
+@pytest.mark.parametrize("max_new", [0, 1, 2, 8])
+def test_generate_exact_token_count(model, rng, max_new):
+    """generate returns exactly max_new_tokens tokens, incl. the 0/1
+    edges that used to underflow the decode scan length."""
+    cfg, params = model
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 4)), jnp.int32)
+    out = serve_loop.generate(params, {"tokens": toks}, cfg,
+                              max_new_tokens=max_new, capacity=32)
+    assert out.shape == (2, max_new)
+    if max_new >= 1:
+        # the prefix of a longer run must match (greedy is deterministic)
+        longer = serve_loop.generate(params, {"tokens": toks}, cfg,
+                                     max_new_tokens=8, capacity=32)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(longer)[:, :max_new])
+
+
+def test_engine_prefill_jitted_once(model):
+    """Prefill/decode compile once: later same-shape admissions reuse
+    the hoisted jit executables instead of re-tracing per admission."""
+    cfg, params = model
+    eng = Engine(params, cfg, slots=2, capacity=32)
+    for uid in range(2):
+        eng.submit(Request(uid=uid, prompt=[1, 2, 3 + uid],
+                           max_new_tokens=3))
+    eng.run_to_completion()
+    traces = (eng.prefill_traces, eng.insert_traces, eng.decode_traces)
+    assert eng.prefill_traces >= 1 and eng.decode_traces == 1
+    # a second wave of same-shape prompts must not trace anything new
+    for uid in range(2, 6):
+        eng.submit(Request(uid=uid, prompt=[7, 8, 9 + uid],
+                           max_new_tokens=3))
+    done = eng.run_to_completion()
+    assert len(done) == 4
+    assert (eng.prefill_traces, eng.insert_traces,
+            eng.decode_traces) == traces
+    assert eng.prefill_calls > eng.prefill_traces
+    # one batched decode call per tick, not one per slot
+    assert eng.decode_calls == eng.ticks
+
+
+def test_engine_admission_retire(model):
+    """max_new_tokens/eos are honoured at admission: the prefill's first
+    token can already finish a request, and it then never occupies a
+    slot; max_new_tokens <= 0 retires with no compute at all."""
+    cfg, params = model
+    prompt = [5, 6, 7]
+    first = int(np.asarray(serve_loop.generate(
+        params, {"tokens": jnp.asarray([prompt], jnp.int32)}, cfg,
+        max_new_tokens=1, capacity=32))[0, 0])
+
+    eng = Engine(params, cfg, slots=1, capacity=32, eos_id=first)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=8))
+    eng.submit(Request(uid=1, prompt=prompt, max_new_tokens=1))
+    eng.submit(Request(uid=2, prompt=prompt, max_new_tokens=0))
+    done = {r.uid: r for r in eng.run_to_completion()}
+    assert sorted(done) == [0, 1, 2]
+    assert done[0].output == [first] and done[0].done   # eos at admission
+    assert done[1].output == [first] and done[1].done   # budget of one
+    assert done[2].output == [] and done[2].done        # nothing to do
+    assert all(r is None for r in eng.active.values())
+    assert eng.decode_calls == 0                        # never decoded
+
+
+def _interleaved_outputs(cfg, params, prompts, max_new, capacity=32):
+    """Run staggered submissions through a 2-slot engine and return
+    outputs alongside per-request unbatched generate references."""
+    eng = Engine(params, cfg, slots=2, capacity=capacity)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    # staggered arrival: one new request per tick while others decode
+    done = []
+    for r in reqs:
+        eng.submit(r)
+        done.extend(eng.step())
+    done.extend(eng.run_to_completion())
+    assert sorted(r.uid for r in done) == list(range(len(prompts)))
+    refs = [
+        [int(t) for t in np.asarray(serve_loop.generate(
+            params, {"tokens": jnp.asarray([p], jnp.int32)}, cfg,
+            max_new_tokens=max_new, capacity=capacity))[0]]
+        for p in prompts]
+    return {r.uid: r.output for r in done}, refs
+
+
+def test_engine_interleaved_matches_generate(model):
+    """Batched multi-slot decode with staggered prompt lengths produces
+    per-request token streams identical to single-request runs."""
+    cfg, params = model
+    prompts = [[5, 6, 7], [11, 3, 9, 2, 4], [8], [2, 2, 2, 2, 2, 2, 2]]
+    outs, refs = _interleaved_outputs(cfg, params, prompts, max_new=4)
+    for uid, ref in enumerate(refs):
+        assert outs[uid] == ref, (uid, outs[uid], ref)
+
+
+def test_engine_interleaved_matches_generate_sparse_kv(model):
+    """Same interleaved parity over the bitmap-scheduled sparse decode
+    path (grouped_matmul with one E=B*KV grid spanning slots)."""
+    cfg, params = model
+    cfg = dataclasses.replace(cfg, sparse_mode="dual", sparse_kv=True,
+                              sparse_block_t=8)
+    prompts = [[5, 6, 7], [11, 3, 9, 2, 4], [8, 1, 2, 3]]
+    outs, refs = _interleaved_outputs(cfg, params, prompts, max_new=4)
+    for uid, ref in enumerate(refs):
+        assert outs[uid] == ref, (uid, outs[uid], ref)
+
+
+def test_engine_page_recycling(model):
+    """Pages freed by retired requests recycle: a pool sized for two
+    concurrent requests serves a third from recycled pages, with
+    outputs identical to unconstrained runs and the pool drained back
+    to full."""
+    cfg, params = model
+    sv = ServeConfig(slots=2, capacity=32, page_size=8, pages=8)
+    eng = Engine(params, cfg, serve=sv)
+    reqs = [Request(uid=u, prompt=[1 + u, 2, 3], max_new_tokens=6)
+            for u in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion()
+    st = eng.stats()
+    assert st["evictions"] == 0
+    assert st["pages_free"] == st["pages_total"] == 8
+    for r in reqs:
+        ref = [int(t) for t in np.asarray(serve_loop.generate(
+            params, {"tokens": jnp.asarray([r.prompt], jnp.int32)}, cfg,
+            max_new_tokens=6, capacity=32))[0]]
+        assert r.output == ref, (r.uid, r.output, ref)
+
+
+def test_engine_preemption_under_page_pressure(model):
+    """A pool too small for all admissions preempts (recompute) and
+    still completes every request with its full token budget."""
+    cfg, params = model
+    sv = ServeConfig(slots=2, capacity=32, page_size=8, pages=5)
+    eng = Engine(params, cfg, serve=sv)
+    for uid in range(3):
+        eng.submit(Request(uid=uid, prompt=[1 + uid, 2, 3],
+                           max_new_tokens=20))
+    done = eng.run_to_completion()
+    assert sorted(r.uid for r in done) == [0, 1, 2]
+    assert all(len(r.output) == 20 and r.done for r in done)
+    assert eng.evictions > 0
+    assert eng.stats()["pages_free"] == 5
+
+
+def test_engine_cost_policy(model):
+    """The cost scheduler admits the cheapest queued request first."""
+    cfg, params = model
+    sv = ServeConfig(slots=1, capacity=32, policy="cost")
+    eng = Engine(params, cfg, serve=sv)
+    eng.submit(Request(uid=0, prompt=[1, 2, 3, 4, 5, 6, 7],
+                       max_new_tokens=2))
+    eng.submit(Request(uid=1, prompt=[9, 9], max_new_tokens=2))
+    done = eng.run_to_completion()
+    # the shorter (cheaper) prompt finishes first despite arriving later
+    assert [r.uid for r in done] == [1, 0]
+
+
+def test_swa_engine_paged(rng):
+    """Mixtral (MoE + sliding window) through the paged engine: exact
+    per-request budgets, window-dead pages reclaimed, pool drained."""
+    cfg = smoke_config("mixtral-8x7b")
+    params, _ = tfm.init_model(jax.random.PRNGKey(1), cfg)
+    eng = Engine(params, cfg, slots=2, capacity=64)
+    for uid in range(3):
+        eng.submit(Request(uid=uid, prompt=[1 + uid, 2, 3, 4],
+                           max_new_tokens=4))
+    done = eng.run_to_completion()
+    assert sorted(r.uid for r in done) == [0, 1, 2]
+    assert all(len(r.output) == 4 and r.done for r in done)
+    assert eng.stats()["pages_free"] == eng.stats()["pages_total"]
