@@ -12,13 +12,15 @@ Two views:
   the bitmap emulation pays jnp gather overheads the paper's in-register
   implementation does not, so wall-clock ordering on CPU ≠ Table III.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import im2col as i2c
 from repro.core.stats import im2col_read_cost
-from benchmarks.bench_utils import emit, sparse, time_fn
+from benchmarks.bench_utils import dump_json, emit, sparse, time_fn
 
 SPARSITIES = [0.0, 0.25, 0.50, 0.75, 0.99, 0.999]
 H = W = 56
@@ -26,14 +28,16 @@ C = 128
 K = 3
 
 
-def run():
+def run(smoke: bool = False):
     rng = np.random.default_rng(0)
+    h = w = 28 if smoke else H
+    c = 32 if smoke else C
     dense_fn = jax.jit(lambda x: i2c.im2col_outer(x, K, K, 1))
     csr_fn = jax.jit(lambda x: i2c.im2col_csr(x, K, K, 1))
     bmp_fn = jax.jit(lambda x: i2c.im2col_bitmap(x, K, K, 1))
     rows = []
     for s in SPARSITIES:
-        x = jnp.asarray(sparse(rng, (H, W, C), s))
+        x = jnp.asarray(sparse(rng, (h, w, c), s))
         t_d = time_fn(dense_fn, x)
         t_c = time_fn(csr_fn, x)
         t_b = time_fn(bmp_fn, x)
@@ -60,4 +64,11 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shapes for CI")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write machine-readable results to PATH")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+    dump_json(args.json, {"bench": "bench_im2col", "smoke": args.smoke})

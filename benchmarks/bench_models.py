@@ -662,6 +662,108 @@ def run_decode(smoke: bool = False):
           "kernel path matches dense")
 
 
+# ---------------------------------------------------------------------------
+# Fig. 22 CONV workloads through repro.sparse.conv (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def run_conv(smoke: bool = False):
+    """Fig. 22 CONV shapes through the dual-sparse conv subsystem.
+
+    Per layer: counted scheduled steps of ``sparse.conv.conv2d`` in
+    dense / dual / dual+``condense="k"`` modes (the XLA stats path —
+    the schedule is what Fig. 22 measures), asserting the dual+kc
+    schedule shrinks vs dense; then one small-shape kernel run pinning
+    executed == counted and ≤1e-4 parity on the Pallas path.
+
+    The per-layer activation sparsity is laid down *channel-granular*
+    (``kfiber_sparse`` — dead input channels, the pruned-channel /
+    flocked-ReLU regime of DESIGN.md §12): an im2col k-fiber
+    ``(dy, dx, c)`` is all-zero exactly when channel ``c`` is dead, so
+    the elementwise AND the kc planner schedules from recovers the
+    skips.  Uniform elementwise zeros at the same rate would leave the
+    *fiber*-granular schedule dense (every 16-row output block almost
+    surely touches one non-zero per k) — that regime is what the
+    element-granular OHMMA step model of ``run()`` measures.
+    """
+    from repro.sparse import conv as spc
+
+    print("# Fig 22 CONV workloads via repro.sparse.conv (dual-side "
+          "implicit im2col)")
+    layers = []
+    for model, ls in pm.MODELS.items():
+        for layer in ls:
+            if isinstance(layer, pm.ConvLayer):
+                layers.append((model, layer))
+    if smoke:
+        # first two layers per model, shapes /4 (floors keep geometry legal)
+        picked = {}
+        for model, layer in layers:
+            picked.setdefault(model, []).append(layer)
+        layers = [
+            (model,
+             layer._replace(h=max(layer.h // 4, layer.k + 1),
+                            w=max(layer.w // 4, layer.k + 1),
+                            cin=max(layer.cin // 4, 8),
+                            cout=max(layer.cout // 4, 8)))
+            for model, ls in picked.items() for layer in ls[:2]]
+    bm_, bn_, sk_ = (16, 16, 16) if smoke else (64, 128, 128)
+
+    reductions = []
+    for model, layer in layers:
+        x = jnp.asarray(kfiber_sparse(
+            RNG, (1, layer.h, layer.w, layer.cin), layer.a_sparsity))
+        w = RNG.normal(size=(layer.k, layer.k, layer.cin,
+                             layer.cout)).astype(np.float32)
+        w = jnp.asarray(w) * pruning.magnitude_mask(jnp.asarray(w),
+                                                    layer.w_sparsity)
+        steps = {}
+        with sp.dispatch.warnings_suppressed():
+            for mode, condense in (("dense", None), ("dual", None),
+                                   ("dual", "k")):
+                _, sc = spc.conv2d(
+                    x, w, layer.stride, mode=mode, block_m=bm_,
+                    block_n=bn_, slice_k=sk_, condense=condense,
+                    collect_stats=True)
+                key = mode if condense is None else f"{mode}+kc"
+                steps[key] = int(sc.sparse) if sc is not None else 0
+        red = steps["dense"] / max(steps["dual+kc"], 1)
+        reductions.append(red)
+        emit(f"conv/{model}/{layer.name}", 0.0,
+             f"dense={steps['dense']};dual={steps['dual']};"
+             f"dualkc={steps['dual+kc']};kc_reduction={red:.2f}")
+    mean_red = float(np.mean(reductions))
+    print(f"#   mean dual+kc scheduled-step reduction vs dense: "
+          f"{mean_red:.2f}x over {len(layers)} CONV layers")
+    assert all(r > 1.0 for r in reductions), \
+        "dual+kc must shrink the schedule on every Fig. 22 CONV layer"
+
+    # kernel acceptance: executed == counted, ≤1e-4 vs the conv oracle
+    # (stride 2 → the strided Pallas im2col variant)
+    from repro.core import spconv
+    layer = pm.RESNET18[3]._replace(h=10, w=10, cin=8, cout=16, stride=2)
+    x = jnp.asarray(sparse(RNG, (2, layer.h, layer.w, layer.cin),
+                           layer.a_sparsity))
+    w = RNG.normal(size=(layer.k, layer.k, layer.cin,
+                         layer.cout)).astype(np.float32)
+    w = jnp.asarray(w) * pruning.magnitude_mask(jnp.asarray(w),
+                                                layer.w_sparsity)
+    with sp.tape.collect() as entries:
+        out, _ = spc.conv2d(x, w, layer.stride, mode="dual", block_m=16,
+                            block_n=16, slice_k=16, use_kernel=True,
+                            condense="k", collect_stats=True)
+    ref = spconv.conv2d_ref(x, w, layer.stride)
+    err = float(jnp.abs(out - ref).max())
+    [e] = sp.tape.summarize(entries)
+    assert e["executed_steps"] == e["sparse_steps"], e
+    assert err <= 1e-4, err
+    emit("conv/kernel_check", 0.0,
+         f"max_err={err:.2e};executed={e['executed_steps']};"
+         f"counted={e['sparse_steps']}")
+    print(f"#   kernel check: executed == counted, max|err|={err:.2e}")
+    print("# OK: dual+kc schedules shrink on every CONV layer; kernel "
+          "path matches the conv oracle")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -683,10 +785,15 @@ if __name__ == "__main__":
                          "BENCH_autotune_cache.json, verify the dispatch "
                          "reads it, write BENCH_autotune.json "
                          "(DESIGN.md §13)")
+    ap.add_argument("--conv", action="store_true",
+                    help="only run the Fig. 22 CONV sweep through "
+                         "repro.sparse.conv (DESIGN.md §15)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write machine-readable results to PATH")
     args = ap.parse_args()
-    if args.tune:
+    if args.conv:
+        run_conv(smoke=args.smoke)
+    elif args.tune:
         run_tune(smoke=args.smoke)
     elif args.sharded:
         run_dispatch_moe(smoke=args.smoke, sharded=True)

@@ -96,6 +96,32 @@ def main():
         print(f"  {e['name']:10s} executed {e['executed_steps']}/"
               f"{e['dense_steps']} ({e['speedup']:.2f}x)")
 
+    # --- conv frontend (DESIGN.md §15): whisper's real mel stem ---------
+    # the audio tower is no longer a stub: two convs lower through the
+    # bitmap implicit im2col and ride the same dispatch/tape as the GEMMs
+    from repro.configs.base import RunConfig
+    from repro.models import model_zoo as zoo
+    from repro.models import transformer as tfm
+    cfg_w = dataclasses.replace(
+        smoke_config("whisper-base"), sparse_mode="dual",
+        sparse_kcondense=True)
+    wp, _ = tfm.init_model(jax.random.PRNGKey(2), cfg_w)
+    batch = {"tokens": jnp.ones((1, 8), jnp.int32),
+             **zoo.frontend_inputs(cfg_w, 1)}   # raw (B, 2T, n_mels) mel
+    rc = RunConfig(scan_unroll=True, remat="none")
+    plans = tfm.plan_weight_activities(wp, cfg_w)
+    with sp.tape.collect() as entries:
+        tfm.forward(wp, batch, cfg_w, mode="train", weight_plans=plans,
+                    rc=rc)
+    conv = [e for e in sp.tape.summarize(entries)
+            if e["name"].startswith("conv.")]
+    print("Whisper mel stem through repro.sparse.conv (dual + kcondense):")
+    for e in conv:   # smoke dims quantize to a couple of slices; the
+        # Fig. 22 sweep (bench_models --conv) shows the step reductions
+        print(f"  {e['name']:12s} executed {e['executed_steps']}/"
+              f"{e['dense_steps']} dense MXU steps (counted "
+              f"{e['sparse_steps']})")
+
 
 if __name__ == "__main__":
     main()

@@ -45,7 +45,16 @@ class ModelConfig:
     encoder_len: int = 0           # stub frontend sequence length
     cross_attn_every: int = 0      # vlm: cross-attn at p % cross_attn_every == 0
     num_image_tokens: int = 0
-    frontend: str = "none"         # none | audio | vision (always a stub)
+    frontend: str = "none"         # none | audio | vision
+    # real conv frontends (repro.models.frontend, DESIGN.md §15): with
+    # frontend_conv the model consumes raw mel frames / images through a
+    # conv stem routed via repro.sparse.conv; without it the frontend is
+    # the legacy stub fed precomputed embeddings.
+    frontend_conv: bool = False
+    n_mels: int = 0                # audio: mel bins into the conv stem
+    image_size: int = 0            # vision: square input image extent
+    patch_size: int = 0            # vision: patch conv kernel == stride
+    image_channels: int = 3        # vision: input channels
     # dual-side sparsity dispatch (repro.sparse, DESIGN.md §4): default
     # dense preserves numerics/compile exactly; weight/dual route every
     # projection through the sparse dispatch layer.
@@ -81,6 +90,30 @@ class ModelConfig:
     subquadratic: bool = False
 
     def __post_init__(self):
+        # conv-frontend geometry must be self-consistent at config time —
+        # a mismatch would otherwise surface as a shape error deep inside
+        # the encoder/cross-attention stacks.
+        if self.frontend_conv:
+            if self.frontend == "audio" and self.n_mels <= 0:
+                raise ValueError(
+                    f"ModelConfig(name={self.name!r}): frontend_conv audio "
+                    "requires n_mels > 0")
+            if self.frontend == "vision":
+                if self.patch_size <= 0 or self.image_size % self.patch_size:
+                    raise ValueError(
+                        f"ModelConfig(name={self.name!r}): frontend_conv "
+                        f"vision requires patch_size dividing image_size, "
+                        f"got {self.image_size}/{self.patch_size}")
+                g = self.image_size // self.patch_size
+                if self.num_image_tokens not in (g * g, g * g + 1):
+                    raise ValueError(
+                        f"ModelConfig(name={self.name!r}): num_image_tokens "
+                        f"({self.num_image_tokens}) must be {g * g} (patch "
+                        f"grid) or {g * g + 1} (grid + cls token)")
+            if self.frontend == "none":
+                raise ValueError(
+                    f"ModelConfig(name={self.name!r}): frontend_conv "
+                    "requires frontend='audio'|'vision'")
         # the model-side dense short-circuits (moe/mlp/attention/lm_head)
         # never reach the dispatch layer, so this misconfiguration must
         # be caught at the config, not one layer down: sparse_use_kernel

@@ -1,7 +1,8 @@
 """llama-3.2-vision-90b [vlm] — cross-attention image layers every 5th
-layer (hf:meta-llama/Llama-3.2-90B-Vision).  The vision tower is a STUB:
-input_specs() provides precomputed patch embeddings (1601 tokens,
-projected to d_model).
+layer (hf:meta-llama/Llama-3.2-90B-Vision).  The vision tower is a real
+patch-conv frontend (DESIGN.md §15): 560×560 images, 14×14 patch conv
+(k == stride) → 40×40 grid + cls = 1601 tokens, routed through
+repro.sparse.conv.
 
 100L (20 cross + 80 self) d_model=8192 64H (GQA kv=8) d_ff=28672
 vocab=128256.
@@ -20,8 +21,11 @@ CONFIG = register(
         d_ff=28672,
         vocab_size=128256,
         cross_attn_every=5,
-        num_image_tokens=1601,
+        num_image_tokens=1601,  # 40×40 patch grid + cls
         frontend="vision",
+        frontend_conv=True,
+        image_size=560,
+        patch_size=14,
         rope_style="half",
         rope_theta=500_000.0,
         mlp_type="swiglu",
@@ -43,8 +47,11 @@ SMOKE = register(
         d_ff=128,
         vocab_size=512,
         cross_attn_every=5,
-        num_image_tokens=16,
+        num_image_tokens=16,    # 4×4 patch grid, no cls
         frontend="vision",
+        frontend_conv=True,
+        image_size=16,
+        patch_size=4,
         rope_style="half",
         mlp_type="swiglu",
     ))

@@ -1,6 +1,7 @@
-"""whisper-base [audio] — enc-dec transformer backbone; the conv/mel
-frontend is a STUB: input_specs() provides precomputed frame embeddings
-(arXiv:2212.04356).
+"""whisper-base [audio] — enc-dec transformer with the real two-conv mel
+stem (arXiv:2212.04356): 80 mel bins, conv k=3 s=1 + conv k=3 s=2 (GeLU),
+3000 frames → 1500 encoder positions, routed through repro.sparse.conv
+(DESIGN.md §15).
 
 6L (encoder) + 6L (decoder), d_model=512 8H (kv=8, MHA) d_ff=2048
 vocab=51865; GeLU MLP, LayerNorm, sinusoidal positions (no RoPE).
@@ -21,8 +22,10 @@ CONFIG = register(
         vocab_size=51865,
         is_encoder_decoder=True,
         n_encoder_layers=6,
-        encoder_len=1500,      # 30 s of audio at 50 Hz (stub embeddings)
+        encoder_len=1500,      # 30 s of audio at 50 Hz (3000 mel frames)
         frontend="audio",
+        frontend_conv=True,
+        n_mels=80,
         rope_style="none",
         abs_positions=True,
         mlp_type="gelu",
@@ -47,6 +50,8 @@ SMOKE = register(
         n_encoder_layers=2,
         encoder_len=24,
         frontend="audio",
+        frontend_conv=True,
+        n_mels=16,
         rope_style="none",
         abs_positions=True,
         mlp_type="gelu",

@@ -8,17 +8,19 @@ because the lowered matrix never exists in HBM.  Here:
 * :func:`conv2d_ref` — XLA's dense convolution (oracle).
 * :func:`conv2d_im2col` — explicit dense im2col + matmul (paper's
   *Dense Explicit* baseline).
-* :func:`conv2d_dual_sparse` — bitmap im2col + SpGEMM with step-count
-  statistics (*Dual Sparse Implicit*).  The Pallas fused kernel is
-  ``repro.kernels.sparse_im2col`` + ``bitmap_spgemm``; this module wires
-  them and carries the cost accounting.
+* :func:`conv2d_dual_sparse` — thin reference wrapper over
+  :func:`repro.sparse.conv.conv2d` (*Dual Sparse Implicit*): the
+  production path lives in the dispatch layer (DESIGN.md §15), which
+  records its executed/counted steps on the ``repro.sparse.tape`` —
+  the legacy per-call accounting this module used to carry is retired
+  so conv and GEMM work units are summable in one
+  ``profile_sparsity`` report.
 """
 from __future__ import annotations
 
 from typing import NamedTuple, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import im2col as i2c
 from repro.core import stats
@@ -62,34 +64,17 @@ def conv2d_dual_sparse(
     use_kernel: bool = False,
     interpret: Optional[bool] = None,
 ) -> SpConvResult:
-    """Dual-side sparse conv: bitmap im2col (B side) × sparse weights (A).
+    """Dual-side sparse conv via :func:`repro.sparse.conv.conv2d`.
 
-    GEMM orientation (DESIGN.md §2): A = W_flat^T (F, KKC) column-condensed,
-    B = L^T (KKC, P) row-condensed from the bitmap im2col.  Step counting
-    uses the MXU-adapted model on the actual operand sparsity patterns.
+    Kept as the parity-test entry point; the real subsystem (planned
+    weights, ``condense="k"``, autotuning, tape accounting) is
+    :mod:`repro.sparse.conv`.  ``block_k`` is the contraction (slice-k)
+    granularity of the legacy signature.
     """
-    from repro.core import spgemm as sg
+    from repro.sparse import conv as spc
 
-    n, h, wd, c = x.shape
-    kh, kw, _, f = w.shape
-    oh, ow = i2c.out_size(h, kh, stride), i2c.out_size(wd, kw, stride)
-    w_flat_t = w.reshape(kh * kw * c, f).T            # A: (F, KKC)
-
-    def per_image(img):
-        if use_kernel:
-            from repro.kernels import ops as kops
-            lowered = kops.sparse_im2col(img, kh, kw, stride,
-                                         interpret=interpret)
-        else:
-            lowered = i2c.im2col_bitmap(img, kh, kw, stride)
-        lt = lowered.decode()                         # (KKC, P)
-        res = sg.spgemm(w_flat_t, lt,
-                        block_m=block_m, block_n=block_n, block_k=block_k,
-                        use_kernel=use_kernel, interpret=interpret)
-        return res.out.T, res.steps                   # (P, F)
-
-    outs, steps = jax.vmap(per_image)(x)
-    tot = stats.StepCounts(
-        dense=jnp.sum(steps.dense), sparse=jnp.sum(steps.sparse),
-        tiles_skipped=jnp.sum(steps.tiles_skipped))
-    return SpConvResult(out=outs.reshape(n, oh, ow, f), steps=tot)
+    out, steps = spc.conv2d(
+        x, w, stride, mode="dual", block_m=block_m, block_n=block_n,
+        slice_k=block_k, use_kernel=use_kernel, interpret=interpret,
+        collect_stats=True, name="spconv.dual")
+    return SpConvResult(out=out, steps=steps)

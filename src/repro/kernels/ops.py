@@ -23,7 +23,10 @@ from repro.kernels.bitmap_spgemm import (  # noqa: F401  (re-exports)
     kcondense,
     plan_slices,
 )
-from repro.kernels.sparse_im2col import sparse_im2col_pallas
+from repro.kernels.sparse_im2col import (
+    sparse_im2col_pallas,
+    sparse_im2col_strided_pallas,
+)
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -37,29 +40,45 @@ def bitmap_encode(x: jax.Array, interpret: Optional[bool] = None):
     return bitmap_encode_pallas(x, interpret=_auto_interpret(interpret))
 
 
-def sparse_im2col(
-    x: jax.Array, kh: int, kw: int, stride: int = 1,
-    interpret: Optional[bool] = None,
-) -> i2c.LoweredBitmap:
-    """Implicit bitmap im2col of an (H, W, C) feature map.
+def rowpacked_to_flat(low_bits: jax.Array, low_vals: jax.Array,
+                      ow: int, p: int) -> i2c.LoweredBitmap:
+    """Kernel output layout → flat-P :class:`~repro.core.im2col.LoweredBitmap`.
 
-    stride==1 runs the fused Pallas path (encode kernel → im2col kernel);
-    other strides use the jnp reference (same outputs).
+    The im2col kernels emit the lowered bitmap per-output-row packed —
+    (KKC, OH, ceil(OW/32)), each feature row starting a fresh word for
+    lane alignment — while the planner/dispatch layout packs over the
+    flat P axis.  This is the one place that conversion lives (and the
+    round-trip the property tests pin): unpack each row to its OW bits,
+    concatenate to (KKC, P), repack.  Values/counts are layout-invariant.
     """
-    interp = _auto_interpret(interpret)
-    if stride != 1:
-        return i2c.im2col_bitmap(x, kh, kw, stride)
-    h, w, c = x.shape
-    oh, ow = h - kh + 1, w - kw + 1
-    p = oh * ow
-    xc = jnp.moveaxis(x, -1, 0)                        # (C, H, W)
-    bits, cond = bitmap_encode_pallas(xc, interpret=interp)
-    low_bits, low_vals = sparse_im2col_pallas(
-        cond, bits, kh=kh, kw=kw, interpret=interp)
-    # convert per-row packed bitmap (KKC, OH, OWw) to flat-P packing
     mask = bmod.unpack_bits(low_bits, axis=-1)[..., :ow]   # (KKC, OH, OW)
     flat = mask.reshape(-1, p)
     packed = bmod.pack_bits(jnp.pad(flat, ((0, 0), (0, (-p) % bmod.WORD))),
                             axis=1)
     counts = jnp.sum(flat, axis=1, dtype=jnp.int32)
     return i2c.LoweredBitmap(bitmap=packed, values=low_vals, counts=counts)
+
+
+def sparse_im2col(
+    x: jax.Array, kh: int, kw: int, stride: int = 1,
+    interpret: Optional[bool] = None,
+) -> i2c.LoweredBitmap:
+    """Implicit bitmap im2col of an (H, W, C) feature map.
+
+    stride==1 runs the fused Pallas fast path (encode kernel → word
+    shift/or im2col kernel); stride≥2 runs the strided one-hot-selection
+    kernel variant — same encode, same outputs, every stride counted.
+    """
+    interp = _auto_interpret(interpret)
+    h, w, c = x.shape
+    oh, ow = i2c.out_size(h, kh, stride), i2c.out_size(w, kw, stride)
+    p = oh * ow
+    xc = jnp.moveaxis(x, -1, 0)                        # (C, H, W)
+    bits, cond = bitmap_encode_pallas(xc, interpret=interp)
+    if stride == 1:
+        low_bits, low_vals = sparse_im2col_pallas(
+            cond, bits, kh=kh, kw=kw, interpret=interp)
+    else:
+        low_bits, low_vals = sparse_im2col_strided_pallas(
+            cond, bits, kh=kh, kw=kw, stride=stride, interpret=interp)
+    return rowpacked_to_flat(low_bits, low_vals, ow, p)

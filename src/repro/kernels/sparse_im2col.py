@@ -13,8 +13,11 @@ dy..dy+OH-1 (already in VMEM — the "registers" of the paper's S1), then:
 The lowered matrix never exists in HBM (implicit im2col); the outputs are
 exactly the (bitmap, condensed values) operand the SpGEMM kernel's planner
 consumes.  Kernel fast-path is stride=1 (the dominant DNN case and the
-paper's running example); other strides fall back to the jnp reference in
-``ops.py``.
+paper's running example); strides ≥ 2 (whisper's second stem conv, patch
+convs) run the strided variant below, which trades the word shift/or for
+one-hot row/column selection matmuls (gather-free, Mosaic-friendly) over
+the unpacked window — same output contract, so ``ops.py`` shares the
+flat-P conversion.
 
 Output bitmap layout: per-output-row packed words, i.e. shape
 (KKC, OH, ceil(OW/32)) — each feature row's window bits start a fresh word
@@ -86,6 +89,128 @@ def _im2col_kernel(vals_ref, bits_ref, out_bits_ref, out_vals_ref, *,
         return off_run + ln
 
     jax.lax.fori_loop(0, oh, body, jnp.int32(0))
+
+
+def _im2col_kernel_strided(vals_ref, bits_ref, out_bits_ref, out_vals_ref,
+                           *, h: int, oh: int, ow: int, oww: int,
+                           stride: int):
+    dy = pl.program_id(1)
+    dx = pl.program_id(2)
+
+    vals_rows = pl.load(
+        vals_ref, (pl.ds(0, 1), slice(None), slice(None)))[0]  # (H, Wp)
+    words = pl.load(
+        bits_ref, (pl.ds(0, 1), slice(None), slice(None)))[0]  # (H, Wwp)
+    wwp = words.shape[1]
+    wp = vals_rows.shape[1]
+
+    # ---- S2: unpack the bitmap row and select the strided window ----
+    # (strided bits are not word-contiguous, so instead of shift/or we
+    # unpack and select via one-hot matmuls — no data-dependent gathers)
+    shifts = jax.lax.broadcasted_iota(
+        jnp.int32, (h, wwp, WORD), 2).astype(jnp.uint32)
+    bits_full = ((words[:, :, None] >> shifts) & jnp.uint32(1)
+                 ).reshape(h, wwp * WORD).astype(jnp.float32)  # (H, Wb)
+    # S3 offsets: exclusive popcount prefix per feature-map row
+    offs_full = jnp.cumsum(bits_full, axis=1) - bits_full      # (H, Wb)
+
+    # row one-hot: output row oy reads feature row oy*stride + dy
+    oy_i = jax.lax.broadcasted_iota(jnp.int32, (oh, h), 0)
+    yy_i = jax.lax.broadcasted_iota(jnp.int32, (oh, h), 1)
+    row_sel = (oy_i * stride + dy == yy_i).astype(jnp.float32)  # (OH, H)
+    mask_rows = jnp.dot(row_sel, bits_full)                     # (OH, Wb)
+    offs_rows = jnp.dot(row_sel, offs_full)                     # (OH, Wb)
+    vals_sel = jnp.dot(row_sel, vals_rows.astype(jnp.float32))  # (OH, Wp)
+
+    # column one-hot: output col ox reads pixel ox*stride + dx
+    wb = wwp * WORD
+    cc_i = jax.lax.broadcasted_iota(jnp.int32, (wb, ow), 0)
+    ox_i = jax.lax.broadcasted_iota(jnp.int32, (wb, ow), 1)
+    col_sel = (ox_i * stride + dx == cc_i).astype(jnp.float32)  # (Wb, OW)
+    bits_w = jnp.dot(mask_rows, col_sel)                        # (OH, OW)
+    offs_w = jnp.dot(offs_rows, col_sel).astype(jnp.int32)      # (OH, OW)
+    active = bits_w > 0.5
+
+    # ---- S4: one-hot gather of the condensed values by offset ----
+    tgt = jax.lax.broadcasted_iota(jnp.int32, (oh, ow, wp), 2)
+    g = ((offs_w[:, :, None] == tgt) & active[:, :, None]
+         ).astype(jnp.float32)
+    vals_w = jnp.sum(g * vals_sel[:, None, :], axis=2)          # (OH, OW)
+
+    # per-output-row condense (rank one-hot scatter) + packed bits
+    act_i = active.astype(jnp.int32)
+    rank = jnp.cumsum(act_i, axis=1) - act_i                    # (OH, OW)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (oh, ow, ow), 2)
+    scat = ((rank[:, :, None] == slot) & active[:, :, None]
+            ).astype(jnp.float32)
+    seg = jnp.sum(vals_w[:, :, None] * scat, axis=1)            # (OH, OW)
+    seg_lens = jnp.sum(act_i, axis=1)                           # (OH,)
+
+    pad = oww * WORD - ow
+    bits_pad = jnp.pad(act_i, ((0, 0), (0, pad)))
+    weights = (jnp.uint32(1) << jax.lax.broadcasted_iota(
+        jnp.int32, (oh, oww, WORD), 2).astype(jnp.uint32))
+    out_bits_ref[...] = jnp.sum(
+        bits_pad.reshape(oh, oww, WORD).astype(jnp.uint32) * weights,
+        axis=2, dtype=jnp.uint32)[None]
+
+    out_vals_ref[...] = jnp.zeros_like(out_vals_ref)
+    dtype = out_vals_ref.dtype
+
+    def body(oy, off_run):
+        s_row = jax.lax.dynamic_slice(seg, (oy, 0), (1, ow))[0]
+        ln = jax.lax.dynamic_slice(seg_lens, (oy,), (1,))[0]
+        pl.store(out_vals_ref, (pl.ds(0, 1), pl.ds(off_run, ow)),
+                 s_row.astype(dtype)[None])
+        return off_run + ln
+
+    jax.lax.fori_loop(0, oh, body, jnp.int32(0))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kh", "kw", "stride", "interpret"))
+def sparse_im2col_strided_pallas(
+    cond_vals: jax.Array,   # (C, H, W) row-condensed values
+    bits: jax.Array,        # (C, H, ceil(W/32)) packed uint32
+    *, kh: int, kw: int, stride: int, interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Strided variant, same output contract as :func:`sparse_im2col_pallas`.
+
+    Returns (lowered_bits (KKC, OH, OWw) uint32, lowered_vals (KKC, P)).
+    """
+    c, h, w = cond_vals.shape
+    oh, ow = (h - kh) // stride + 1, (w - kw) // stride + 1
+    oww = -(-ow // WORD)
+    p = oh * ow
+    p_cap = -(-(p + ow) // 128) * 128  # slack for the last dynamic store
+
+    vals_p = jnp.pad(cond_vals, ((0, 0), (0, 0), (0, ow)))
+    wp = vals_p.shape[2]
+    wwp = bits.shape[2]
+    kkc = kh * kw * c
+
+    kernel = functools.partial(_im2col_kernel_strided, h=h, oh=oh, ow=ow,
+                               oww=oww, stride=stride)
+    out_bits, out_vals = pl.pallas_call(
+        kernel,
+        grid=(c, kh, kw),
+        in_specs=[
+            pl.BlockSpec((1, h, wp), lambda ci, dy, dx: (ci, 0, 0)),
+            pl.BlockSpec((1, h, wwp), lambda ci, dy, dx: (ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, oh, oww),
+                         lambda ci, dy, dx: ((dy * kw + dx) * c + ci, 0, 0)),
+            pl.BlockSpec((1, p_cap),
+                         lambda ci, dy, dx: ((dy * kw + dx) * c + ci, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((kkc, oh, oww), jnp.uint32),
+            jax.ShapeDtypeStruct((kkc, p_cap), cond_vals.dtype),
+        ],
+        interpret=interpret,
+    )(vals_p, bits)
+    return out_bits, out_vals[:, :p]
 
 
 @functools.partial(jax.jit,

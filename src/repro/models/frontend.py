@@ -1,0 +1,165 @@
+"""Real conv frontends for the audio/vision towers (DESIGN.md §15).
+
+Until PR 8 the ``whisper_base`` and ``llama3_2_vision_90b`` configs were
+fed precomputed frame/patch embeddings — the conv stems the real models
+start with were stubs.  With ``ModelConfig.frontend_conv`` the model
+consumes the raw modality input instead:
+
+* **audio** — whisper's two-conv mel stem: conv k=3 stride 1 over time
+  (n_mels → d_model), GeLU, conv k=3 stride 2 (d_model → d_model), GeLU;
+  SAME time padding, so ``(B, 2·encoder_len, n_mels)`` mel frames land as
+  ``(B, encoder_len, d_model)`` encoder inputs.  Expressed as 2-D convs
+  with a singleton height so both stems ride :func:`repro.sparse.conv2d`.
+* **vision** — a patch-conv tower: k = stride = ``patch_size`` VALID conv
+  (image_channels → d_model), flattened to the patch grid, plus an
+  optional learned cls token (when ``num_image_tokens`` is grid+1) and
+  learned positions.
+
+Every stem conv routes through :mod:`repro.sparse.conv` with the config's
+dispatch knobs — dense mode executes ``lax.conv`` (numerics-preserving
+default), non-dense modes run the bitmap implicit im2col with
+``use_kernel``/``condense="k"``/``autotune`` support, recording
+``conv.*`` entries on the stats tape with the executed == counted
+contract.  Weight-side plans ride the same ``plans`` pytree as every
+other layer (built by ``transformer.plan_weight_activities``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sparse
+from repro.configs.base import ModelConfig
+from repro.models import nn
+from repro.sparse.conv import PlannedConv
+from repro.sparse.weights import PlannedWeight
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_audio_frontend(key, cfg: ModelConfig) -> Dict[str, nn.P]:
+    """Whisper mel stem params (P-leaf tree)."""
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    conv_axes = (None, None, None, "embed")
+    return {
+        "conv1": nn.normal(k1, (1, 3, cfg.n_mels, d), conv_axes),
+        "b1": nn.zeros((d,), ("embed",)),
+        "conv2": nn.normal(k2, (1, 3, d, d), conv_axes),
+        "b2": nn.zeros((d,), ("embed",)),
+    }
+
+
+def init_vision_frontend(key, cfg: ModelConfig) -> Dict[str, nn.P]:
+    """Patch-conv vision tower params (P-leaf tree)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, ps = cfg.d_model, cfg.patch_size
+    g = cfg.image_size // ps
+    p: Dict[str, nn.P] = {
+        "patch": nn.normal(k1, (ps, ps, cfg.image_channels, d),
+                           (None, None, None, "embed")),
+        "bias": nn.zeros((d,), ("embed",)),
+        "pos": nn.normal(k2, (cfg.num_image_tokens, d), (None, "embed")),
+    }
+    if cfg.num_image_tokens == g * g + 1:
+        p["cls"] = nn.normal(k3, (d,), ("embed",))
+    return p
+
+
+def init_frontend(key, cfg: ModelConfig) -> Dict[str, nn.P]:
+    if cfg.frontend == "audio":
+        return init_audio_frontend(key, cfg)
+    if cfg.frontend == "vision":
+        return init_vision_frontend(key, cfg)
+    raise ValueError(f"no conv frontend for frontend={cfg.frontend!r}")
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _planned_conv(w4: jax.Array, plans: Optional[Dict], key: str,
+                  dtype, cfg: ModelConfig):
+    """Attach a cached ``(KH·KW·C, F)`` slice activity to a conv kernel.
+
+    The conv analogue of ``sparse.weights.planned_or_array``: with a
+    cached plan the weight becomes a :class:`PlannedConv` (the "@elem"
+    sibling riding along under kcondense), otherwise the bare 4-D array
+    and the dispatch re-plans on the fly.
+    """
+    kh, kw, c, f = w4.shape
+    ebn = cfg.sparse_block_n if cfg.sparse_kcondense else 0
+    w2 = sparse.weights.planned_or_array(
+        w4.reshape(kh * kw * c, f), plans, key, dtype,
+        cfg.sparse_slice_k, block_n=ebn)
+    if isinstance(w2, PlannedWeight):
+        return PlannedConv(weight=w2, kh=kh, kw=kw)
+    return w4.astype(dtype)
+
+
+def _conv_kwargs(cfg: ModelConfig) -> dict:
+    return sparse.dispatch.kwargs_from_config(cfg)
+
+
+def audio_frontend(fp: Dict, mel: jax.Array, cfg: ModelConfig, *,
+                   plans: Optional[Dict] = None) -> jax.Array:
+    """mel (B, T, n_mels) → (B, T//2, d_model), whisper's two-conv stem."""
+    kw = _conv_kwargs(cfg)
+    x = mel[:, None]                                    # (B, 1, T, M)
+    x = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (0, 0)))    # SAME for k=3
+    w1 = _planned_conv(fp["conv1"], plans, "conv1", x.dtype, cfg)
+    y, _ = sparse.conv2d(x, w1, 1, name="conv.stem1", **kw)
+    y = jax.nn.gelu(y + fp["b1"].astype(y.dtype))
+    y = jnp.pad(y, ((0, 0), (0, 0), (1, 1), (0, 0)))
+    w2 = _planned_conv(fp["conv2"], plans, "conv2", y.dtype, cfg)
+    y, _ = sparse.conv2d(y, w2, 2, name="conv.stem2", **kw)
+    y = jax.nn.gelu(y + fp["b2"].astype(y.dtype))
+    return y[:, 0]                                      # (B, T//2, D)
+
+
+def vision_frontend(fp: Dict, images: jax.Array, cfg: ModelConfig, *,
+                    plans: Optional[Dict] = None) -> jax.Array:
+    """images (B, H, W, C) → (B, num_image_tokens, d_model)."""
+    kw = _conv_kwargs(cfg)
+    w = _planned_conv(fp["patch"], plans, "patch", images.dtype, cfg)
+    y, _ = sparse.conv2d(images, w, cfg.patch_size, name="conv.patch", **kw)
+    b, g1, g2, d = y.shape
+    y = y.reshape(b, g1 * g2, d) + fp["bias"].astype(y.dtype)
+    if "cls" in fp:
+        cls = jnp.broadcast_to(fp["cls"].astype(y.dtype)[None, None],
+                               (b, 1, d))
+        y = jnp.concatenate([cls, y], axis=1)
+    return y + fp["pos"].astype(y.dtype)[None]
+
+
+def frontend_forward(fp: Dict, batch: Dict, cfg: ModelConfig, dtype, *,
+                     plans: Optional[Dict] = None) -> jax.Array:
+    """Dispatch on modality: the raw batch input → memory embeddings."""
+    if cfg.frontend == "audio":
+        return audio_frontend(fp, batch["mel"].astype(dtype), cfg,
+                              plans=plans)
+    return vision_frontend(fp, batch["images"].astype(dtype), cfg,
+                           plans=plans)
+
+
+def plan_frontend_activities(fparams: Dict, cfg: ModelConfig) -> Dict:
+    """Weight-side plans for the stem convs (reshaped (KH·KW·C, F) fibers,
+    "@elem" siblings under kcondense) — same contract as
+    ``sparse.weights.plan_layer_weights``."""
+    out: Dict[str, jax.Array] = {}
+    sk = cfg.sparse_slice_k
+    for key in ("conv1", "conv2", "patch"):
+        if key not in fparams:
+            continue
+        w4 = fparams[key]
+        w2 = w4.reshape(-1, w4.shape[-1])
+        out[key] = sparse.weights.stacked_slice_activity(
+            w2, sparse.plan.effective_slice_k(w2.shape[0], sk))
+        if cfg.sparse_kcondense:
+            out[f"{key}@elem"] = sparse.weights.stacked_element_activity(
+                w2, cfg.sparse_block_n)
+    return out

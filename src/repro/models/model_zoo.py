@@ -48,12 +48,48 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
     else:  # decode: one new token against a cache of length s
         specs["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
     if cfg.frontend == "audio" and shape.kind != "decode":
-        specs["frames"] = jax.ShapeDtypeStruct(
-            (b, cfg.encoder_len, cfg.d_model), bf16)
+        if cfg.frontend_conv:
+            specs["mel"] = jax.ShapeDtypeStruct(
+                (b, 2 * cfg.encoder_len, cfg.n_mels), bf16)
+        else:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_len, cfg.d_model), bf16)
     if cfg.frontend == "vision" and shape.kind != "decode":
-        specs["image_embeds"] = jax.ShapeDtypeStruct(
-            (b, cfg.num_image_tokens, cfg.d_model), bf16)
+        if cfg.frontend_conv:
+            specs["images"] = jax.ShapeDtypeStruct(
+                (b, cfg.image_size, cfg.image_size, cfg.image_channels),
+                bf16)
+        else:
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_image_tokens, cfg.d_model), bf16)
     return specs
+
+
+def frontend_inputs(cfg: ModelConfig, b: int, *, seed: int = 0,
+                    dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """Concrete frontend inputs for a ``b``-wide prefill batch.
+
+    Conv frontends get ReLU-clipped normals — genuinely zero-heavy raw
+    inputs, so the implicit-im2col dual-side path has real sparsity to
+    skip.  Legacy stub frontends get plain normals (embeddings are not
+    expected to be sparse).  Decode steps take no frontend input (the
+    memory lives in the cross-attention caches).
+    """
+    if cfg.frontend == "none":
+        return {}
+    key = jax.random.PRNGKey(seed)
+    if cfg.frontend == "audio":
+        if cfg.frontend_conv:
+            x = jax.random.normal(key, (b, 2 * cfg.encoder_len, cfg.n_mels))
+            return {"mel": jnp.maximum(x, 0).astype(dtype)}
+        return {"frames": jax.random.normal(
+            key, (b, cfg.encoder_len, cfg.d_model), dtype)}
+    if cfg.frontend_conv:
+        x = jax.random.normal(
+            key, (b, cfg.image_size, cfg.image_size, cfg.image_channels))
+        return {"images": jnp.maximum(x, 0).astype(dtype)}
+    return {"image_embeds": jax.random.normal(
+        key, (b, cfg.num_image_tokens, cfg.d_model), dtype)}
 
 
 def cache_specs(cfg: ModelConfig, shape: ShapeConfig, *,

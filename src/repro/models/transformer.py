@@ -21,6 +21,7 @@ from repro.configs.base import ModelConfig, RunConfig
 from repro.models import attention as attn
 from repro.models import cache as kvc
 from repro.sparse import kvcache as sparse_kvc
+from repro.models import frontend as fem
 from repro.models import mlp as mlpm
 from repro.models import moe as moem
 from repro.models import nn
@@ -97,6 +98,8 @@ def init_model(key, cfg: ModelConfig) -> Tuple[Dict, Dict]:
     if not cfg.tie_embeddings:
         tree["lm_head"] = nn.normal(ks[1], (cfg.d_model, cfg.vocab_size),
                                     ("embed", "vocab"))
+    if cfg.frontend_conv:
+        tree["frontend"] = fem.init_frontend(ks[4], cfg)
     params, specs = nn.unzip(tree)
     dec_vals, dec_specs = _stack_layers(ks[2], cfg, cfg.n_periods)
     params["layers"], specs["layers"] = dec_vals, dec_specs
@@ -173,6 +176,10 @@ def plan_weight_activities(params: Dict, cfg: ModelConfig
                                params["enc_layers"].items()}
     if "lm_head" in params:
         plans["lm_head"] = plan_of(params["lm_head"])
+    if "frontend" in params:
+        # conv stems: (KH·KW·C, F) fiber activities (DESIGN.md §15)
+        plans["frontend"] = fem.plan_frontend_activities(
+            params["frontend"], cfg)
     return plans
 
 
@@ -437,7 +444,9 @@ def forward(
 ) -> ModelOutputs:
     """Full model forward.
 
-    batch: {"tokens": (B,S)} (+ "frames"/"image_embeds" (B,M,D) stubs).
+    batch: {"tokens": (B,S)}; frontends add "mel" (B,T,n_mels) /
+    "images" (B,H,W,C) with ``cfg.frontend_conv``, or the legacy
+    "frames"/"image_embeds" (B,M,D) embedding stubs without it.
     decode: S==1, caches required, positions = current offset.
     weight_plans: cached weight-side sparse plans from
     :func:`plan_weight_activities` (build once at load; optional — without
@@ -456,13 +465,21 @@ def forward(
 
     memory = None
     if mode != "decode":  # at decode, memory K/V live in the cross caches
-        if cfg.frontend == "audio":
+        if cfg.frontend_conv:
+            # real conv stem over the raw modality input (DESIGN.md §15);
+            # its stem convs dispatch through repro.sparse.conv and land
+            # conv.* entries on the stats tape
+            memory = fem.frontend_forward(
+                params["frontend"], batch, cfg, emb_dtype,
+                plans=weight_plans.get("frontend") if weight_plans
+                else None)
+        elif cfg.frontend == "audio":
             memory = batch["frames"].astype(emb_dtype)
         elif cfg.frontend == "vision":
             memory = batch["image_embeds"].astype(emb_dtype)
 
     if cfg.is_encoder_decoder and mode != "decode":
-        # encoder stack over stub frame embeddings (+ sinusoidal positions)
+        # encoder stack over frame embeddings (+ sinusoidal positions)
         enc_x = memory + nn.sinusoidal_positions(
             memory.shape[1], cfg.d_model, memory.dtype)[None]
         enc_x, _, _ = _scan_layers(

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro import sparse
 from repro.configs.base import ModelConfig, RunConfig, ServeConfig
+from repro.models import model_zoo as zoo
 from repro.models import ssm as ssmm
 from repro.models import transformer as tfm
 from repro.serving.scheduler import PageAllocator, Scheduler, pack_prefills
@@ -237,11 +238,17 @@ class Engine:
         toks = jnp.asarray(tokens, jnp.int32)
         if toks.ndim == 1:
             toks = toks[None]
-        rc = dataclasses.replace(self.rc or RunConfig(), scan_unroll=True)
+        rc = dataclasses.replace(self.rc or RunConfig(), scan_unroll=True,
+                                 remat="none")
         caches = tfm.init_caches(self.cfg, toks.shape[0], self.capacity,
                                  quantized=self.quantized)
+        # conv frontends consume raw modality inputs at prefill — feed
+        # synthetic zero-heavy ones so the conv.* stem entries land on
+        # the tape alongside the projection entries (DESIGN.md §15)
+        batch = {"tokens": toks,
+                 **zoo.frontend_inputs(self.cfg, toks.shape[0])}
         with sparse.tape.collect() as entries:
-            out = tfm.forward(self.params, {"tokens": toks}, self.cfg,
+            out = tfm.forward(self.params, batch, self.cfg,
                               mode="prefill", caches=caches,
                               positions=jnp.arange(toks.shape[1],
                                                    dtype=jnp.int32),
@@ -280,13 +287,15 @@ class Engine:
         if self.cfg.sparse_mode == "dense":
             return []
         cfg = dataclasses.replace(self.cfg, sparse_autotune=True)
-        rc = dataclasses.replace(self.rc or RunConfig(), scan_unroll=True)
+        rc = dataclasses.replace(self.rc or RunConfig(), scan_unroll=True,
+                                 remat="none")
         before = set(sparse.autotune.OBSERVED)
         toks = jnp.ones((1, prompt_len), jnp.int32)
         caches = tfm.init_caches(cfg, 1, self.capacity,
                                  quantized=self.quantized)
+        batch = {"tokens": toks, **zoo.frontend_inputs(cfg, 1)}
         with sparse.dispatch.warnings_suppressed():
-            out = tfm.forward(self.params, {"tokens": toks}, cfg,
+            out = tfm.forward(self.params, batch, cfg,
                               mode="prefill", caches=caches,
                               positions=jnp.arange(prompt_len,
                                                    dtype=jnp.int32),
@@ -335,10 +344,12 @@ class Engine:
         prompt = req.resume_prompt or req.prompt
         if self.cfg.sparse_mode == "dense":
             return float(len(prompt))
-        rc = dataclasses.replace(self.rc or RunConfig(), scan_unroll=True)
+        rc = dataclasses.replace(self.rc or RunConfig(), scan_unroll=True,
+                                 remat="none")
         toks = jnp.asarray(prompt, jnp.int32)[None]
+        batch = {"tokens": toks, **zoo.frontend_inputs(self.cfg, 1)}
         with sparse.tape.collect() as entries:
-            tfm.forward(self.params, {"tokens": toks}, self.cfg,
+            tfm.forward(self.params, batch, self.cfg,
                         mode="prefill", caches=None,
                         positions=jnp.arange(len(prompt),
                                              dtype=jnp.int32),

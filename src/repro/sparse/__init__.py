@@ -12,6 +12,9 @@ and the model zoo (DESIGN.md §4):
   static weight-side plan built once at init/load.
 * :mod:`~repro.sparse.dispatch`   — :func:`matmul` / :func:`grouped_matmul`
   / :func:`project`, the batched mode-selectable entry points.
+* :mod:`~repro.sparse.conv`       — :func:`conv2d` / :class:`PlannedConv`,
+  dual-sparse convolution via bitmap implicit im2col feeding the same
+  dispatch (DESIGN.md §15).
 * :mod:`~repro.sparse.tape`       — per-layer StepCounts collection for
   serving and benchmarks.
 * :mod:`~repro.sparse.kvcache`    — :class:`SparseKVCache`, the
@@ -60,6 +63,13 @@ from repro.sparse.weights import (  # noqa: F401
     PlannedWeight,
     as_planned,
     plan_weight,
+)
+from repro.sparse import conv  # noqa: F401
+from repro.sparse.conv import (  # noqa: F401
+    PlannedConv,
+    conv2d,
+    im2col_sparse,
+    plan_conv,
 )
 # imported last: kvcache pulls in repro.models.cache, and autotune pulls
 # in repro.launch — both may re-enter this package mid-initialisation

@@ -243,6 +243,7 @@ def matmul(
     out_dtype=None,
     autotune: bool = False,
     tune_sparsity: Optional[float] = None,
+    op: str = "matmul",
 ) -> Tuple[jax.Array, Optional[stats.StepCounts]]:
     """y = x @ w with mode-selectable dual-side sparse scheduling.
 
@@ -263,7 +264,10 @@ def matmul(
     geometry *and* backend knobs above, a miss warns once per key and
     keeps them — schedule-only either way, so outputs are unchanged.
     ``tune_sparsity`` is the static activation-sparsity hint the key is
-    bucketed under (None → the 'any' bucket).
+    bucketed under (None → the 'any' bucket).  ``op`` names the tuning
+    namespace the key lives in — :mod:`repro.sparse.conv` passes
+    ``op="conv"`` so conv-lowered GEMM shapes tune independently of LM
+    projections with the same bucketed geometry.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -284,7 +288,7 @@ def matmul(
 
     interp = _auto_interpret(interpret)
     if autotune and mode != "dense":
-        kn = _consult_autotune("matmul", t, n, k, x2.dtype,
+        kn = _consult_autotune(op, t, n, k, x2.dtype,
                                tune_sparsity, interp)
         if kn is not None:
             tuned = kn.kwargs()

@@ -1,0 +1,238 @@
+"""Property-based tests of the im2col planner/layout contracts (§15).
+
+The invariants the conv subsystem rests on:
+
+* the lowered bitmap is exactly the non-zero mask of the dense im2col,
+  for arbitrary shapes and strides (the metadata is bitmap-borne — never
+  re-derived from a values compare);
+* the per-output-row packed-word kernel layout → flat-P planner layout
+  conversion (``kernels.ops.rowpacked_to_flat``) round-trips;
+* the row-condensed value segments are the dense lowered rows gathered
+  by popcount offset (paper Fig. 11 S3/S4), and the popcount-offset
+  decode in ``lowered_to_activation`` inverts them;
+* ``conv2d(condense="k")`` executes within one slice per output block of
+  ``ceil(nnz_AND / slice_k)`` (the element-granular acceptance bound).
+
+Runs under a deterministic hypothesis profile (derandomized) so CI is
+reproducible; set ``HYPOTHESIS_PROFILE=dev`` for local random exploring.
+"""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitmap as bmod
+from repro.core import im2col as i2c
+from repro.kernels import ops as kops
+from repro.sparse import conv as spc
+from repro.sparse import plan as pln
+from repro.sparse import tape
+
+settings.register_profile("ci", max_examples=25, deadline=None,
+                          derandomize=True)
+settings.register_profile("dev", max_examples=25, deadline=None)
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+
+
+def _rand_sparse(draw, shape, density=0.5):
+    n = int(np.prod(shape))
+    vals = draw(st.lists(
+        st.floats(-4, 4, allow_nan=False, width=32), min_size=n, max_size=n))
+    keep = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    x = np.asarray(vals, np.float32) * np.asarray(keep, np.float32)
+    return x.reshape(shape)
+
+
+def _dense_lowered_np(x, kh, kw, stride):
+    """Numpy oracle: outer-layout dense im2col L^T (KKC, P)."""
+    h, w, c = x.shape
+    oh, ow = i2c.out_size(h, kh, stride), i2c.out_size(w, kw, stride)
+    out = np.zeros((kh, kw, c, oh, ow), x.dtype)
+    for dy in range(kh):
+        for dx in range(kw):
+            for oy in range(oh):
+                for ox in range(ow):
+                    out[dy, dx, :, oy, ox] = x[oy * stride + dy,
+                                               ox * stride + dx]
+    return out.reshape(kh * kw * c, oh * ow)
+
+
+@st.composite
+def _conv_geometry(draw):
+    kh = draw(st.integers(1, 3))
+    kw = draw(st.integers(1, 3))
+    stride = draw(st.integers(1, 3))
+    h = draw(st.integers(kh, kh + 6))
+    w = draw(st.integers(kw, kw + 6))
+    c = draw(st.integers(1, 4))
+    x = _rand_sparse(draw, (h, w, c))
+    return x, kh, kw, stride
+
+
+# ---------------------------------------------------------------------------
+# (a) lowered bitmap == non-zero mask of the dense im2col
+# ---------------------------------------------------------------------------
+
+def _check_bitmap_is_dense_mask(x, kh, kw, stride):
+    want = _dense_lowered_np(x, kh, kw, stride)
+    lb = i2c.im2col_bitmap(jnp.asarray(x), kh, kw, stride)
+    p = want.shape[1]
+    mask = np.asarray(bmod.unpack_bits(lb.bitmap, axis=1))[:, :p]
+    np.testing.assert_array_equal(mask.astype(bool), want != 0)
+    np.testing.assert_array_equal(np.asarray(lb.decode()), want)
+
+
+@given(g=_conv_geometry())
+def test_lowered_bitmap_is_nonzero_mask_of_dense_im2col(g):
+    _check_bitmap_is_dense_mask(*g)
+
+
+# ---------------------------------------------------------------------------
+# (b) per-output-row packed words → flat-P conversion round-trips
+# ---------------------------------------------------------------------------
+
+def _rowpack_np(mask, vals):
+    """Numpy oracle of the kernel output layout.
+
+    mask/vals: (KKC, OH, OW) → per-output-row packed words
+    (KKC, OH, ceil(OW/32)) and flat row-condensed values (KKC, P).
+    """
+    kkc, oh, ow = mask.shape
+    oww = -(-ow // bmod.WORD)
+    words = np.zeros((kkc, oh, oww), np.uint32)
+    for j in range(ow):
+        words[:, :, j // bmod.WORD] |= (
+            mask[:, :, j].astype(np.uint32) << np.uint32(j % bmod.WORD))
+    p = oh * ow
+    flat_m = mask.reshape(kkc, p)
+    flat_v = vals.reshape(kkc, p)
+    cond = np.zeros((kkc, p), vals.dtype)
+    for r in range(kkc):
+        nz = flat_v[r][flat_m[r]]
+        cond[r, :nz.size] = nz
+    return words, cond
+
+
+def _check_rowpacked_round_trip(mask, vals):
+    kkc, oh, ow = mask.shape
+    p = oh * ow
+    words, cond = _rowpack_np(mask, vals)
+    lb = kops.rowpacked_to_flat(jnp.asarray(words), jnp.asarray(cond),
+                                ow, p)
+    flat_mask = mask.reshape(kkc, p)
+    got_mask = np.asarray(bmod.unpack_bits(lb.bitmap, axis=1))[:, :p]
+    np.testing.assert_array_equal(got_mask.astype(bool), flat_mask)
+    np.testing.assert_array_equal(np.asarray(lb.counts),
+                                  flat_mask.sum(1))
+    np.testing.assert_array_equal(np.asarray(lb.decode()),
+                                  np.where(flat_mask,
+                                           vals.reshape(kkc, p), 0))
+
+
+@st.composite
+def _rowpacked(draw):
+    kkc = draw(st.integers(1, 6))
+    oh = draw(st.integers(1, 5))
+    ow = draw(st.integers(1, 37))   # spans the word boundary
+    vals = _rand_sparse(draw, (kkc, oh, ow))
+    # the kernel only emits values where the bit is set
+    mask = vals != 0
+    return mask, vals
+
+
+@given(r=_rowpacked())
+def test_rowpacked_to_flat_round_trips(r):
+    _check_rowpacked_round_trip(*r)
+
+
+# ---------------------------------------------------------------------------
+# (c) condensed segments == gather-by-popcount-offset; the activation
+#     decode inverts them
+# ---------------------------------------------------------------------------
+
+def _check_condensed_segments(x, kh, kw, stride):
+    want = _dense_lowered_np(x, kh, kw, stride)          # (KKC, P)
+    lb = i2c.im2col_bitmap(jnp.asarray(x), kh, kw, stride)
+    vals = np.asarray(lb.values)
+    counts = np.asarray(lb.counts)
+    for r in range(want.shape[0]):
+        seg = want[r][want[r] != 0]                      # popcount gather
+        assert counts[r] == seg.size
+        np.testing.assert_array_equal(vals[r, :seg.size], seg)
+        np.testing.assert_array_equal(vals[r, seg.size:], 0)
+    # the popcount-offset decode in lowered_to_activation scatters the
+    # segments back to the positional (P, KKC) operand layout
+    act = spc.lowered_to_activation(lb, slice_k=8)
+    np.testing.assert_array_equal(np.asarray(act.values), want.T)
+    np.testing.assert_array_equal(np.asarray(act.element_mask()),
+                                  want.T != 0)
+
+
+@given(g=_conv_geometry())
+def test_condensed_segments_match_popcount_gather(g):
+    _check_condensed_segments(*g)
+
+
+# ---------------------------------------------------------------------------
+# (d) condense="k" executed steps ≤ 1 slice/block over ceil(nnz_AND/sk)
+# ---------------------------------------------------------------------------
+
+def _check_kcondense_step_bound(x, w, stride, block_m, block_n, slice_k):
+    n_im, h, wd, c = x.shape
+    kh, kw, _, f = w.shape
+    xj, wj = jnp.asarray(x), jnp.asarray(w)
+    with tape.collect() as entries:
+        out, _ = spc.conv2d(xj, wj, stride, mode="dual",
+                            block_m=block_m, block_n=block_n,
+                            slice_k=slice_k, use_kernel=True,
+                            condense="k", interpret=True,
+                            collect_stats=True)
+    l_all = jnp.stack([jnp.asarray(_dense_lowered_np(xi, kh, kw, stride)).T
+                       for xi in x])                     # (N, P, KKC)
+    ref = np.asarray(jnp.einsum("npk,kf->npf", l_all,
+                                wj.reshape(kh * kw * c, f)))
+    np.testing.assert_allclose(np.asarray(out).reshape(ref.shape), ref,
+                               rtol=2e-4, atol=2e-4)
+    [e] = tape.summarize(entries)
+    assert e["executed_steps"] == e["sparse_steps"]
+    # the element-granular oracle: per-output-block AND nnz
+    l_dense = np.concatenate(
+        [_dense_lowered_np(xi, kh, kw, stride).T for xi in x])  # (NP, KKC)
+    kkc = kh * kw * c
+    bm_, bn_, sk_ = pln.clamp_geometry(
+        l_dense.shape[0], f, kkc, block_m, block_n, slice_k, True)
+    kp = pln.plan_kcondensed(
+        pln.element_activity_lhs(jnp.asarray(l_dense), bm_),
+        pln.element_activity_rhs(wj.reshape(kkc, f), bn_), sk_)
+    want = int(jnp.sum(-(-kp.nnz // sk_)))
+    n_blocks = int(np.prod(kp.nnz.shape))
+    assert abs(e["executed_steps"] - want) <= n_blocks, \
+        (e["executed_steps"], want, n_blocks)
+
+
+@st.composite
+def _kc_case(draw):
+    kh = draw(st.integers(1, 2))
+    kw = draw(st.integers(1, 2))
+    stride = draw(st.integers(1, 2))
+    h = draw(st.integers(kh + 1, kh + 4))
+    wd = draw(st.integers(kw + 1, kw + 4))
+    c = draw(st.integers(1, 3))
+    f = draw(st.integers(1, 6))
+    n_im = draw(st.integers(1, 2))
+    x = np.stack([_rand_sparse(draw, (h, wd, c)) for _ in range(n_im)])
+    w = _rand_sparse(draw, (kh, kw, c, f))
+    block_m = draw(st.sampled_from([8, 16]))
+    block_n = draw(st.sampled_from([8, 16]))
+    slice_k = draw(st.sampled_from([4, 8]))
+    return x, w, stride, block_m, block_n, slice_k
+
+
+@settings(max_examples=10, deadline=None)
+@given(case=_kc_case())
+def test_conv_kcondense_executed_within_bound(case):
+    _check_kcondense_step_bound(*case)

@@ -19,18 +19,14 @@ ARCHS = list_archs()
 
 
 def _batch(cfg, rng, b=2, s=16):
+    from repro.models import model_zoo as zoo
     batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
                                    jnp.int32),
              "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
                                    jnp.int32)}
-    if cfg.frontend == "audio":
-        batch["frames"] = jnp.asarray(
-            rng.normal(size=(b, cfg.encoder_len, cfg.d_model)) * 0.1,
-            jnp.bfloat16)
-    if cfg.frontend == "vision":
-        batch["image_embeds"] = jnp.asarray(
-            rng.normal(size=(b, cfg.num_image_tokens, cfg.d_model)) * 0.1,
-            jnp.bfloat16)
+    # raw "mel"/"images" for conv frontends, legacy embedding stubs
+    # ("frames"/"image_embeds") otherwise
+    batch.update(zoo.frontend_inputs(cfg, b, seed=int(rng.integers(1 << 30))))
     return batch
 
 
