@@ -402,7 +402,10 @@ def run_tune(smoke: bool = False):
     Sweeps the whisper-ReLU / nemotron-squared-ReLU down-projection call
     sites — prefill (M=seq) **and** decode (M=1) phases, two activation-
     sparsity regimes — through :func:`repro.sparse.autotune.tune_matmul`,
-    plus one grouped (stacked-expert) site through ``tune_grouped``.  The
+    plus one grouped (stacked-expert) site through ``tune_grouped`` and
+    the decode attention's score/value sites through ``tune_attn`` (the
+    hand-set ``sparse_block_t`` rides those sweeps as the baseline, so
+    the occupancy tile becomes a tuned, cache-keyed knob).  The
     hand-set config knobs are timed inside every sweep as the baseline,
     so tuned ≤ baseline holds at each grid point by construction; the
     sweep must additionally find a *strictly* faster schedule on at
@@ -491,6 +494,24 @@ def run_tune(smoke: bool = False):
          f"speedup={grow['speedup']:.2f};"
          f"backend={grow['tuned']['backend']}")
 
+    # the decode attention sites (DESIGN.md §16): first-class attn.score
+    # / attn.value keys, the hand-set sparse_block_t timed in-sweep as
+    # each one's baseline
+    attn_cfg = _decode_cfg("attn_tune", 0)
+    cap = 32 if smoke else 128
+    for arow in atn.tune_attn(attn_cfg, batch=2, capacity=cap,
+                              interpret=True, timer=timer,
+                              max_candidates=max(2, max_cands - 2)):
+        arow.update(model="attn_decode", phase="decode")
+        points.append(arow)
+        tile = (arow["tuned"]["block_m"] if arow["op"] == "attn.score"
+                else arow["tuned"]["slice_k"])
+        emit(f"tune/attn_decode/decode/{arow['op']}/s{arow['sparsity']:g}",
+             arow["tuned"]["us"],
+             f"baseline_us={arow['baseline']['us']:.1f};"
+             f"speedup={arow['speedup']:.2f};"
+             f"backend={arow['tuned']['backend']};block_t={tile}")
+
     # tuned ≤ baseline at every grid point (the baseline is a candidate
     # in its own sweep), strictly faster on ≥2
     for r in points:
@@ -514,13 +535,12 @@ def run_tune(smoke: bool = False):
     cfg, x, pw, s = last_site
     acfg = dataclasses.replace(cfg, sparse_autotune=True,
                                sparse_tune_sparsity=s)
+    st = sp.site.make("matmul", "tune.check")
     hits0 = atn.HITS
-    y_tuned, _ = sp.matmul(x, pw, name="tune.check", interpret=True,
-                           **sp.dispatch.kwargs_from_config(acfg))
+    y_tuned, _ = sp.site.matmul(x, pw, st, acfg, interpret=True)
     hits_delta = atn.HITS - hits0
-    assert hits_delta > 0, "dispatch did not consult the tuning cache"
-    y_plain, _ = sp.matmul(x, pw, name="tune.check", interpret=True,
-                           **sp.dispatch.kwargs_from_config(cfg))
+    assert hits_delta > 0, "site resolution did not consult the tuning cache"
+    y_plain, _ = sp.site.matmul(x, pw, st, cfg, interpret=True)
     err = float(jnp.abs(y_tuned.astype(jnp.float32)
                         - y_plain.astype(jnp.float32)).max())
     assert err <= 1e-4, err

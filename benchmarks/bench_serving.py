@@ -21,6 +21,13 @@ Per configuration we emit
 ``--sparse`` routes decode through the bitmap-scheduled sparse KV path
 (grouped_matmul with one E=B*KV grid spanning slots) instead of dense
 attention over the paged pool.
+
+``--tune`` sweeps the engine's own decode geometry through
+``autotune.tune_attn`` (first-class ``attn.score``/``attn.value``
+TuningCache keys, DESIGN.md §16) and replays the batched sparse decode
+tick untuned vs tuned — the tuned engine consumes the cached
+``sparse_block_t`` replacement at trace time, so the one-decode-trace
+contract is asserted on both arms and the tuned arm adds zero traces.
 """
 import argparse
 import dataclasses
@@ -105,6 +112,71 @@ def run(smoke: bool = False, sparse: bool = False) -> None:
           "added zero traces, one batched decode call per tick")
 
 
+def run_tune(smoke: bool = False) -> dict:
+    """Tuned vs untuned batched sparse decode ticks (DESIGN.md §16).
+
+    Sweeps the engine's exact decode geometry — t = page-rounded
+    capacity, E = slots × kv_heads — into the global TuningCache, then
+    drives two engines over the same workload: one on the hand-set
+    config constants, one with ``sparse_autotune`` consuming the tuned
+    ``attn.score``/``attn.value`` knobs at trace time.  Both must keep
+    ``decode_traces == 1`` with a zero-trace timed wave (the PR 7
+    contract: tuned knobs are jit-constants, never extra traces).
+    """
+    from repro.sparse import autotune as atn
+    from repro.sparse import dispatch as dsp
+
+    cfg = dataclasses.replace(smoke_config("qwen1.5-110b"),
+                              sparse_mode="dual", sparse_kv=True,
+                              sparse_block_t=8)
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    slots = 2 if smoke else 4
+    capacity = 32 if smoke else 64
+    n_req = 4 if smoke else 8
+    max_new = 4 if smoke else 12
+    lens = (3, 5, 8)
+
+    atn.reset()
+    page = cfg.sparse_block_t
+    cap_pages = -(-capacity // page) * page
+    rows = atn.tune_attn(cfg, batch=slots, capacity=cap_pages,
+                         max_candidates=2 if smoke else 4)
+    for r in rows:
+        assert r["tuned"]["us"] <= r["baseline"]["us"], r
+
+    print(f"# bench_serving [tune]: slots={slots} capacity={capacity}, "
+          f"attn sites swept at t={cap_pages} E={slots * cfg.n_kv_heads}")
+    tick_us = {}
+    hits0 = atn.HITS
+    for arm, c in (("untuned", cfg),
+                   ("tuned",
+                    dataclasses.replace(cfg, sparse_autotune=True))):
+        eng = Engine(params, c,
+                     serve=ServeConfig(slots=slots, capacity=capacity))
+        with dsp.warnings_suppressed():
+            _drive(eng, _workload(n_req, lens, cfg.vocab_size, max_new))
+            warm = eng.stats()
+            reqs = _workload(n_req, lens, cfg.vocab_size, max_new,
+                             uid0=n_req)
+            dt = _drive(eng, reqs)
+        st = eng.stats()
+        # one decode trace per engine, tuned included; timed wave adds 0
+        assert st["decode_traces"] == 1, st
+        assert st["decode_traces"] == warm["decode_traces"], (warm, st)
+        ticks = st["ticks"] - warm["ticks"]
+        tick_us[arm] = dt / max(ticks, 1) * 1e6
+        emit(f"serving.tick.tune.{arm}", tick_us[arm],
+             f"ticks={ticks};decode_traces={st['decode_traces']}")
+    assert atn.HITS > hits0, \
+        "tuned decode was not served from the attention sites"
+    print(f"# OK [tune]: tuned decode served {atn.HITS - hits0} cache "
+          "hit(s) in one decode trace; step latency "
+          f"untuned={tick_us['untuned']:.1f}us "
+          f"tuned={tick_us['tuned']:.1f}us")
+    return {"attn_sweep": rows, "tick_us": tick_us,
+            "hits": atn.HITS - hits0}
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -112,10 +184,17 @@ if __name__ == "__main__":
     ap.add_argument("--sparse", action="store_true",
                     help="also run the bitmap-scheduled sparse KV decode "
                          "path (in addition to dense)")
+    ap.add_argument("--tune", action="store_true",
+                    help="also sweep the attn.score/attn.value decode "
+                         "sites and replay the batched tick tuned vs "
+                         "untuned (DESIGN.md §16)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write machine-readable results to PATH")
     args = ap.parse_args()
     run(smoke=args.smoke)
     if args.sparse:
         run(smoke=args.smoke, sparse=True)
-    dump_json(args.json, {"bench": "bench_serving", "smoke": args.smoke})
+    doc = {"bench": "bench_serving", "smoke": args.smoke}
+    if args.tune:
+        doc["tune"] = run_tune(smoke=args.smoke)
+    dump_json(args.json, doc)

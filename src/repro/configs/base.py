@@ -82,6 +82,11 @@ class ModelConfig:
     # static activation-sparsity hint the cache keys bucket under
     # (< 0 = no hint → the 'any' bucket)
     sparse_tune_sparsity: float = -1.0
+    # OpSite resolution tier 2 (repro.sparse.site, DESIGN.md §16): on a
+    # tuning-cache miss, fall back to the analytic costmodel's best
+    # candidate instead of the config constants.  Off by default so an
+    # untuned run executes exactly the hand-set geometry.
+    sparse_costmodel: bool = False
     # norms / embeddings
     norm_kind: str = "rms"         # rms | layer
     norm_eps: float = 1e-5

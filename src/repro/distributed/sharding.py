@@ -167,33 +167,62 @@ def tree_shardings(mesh: Mesh, pspec_tree):
 # sparse-plan activity specs (DESIGN.md §11)
 # ---------------------------------------------------------------------------
 
+def plan_spec_from_site(site, mesh_axis, *, ep_mode: bool,
+                        k_shardable: bool = True) -> PartitionSpec:
+    """PartitionSpec for one cached weight-plan activity, derived from
+    its :class:`~repro.sparse.site.OpSite` descriptor's logical axes.
+
+    A weight plan's activity tensor is axis-parallel to the weight it
+    plans — ``(…, S, N)`` for a ``(…, K, N)`` weight — so the site's
+    logical axis names are enough to place the shard axis:
+
+    * expert-parallel — shard wherever the site names ``"experts"``;
+      S and N travel whole (slicing a plan along a fiber axis *is* the
+      per-shard plan, ``plan.shard_plan``);
+    * tensor-parallel — shard wherever the site names ``"mlp"`` (the
+      expert FFN axis).  When that is the *contraction* position
+      (second-to-last: the plan's S axis), the slice is legal **only**
+      when shard boundaries align with slice boundaries
+      (``plan.kplan_shardable``) — callers pass ``k_shardable`` from
+      that predicate and get the replicated spec (drop-the-cache
+      signal) otherwise.
+    """
+    axes = site.axes
+    if ep_mode:
+        return PartitionSpec(*(mesh_axis if a == "experts" else None
+                               for a in axes))
+    spec = []
+    for i, a in enumerate(axes):
+        if a == "mlp":
+            if i == len(axes) - 2 and not k_shardable:
+                return PartitionSpec()
+            spec.append(mesh_axis)
+        else:
+            spec.append(None)
+    return PartitionSpec(*spec)
+
+
+def plan_specs_from_sites(sites: Dict[str, Any], mesh_axis, *,
+                          ep_mode: bool, k_shardable: bool = True
+                          ) -> Dict[str, PartitionSpec]:
+    """:func:`plan_spec_from_site` over a ``{weight key: OpSite}`` dict —
+    the shard_map MoE in_specs for the cached plan activities
+    (DESIGN.md §11/§16), driven by the descriptors instead of a
+    hand-maintained per-call-site PartitionSpec table."""
+    return {key: plan_spec_from_site(st, mesh_axis, ep_mode=ep_mode,
+                                     k_shardable=k_shardable)
+            for key, st in sites.items()}
+
+
 def moe_plan_specs(ep_axis, *, ep_mode: bool,
                    down_k_shardable: bool) -> Dict[str, PartitionSpec]:
-    """PartitionSpecs for the cached MoE weight-plan slice activities.
-
-    The plans pytree (``sparse.weights.plan_layer_weights``) carries one
-    bool activity per expert weight — ``w_up``/``w_gate`` ``(E, S_d, f)``
-    and ``w_down`` ``(E, S_f, d)``.  They ride into the shard_map MoE
-    block alongside the weights, sliced by in_spec exactly like the
-    weight they plan:
-
-    * expert-parallel — the expert axis is sharded; S and N axes travel
-      whole (slicing a plan along a fiber axis *is* the per-shard plan,
-      ``plan.shard_plan``);
-    * tensor-parallel — ``w_up``/``w_gate`` shard their f (output) axis;
-      ``w_down`` shards its S axis **only** when shard boundaries align
-      with slice boundaries (``plan.kplan_shardable``) — callers drop
-      the cache otherwise and re-plan from the local weight shard.
-    """
-    if ep_mode:
-        spec = PartitionSpec(ep_axis, None, None)
-        return {"w_up": spec, "w_gate": spec, "w_down": spec}
-    return {
-        "w_up": PartitionSpec(None, None, ep_axis),
-        "w_gate": PartitionSpec(None, None, ep_axis),
-        "w_down": (PartitionSpec(None, ep_axis, None)
-                   if down_k_shardable else PartitionSpec()),
-    }
+    """The canonical MoE plan specs (kept for direct callers/tests) —
+    now derived from the expert FFN's :class:`OpSite` descriptors via
+    :func:`plan_specs_from_sites`."""
+    from repro.models.moe import moe_site
+    return plan_specs_from_sites(
+        {k: moe_site(k) for k in ("w_up", "w_gate", "w_down")},
+        ep_axis, ep_mode=ep_mode, k_shardable=down_k_shardable)
 
 
 # ---------------------------------------------------------------------------

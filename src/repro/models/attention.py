@@ -246,17 +246,25 @@ def attend_sparse(q: jax.Array, cache, cfg: ModelConfig, *,
             occ[:, None, :], (b, kvh, t)).reshape(ne, t)
     else:
         sched_e, occ_e = sched, occ
-    bt = pln.effective_slice_k(t, cfg.sparse_block_t)
-    sk_hd = pln.effective_slice_k(hd, cfg.sparse_slice_k)
-    # f32 accumulation pinned through the dispatch kwargs so the XLA
-    # fallback matches dense attention bit-for-bit (DESIGN.md §10);
-    # per-matmul geometry overrides the config defaults below
-    kw = sp.dispatch.kwargs_from_config(cfg, out_dtype=jnp.float32)
+    # first-class decode tuning sites (DESIGN.md §16): attn.score keys on
+    # (M=T, N=G, K=hd) — slots are block rows, so the served block_m IS
+    # the slot tile — and attn.value on (M=G, N=hd, K=T) — slots are the
+    # contraction axis, so the served slice_k IS the value tile.  Both
+    # resolve host-side *before* operand construction (the value operand
+    # metadata must be built at the served tile granularity), falling
+    # back to cfg.sparse_block_t when the cache has no measurement.  f32
+    # accumulation is pinned on both sites so the XLA fallback matches
+    # dense attention bit-for-bit (DESIGN.md §10).
+    st_s = sp.site.make("attn.score", "attn.score", out_dtype="float32")
+    st_v = sp.site.make("attn.value", "attn.value", out_dtype="float32")
+    kw_s = sp.site.resolve(st_s, cfg, m=t, n=g, k=hd, e=ne, dtype=q.dtype)
+    kw_v = sp.site.resolve(st_v, cfg, m=g, n=hd, k=t, e=ne, dtype=q.dtype)
+    bt = pln.effective_slice_k(t, kw_v["slice_k"])
+    sk_hd = pln.effective_slice_k(hd, kw_s["slice_k"])
 
     x_k = skvc.score_operand(kd_e, sched_e, sk_hd)
-    scores_t, _ = sp.grouped_matmul(
-        x_k, qw, name="attn.score",
-        **{**kw, "block_m": cfg.sparse_block_t})
+    scores_t, _ = sp.site.grouped_matmul(x_k, qw, st_s, cfg,
+                                         resolved=kw_s)
     scores = scores_t.reshape(b, kvh, t, g).transpose(0, 1, 3, 2)
     scores = scores[:, :, :, None, :] * (hd ** -0.5)   # (B,KV,G,1,T)
 
@@ -270,9 +278,8 @@ def attend_sparse(q: jax.Array, cache, cfg: ModelConfig, *,
 
     p_e = e[:, :, :, 0, :].reshape(ne, g, t)
     x_p, w_v = skvc.value_operands(occ_e, p_e, vd_e, sched_e, bt)
-    acc_e, _ = sp.grouped_matmul(
-        x_p, w_v, name="attn.value",
-        **{**kw, "slice_k": cfg.sparse_block_t})
+    acc_e, _ = sp.site.grouped_matmul(x_p, w_v, st_v, cfg,
+                                      resolved={**kw_v, "slice_k": bt})
 
     acc = acc_e.reshape(b, kvh, g, hd)[:, None]        # (B,1,KV,G,hd)
     l = l.transpose(0, 3, 1, 2)                        # (B,1,KV,G)
@@ -295,8 +302,10 @@ def _proj(x: jax.Array, w: jax.Array, cfg: ModelConfig, name: str,
     if cfg.sparse_mode == "dense":
         eq = "bsd,dhk->bshk" if n_contract == 1 else "bshk,hkd->bsd"
         return jnp.einsum(eq, x, w)
-    y, _ = sp.project(x, w, n_contract=n_contract, plan_act=plan_act,
-                      name=name, **sp.dispatch.kwargs_from_config(cfg))
+    axes = ("embed", "heads") if n_contract == 1 else ("heads", "embed")
+    y, _ = sp.site.project(
+        x, w, sp.site.make("matmul", name, axes=axes), cfg,
+        n_contract=n_contract, plan_act=plan_act)
     return y
 
 

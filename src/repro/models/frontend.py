@@ -82,41 +82,45 @@ def init_frontend(key, cfg: ModelConfig) -> Dict[str, nn.P]:
 # forward
 # ---------------------------------------------------------------------------
 
+def _conv_site(key: str) -> "sparse.OpSite":
+    """One declarative site per stem conv (DESIGN.md §16) — keyed on the
+    lowered GEMM geometry under the first-class ``op="conv"`` namespace."""
+    name = {"conv1": "conv.stem1", "conv2": "conv.stem2",
+            "patch": "conv.patch"}[key]
+    return sparse.site.make("conv", name, axes=("conv_fiber", "embed"))
+
+
 def _planned_conv(w4: jax.Array, plans: Optional[Dict], key: str,
                   dtype, cfg: ModelConfig):
     """Attach a cached ``(KH·KW·C, F)`` slice activity to a conv kernel.
 
     The conv analogue of ``sparse.weights.planned_or_array``: with a
     cached plan the weight becomes a :class:`PlannedConv` (the "@elem"
-    sibling riding along under kcondense), otherwise the bare 4-D array
-    and the dispatch re-plans on the fly.
+    sibling riding along under kcondense, the :class:`OpSite` descriptor
+    as the static ``site`` field), otherwise the bare 4-D array and the
+    dispatch re-plans on the fly.
     """
     kh, kw, c, f = w4.shape
     ebn = cfg.sparse_block_n if cfg.sparse_kcondense else 0
     w2 = sparse.weights.planned_or_array(
         w4.reshape(kh * kw * c, f), plans, key, dtype,
-        cfg.sparse_slice_k, block_n=ebn)
+        cfg.sparse_slice_k, block_n=ebn, site=_conv_site(key))
     if isinstance(w2, PlannedWeight):
-        return PlannedConv(weight=w2, kh=kh, kw=kw)
+        return PlannedConv(weight=w2, kh=kh, kw=kw, site=_conv_site(key))
     return w4.astype(dtype)
-
-
-def _conv_kwargs(cfg: ModelConfig) -> dict:
-    return sparse.dispatch.kwargs_from_config(cfg)
 
 
 def audio_frontend(fp: Dict, mel: jax.Array, cfg: ModelConfig, *,
                    plans: Optional[Dict] = None) -> jax.Array:
     """mel (B, T, n_mels) → (B, T//2, d_model), whisper's two-conv stem."""
-    kw = _conv_kwargs(cfg)
     x = mel[:, None]                                    # (B, 1, T, M)
     x = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (0, 0)))    # SAME for k=3
     w1 = _planned_conv(fp["conv1"], plans, "conv1", x.dtype, cfg)
-    y, _ = sparse.conv2d(x, w1, 1, name="conv.stem1", **kw)
+    y, _ = sparse.site.conv2d(x, w1, 1, site=_conv_site("conv1"), cfg=cfg)
     y = jax.nn.gelu(y + fp["b1"].astype(y.dtype))
     y = jnp.pad(y, ((0, 0), (0, 0), (1, 1), (0, 0)))
     w2 = _planned_conv(fp["conv2"], plans, "conv2", y.dtype, cfg)
-    y, _ = sparse.conv2d(y, w2, 2, name="conv.stem2", **kw)
+    y, _ = sparse.site.conv2d(y, w2, 2, site=_conv_site("conv2"), cfg=cfg)
     y = jax.nn.gelu(y + fp["b2"].astype(y.dtype))
     return y[:, 0]                                      # (B, T//2, D)
 
@@ -124,9 +128,9 @@ def audio_frontend(fp: Dict, mel: jax.Array, cfg: ModelConfig, *,
 def vision_frontend(fp: Dict, images: jax.Array, cfg: ModelConfig, *,
                     plans: Optional[Dict] = None) -> jax.Array:
     """images (B, H, W, C) → (B, num_image_tokens, d_model)."""
-    kw = _conv_kwargs(cfg)
     w = _planned_conv(fp["patch"], plans, "patch", images.dtype, cfg)
-    y, _ = sparse.conv2d(images, w, cfg.patch_size, name="conv.patch", **kw)
+    y, _ = sparse.site.conv2d(images, w, cfg.patch_size,
+                              site=_conv_site("patch"), cfg=cfg)
     b, g1, g2, d = y.shape
     y = y.reshape(b, g1 * g2, d) + fp["bias"].astype(y.dtype)
     if "cls" in fp:

@@ -35,6 +35,11 @@ def init_mlp(key, cfg: ModelConfig, d_ff: int = 0):
     return p
 
 
+def _site(name: str, axes) -> "sp.OpSite":
+    """This block's declarative call sites (memoized — plan-time cheap)."""
+    return sp.site.make("matmul", name, axes=axes)
+
+
 def _activate(h: jax.Array, gate, kind: str) -> jax.Array:
     if kind == "swiglu":
         return jax.nn.silu(gate) * h
@@ -61,24 +66,25 @@ def mlp_forward(params: Dict, x: jax.Array, cfg: ModelConfig,
 
     # sparse dispatch path: up-projection plans from the (mostly dense)
     # residual stream; the activation's bitmap is built once here and
-    # reused by the down-projection planner.
-    kw = sp.dispatch.kwargs_from_config(cfg)
+    # reused by the down-projection planner.  Each projection is a
+    # declarative OpSite — knobs resolve per call site through the
+    # cache → costmodel → config chain (DESIGN.md §16).
     # element-granular plans ("@elem" siblings) attach only under
     # kcondense — the slice-granular paths never read them
     ebn = cfg.sparse_block_n if cfg.sparse_kcondense else 0
-    h, _ = sp.matmul(
-        x, sp.weights.planned_or_array(params["w_up"], plans, "w_up",
-                                       x.dtype, cfg.sparse_slice_k,
-                                       block_n=ebn),
-        name="mlp.up", **kw)
+    h, _ = sp.site.matmul(
+        x, sp.weights.planned_or_array(
+            params["w_up"], plans, "w_up", x.dtype, cfg.sparse_slice_k,
+            block_n=ebn, site=_site("mlp.up", ("embed", "mlp"))),
+        _site("mlp.up", ("embed", "mlp")), cfg)
     gate = None
     if "w_gate" in params:
-        gate, _ = sp.matmul(
-            x, sp.weights.planned_or_array(params["w_gate"], plans,
-                                           "w_gate", x.dtype,
-                                           cfg.sparse_slice_k,
-                                           block_n=ebn),
-            name="mlp.gate", **kw)
+        gate, _ = sp.site.matmul(
+            x, sp.weights.planned_or_array(
+                params["w_gate"], plans, "w_gate", x.dtype,
+                cfg.sparse_slice_k, block_n=ebn,
+                site=_site("mlp.gate", ("embed", "mlp"))),
+            _site("mlp.gate", ("embed", "mlp")), cfg)
     h = sp.activate(h, gate, cfg.mlp_type,
                     slice_k=sp.plan.effective_slice_k(
                         h.shape[-1], cfg.sparse_slice_k))
@@ -86,11 +92,12 @@ def mlp_forward(params: Dict, x: jax.Array, cfg: ModelConfig,
         h = h.map_values(lambda v: nn.shard_act(v, "batch", "seq", "mlp"))
     else:
         h = nn.shard_act(h, "batch", "seq", "mlp")
-    y, _ = sp.matmul(
-        h, sp.weights.planned_or_array(params["w_down"], plans, "w_down",
-                                       x.dtype, cfg.sparse_slice_k,
-                                       block_n=ebn),
-        name="mlp.down", **kw)
+    y, _ = sp.site.matmul(
+        h, sp.weights.planned_or_array(
+            params["w_down"], plans, "w_down", x.dtype,
+            cfg.sparse_slice_k, block_n=ebn,
+            site=_site("mlp.down", ("mlp", "embed"))),
+        _site("mlp.down", ("mlp", "embed")), cfg)
     return nn.shard_act(y, "batch", "seq", "embed")
 
 

@@ -39,6 +39,21 @@ def init_moe(key, cfg: ModelConfig):
     return p
 
 
+# the expert FFN's declarative call sites (DESIGN.md §16): one OpSite
+# per projection, whose logical weight axes drive both knob resolution
+# and the shard_map plan specs (sharding.plan_specs_from_sites)
+_MOE_SITE_SPECS = {
+    "w_up": ("moe.up", ("experts", "embed", "mlp")),
+    "w_gate": ("moe.gate", ("experts", "embed", "mlp")),
+    "w_down": ("moe.down", ("experts", "mlp", "embed")),
+}
+
+
+def moe_site(key: str) -> "sp.OpSite":
+    name, axes = _MOE_SITE_SPECS[key]
+    return sp.site.make("grouped", name, axes=axes)
+
+
 def _expert_ffn(params: Dict, xe, cfg: ModelConfig, plans=None, *,
                 collect_stats: bool = False,
                 out_dtype=None) -> Tuple[jax.Array, Dict]:
@@ -78,8 +93,6 @@ def _expert_ffn(params: Dict, xe, cfg: ModelConfig, plans=None, *,
         return jnp.einsum("ecf,efd->ecd", h,
                           params["w_down"].astype(dt)), steps
 
-    kw = sp.dispatch.kwargs_from_config(cfg, out_dtype=out_dtype)
-    kw["collect_stats"] = collect_stats
     sk = sp.plan.effective_slice_k(xe.shape[-1], cfg.sparse_slice_k)
     # weight mode never reads activation metadata, so skip the encode;
     # an xe that is already a SparseActivation (shard_map EP branch)
@@ -90,19 +103,28 @@ def _expert_ffn(params: Dict, xe, cfg: ModelConfig, plans=None, *,
         x_in = sp.sparsify(xe, slice_k=sk) \
             if cfg.sparse_mode == "dual" else xe
     ebn = cfg.sparse_block_n if cfg.sparse_kcondense else 0
-    h, steps["moe.up"] = sp.grouped_matmul(
-        x_in,
-        sp.weights.planned_or_array(params["w_up"], plans, "w_up", dt,
-                                    cfg.sparse_slice_k, block_n=ebn),
-        name="moe.up", **kw)
+
+    def _grouped(key: str, x_op):
+        # one declarative site per expert projection (DESIGN.md §16);
+        # out_dtype (a runtime arg, not a site property) rides on top of
+        # the resolved knobs
+        st = moe_site(key)
+        kwr = sp.site.resolve(
+            st, cfg, m=x_op.shape[1], n=params[key].shape[-1],
+            k=x_op.shape[-1], e=x_op.shape[0], dtype=dt)
+        if out_dtype is not None:
+            kwr["out_dtype"] = out_dtype
+        w = sp.weights.planned_or_array(params[key], plans, key, dt,
+                                        cfg.sparse_slice_k, block_n=ebn,
+                                        site=st)
+        return sp.site.grouped_matmul(x_op, w, st, cfg,
+                                      collect_stats=collect_stats,
+                                      resolved=kwr)
+
+    h, steps["moe.up"] = _grouped("w_up", x_in)
     gate = None
     if "w_gate" in params:
-        gate, steps["moe.gate"] = sp.grouped_matmul(
-            x_in,
-            sp.weights.planned_or_array(params["w_gate"], plans, "w_gate",
-                                        dt, cfg.sparse_slice_k,
-                                        block_n=ebn),
-            name="moe.gate", **kw)
+        gate, steps["moe.gate"] = _grouped("w_gate", x_in)
     h = sp.activate(h, gate, cfg.mlp_type,
                     slice_k=sp.plan.effective_slice_k(
                         h.shape[-1], cfg.sparse_slice_k))
@@ -111,11 +133,7 @@ def _expert_ffn(params: Dict, xe, cfg: ModelConfig, plans=None, *,
             lambda v: nn.shard_act(v, "experts", "expert_cap", None))
     else:
         h = nn.shard_act(h, "experts", "expert_cap", None)
-    ye, steps["moe.down"] = sp.grouped_matmul(
-        h, sp.weights.planned_or_array(params["w_down"], plans, "w_down",
-                                       dt, cfg.sparse_slice_k,
-                                       block_n=ebn),
-        name="moe.down", **kw)
+    ye, steps["moe.down"] = _grouped("w_down", h)
     return ye, {k: v for k, v in steps.items() if v is not None}
 
 
@@ -304,8 +322,9 @@ def _moe_shard_map(params: Dict, x: jax.Array, cfg: ModelConfig,
     # the in_specs slice each activity exactly like the weight it plans
     down_ok = ep_mode or sp.plan.kplan_shardable(f, tp,
                                                  cfg.sparse_slice_k)
-    plan_specs = shd.moe_plan_specs(ep_axis, ep_mode=ep_mode,
-                                    down_k_shardable=down_ok)
+    plan_specs = shd.plan_specs_from_sites(
+        {k: moe_site(k) for k in ("w_up", "w_gate", "w_down")},
+        ep_axis, ep_mode=ep_mode, k_shardable=down_ok)
     has_plan = {}
     plan_args = []
     plan_in_specs = []

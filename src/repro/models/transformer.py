@@ -511,11 +511,13 @@ def forward(
     else:
         head_plans = weight_plans if (weight_plans
                                       and "lm_head" in params) else None
-        logits, _ = sparse.matmul(
+        head_site = sparse.site.make("matmul", "lm_head",
+                                     axes=("embed", "vocab"))
+        logits, _ = sparse.site.matmul(
             x, sparse.weights.planned_or_array(
-                head, head_plans, "lm_head", x.dtype, cfg.sparse_slice_k),
-            name="lm_head",
-            **sparse.dispatch.kwargs_from_config(cfg))
+                head, head_plans, "lm_head", x.dtype, cfg.sparse_slice_k,
+                site=head_site),
+            head_site, cfg)
     logits = nn.shard_act(logits, "batch", "seq", "vocab")
     return ModelOutputs(logits=logits,
                         caches=new_caches if caches is not None else None,

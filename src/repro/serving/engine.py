@@ -238,8 +238,7 @@ class Engine:
         toks = jnp.asarray(tokens, jnp.int32)
         if toks.ndim == 1:
             toks = toks[None]
-        rc = dataclasses.replace(self.rc or RunConfig(), scan_unroll=True,
-                                 remat="none")
+        rc = dataclasses.replace(self.rc or RunConfig(), scan_unroll=True)
         caches = tfm.init_caches(self.cfg, toks.shape[0], self.capacity,
                                  quantized=self.quantized)
         # conv frontends consume raw modality inputs at prefill — feed
@@ -287,8 +286,7 @@ class Engine:
         if self.cfg.sparse_mode == "dense":
             return []
         cfg = dataclasses.replace(self.cfg, sparse_autotune=True)
-        rc = dataclasses.replace(self.rc or RunConfig(), scan_unroll=True,
-                                 remat="none")
+        rc = dataclasses.replace(self.rc or RunConfig(), scan_unroll=True)
         before = set(sparse.autotune.OBSERVED)
         toks = jnp.ones((1, prompt_len), jnp.int32)
         caches = tfm.init_caches(cfg, 1, self.capacity,
@@ -344,8 +342,7 @@ class Engine:
         prompt = req.resume_prompt or req.prompt
         if self.cfg.sparse_mode == "dense":
             return float(len(prompt))
-        rc = dataclasses.replace(self.rc or RunConfig(), scan_unroll=True,
-                                 remat="none")
+        rc = dataclasses.replace(self.rc or RunConfig(), scan_unroll=True)
         toks = jnp.asarray(prompt, jnp.int32)[None]
         batch = {"tokens": toks, **zoo.frontend_inputs(self.cfg, 1)}
         with sparse.tape.collect() as entries:

@@ -21,6 +21,9 @@ and the model zoo (DESIGN.md §4):
   bitmap-scheduled KV cache for decode-path attention (DESIGN.md §10).
 * :mod:`~repro.sparse.autotune`   — the per-(arch × shape) knob/backend
   autotuner and its persistent tuning cache (DESIGN.md §13).
+* :mod:`~repro.sparse.site`       — :class:`OpSite`, the declarative
+  per-call-site descriptor + cache → costmodel → config resolver every
+  model/serving call site dispatches through (DESIGN.md §16).
 """
 from repro.sparse import tape  # noqa: F401
 from repro.sparse.activation import (  # noqa: F401
@@ -80,3 +83,6 @@ from repro.sparse.kvcache import (  # noqa: E402,F401
     SparseKVCache,
 )
 from repro.sparse import autotune  # noqa: E402,F401
+# site resolves through dispatch + autotune, so it comes last of all
+from repro.sparse import site  # noqa: E402,F401
+from repro.sparse.site import OpSite  # noqa: E402,F401

@@ -546,6 +546,175 @@ def tune_grouped(x, w, *, mode: str = "dual",
             "sweep": rows}
 
 
+# The occupancy-block granularities the attention sweep always times —
+# the tuned replacement for the hand-set ``ModelConfig.sparse_block_t``.
+_BLOCK_T_CHOICES = (8, 16, 32, 64, 128)
+
+
+def _attn_operands(cfg, *, batch: int, capacity: int, fill: int,
+                   seed: int, dtype):
+    """Synthetic batched-decode operands, shaped exactly like
+    ``attend_sparse``'s (E = batch × kv_heads stacked problems).
+
+    Slots beyond ``fill`` are genuinely zero in K/V and in the
+    probability tensor — the same contract the real decode path
+    guarantees (unwritten cache slots, softmax-masked rows), so the
+    sweep's sparsity is the sparsity the kernels will actually see.
+    """
+    import jax.numpy as jnp
+    kvh = cfg.n_kv_heads
+    hd = cfg.hd
+    g = max(cfg.n_heads // kvh, 1)
+    t = capacity
+    ne = batch * kvh
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    occ = jnp.arange(t) < fill
+    occ_e = jnp.broadcast_to(occ[None, :], (ne, t))
+    kd_e = jnp.where(occ[None, :, None],
+                     jax.random.normal(ks[0], (ne, t, hd), dtype), 0)
+    vd_e = jnp.where(occ[None, :, None],
+                     jax.random.normal(ks[1], (ne, t, hd), dtype), 0)
+    qw = jax.random.normal(ks[2], (ne, hd, g), dtype)
+    p_e = jnp.where(occ_e[:, None, :],
+                    jax.random.uniform(ks[3], (ne, g, t), dtype), 0)
+    return dict(t=t, g=g, hd=hd, ne=ne, occ_e=occ_e, sched_e=occ_e,
+                kd_e=kd_e, vd_e=vd_e, qw=qw, p_e=p_e)
+
+
+def tune_attn(cfg, *, batch: int = 1, capacity: int = 64,
+              fill: Optional[int] = None, sparsity: Optional[float] = None,
+              interpret: Optional[bool] = None,
+              timer: Optional[Callable] = None, max_candidates: int = 6,
+              cache: Optional[TuningCache] = None, seed: int = 0,
+              dtype=None) -> List[dict]:
+    """Sweep the decode attention's two grouped matmuls; cache winners.
+
+    The sites (DESIGN.md §16) are keyed on their true matmul geometry:
+
+    * ``attn.score`` — ``scores[e] = K[e] @ q[e]``: (m, n, k) =
+      (capacity, group, head_dim), E = batch × kv_heads.  The tuned
+      ``block_m`` *is* the score-side occupancy tile, so the hand-set
+      ``ModelConfig.sparse_block_t`` becomes this key's baseline and
+      rides the same sweep (tuned ≤ hand-set by construction).
+    * ``attn.value`` — ``out[e] = p[e] @ V[e]``: (m, n, k) =
+      (group, head_dim, capacity).  The tuned ``slice_k`` is the value
+      block_t; the (p, V) operands are **rebuilt per candidate** because
+      the occupancy-block metadata granularity must track it.
+
+    ``fill`` is the occupied prefix of the cache (default capacity/2);
+    the sparsity hint defaults to the empty-slot fraction.  ``dtype``
+    defaults to bfloat16 — the decode activation dtype, i.e. the dtype
+    bucket the engine's lookups actually consult.  Returns two
+    JSON-ready rows shaped like :func:`tune_grouped`'s.
+    """
+    import jax.numpy as jnp
+
+    from repro.sparse import dispatch as dsp
+    from repro.sparse import kvcache as skvc
+    interp = dsp._auto_interpret(interpret)
+    mode = cfg.sparse_mode if cfg.sparse_mode != "dense" else "dual"
+    fill = capacity // 2 if fill is None else fill
+    fill = min(max(int(fill), 1), capacity)
+    dt = jax.numpy.dtype(dtype or jax.numpy.bfloat16)
+    ops = _attn_operands(cfg, batch=batch, capacity=capacity, fill=fill,
+                         seed=seed, dtype=dt)
+    t, g, hd, ne = ops["t"], ops["g"], ops["hd"], ops["ne"]
+    if sparsity is None:
+        sparsity = 1.0 - fill / t
+    base = knobs_from_config(cfg)
+    extra = f"e{bucket_dim(ne)}"
+    dtb = _DTYPE_BYTES.get(dt.name, 4)
+    rows: List[dict] = []
+
+    def _include(m, n, k, mk):
+        """Baseline-backend variants over the block_t lattice (dedup'd,
+        baseline first) — the granularities the hand-set knob chooses
+        between must all be in the sweep."""
+        out = [mk(cfg.sparse_block_t)]
+        for bt in _BLOCK_T_CHOICES:
+            kn = mk(bt)
+            if kn not in out:
+                out.append(kn)
+        return [clamp_knobs(kn, m, n, k, interp) for kn in out]
+
+    def _row(op, m, n, k, baseline, baseline_us, best, best_us, sweep):
+        return {"key": record(op, m, n, k, dtype=dt, sparsity=sparsity,
+                              knobs=best, us=best_us,
+                              baseline_us=baseline_us, extra=extra,
+                              cache=cache),
+                "op": op, "m": m, "n": n, "k": k, "e": ne,
+                "dtype": dt.name, "sparsity": sparsity,
+                "baseline": {"backend": baseline.backend,
+                             "block_m": baseline.block_m,
+                             "block_n": baseline.block_n,
+                             "slice_k": baseline.slice_k,
+                             "us": baseline_us},
+                "tuned": {"backend": best.backend,
+                          "block_m": best.block_m,
+                          "block_n": best.block_n,
+                          "slice_k": best.slice_k, "us": best_us},
+                "speedup": baseline_us / best_us if best_us else 0.0,
+                "sweep": sweep}
+
+    # --- attn.score: block_m is the score tile over cache slots -------
+    inc_s = _include(t, g, hd,
+                     lambda bt: Knobs(base.backend, bt, base.block_n,
+                                      base.slice_k))
+    baseline_s = inc_s[0]
+    cands_s = candidates(t, g, hd, a_sparsity=sparsity, dtype_bytes=dtb,
+                         interpret=interp, n_groups=ne,
+                         max_candidates=max_candidates,
+                         include=tuple(inc_s))
+
+    def run_score(kn: Knobs) -> Callable[[], None]:
+        kw = kn.kwargs()
+        sk = pln.effective_slice_k(hd, kw["slice_k"])
+        x_k = skvc.score_operand(ops["kd_e"], ops["sched_e"], sk)
+
+        def fn():
+            y, _ = dsp.grouped_matmul(x_k, ops["qw"], mode=mode,
+                                      interpret=interp,
+                                      out_dtype=jnp.float32,
+                                      **{**kw, "slice_k": sk})
+            jax.block_until_ready(y)
+        return fn
+
+    best, best_us, baseline_us, sweep = _sweep(run_score, cands_s,
+                                               baseline_s, timer)
+    rows.append(_row("attn.score", t, g, hd, baseline_s, baseline_us,
+                     best, best_us, sweep))
+
+    # --- attn.value: slice_k is the value-side occupancy block_t ------
+    inc_v = _include(g, hd, t,
+                     lambda bt: Knobs(base.backend, base.block_m,
+                                      base.block_n, bt))
+    baseline_v = inc_v[0]
+    cands_v = candidates(g, hd, t, a_sparsity=sparsity, dtype_bytes=dtb,
+                         interpret=interp, n_groups=ne,
+                         max_candidates=max_candidates,
+                         include=tuple(inc_v))
+
+    def run_value(kn: Knobs) -> Callable[[], None]:
+        kw = kn.kwargs()
+        bt = pln.effective_slice_k(t, kw["slice_k"])
+        x_p, w_v = skvc.value_operands(ops["occ_e"], ops["p_e"],
+                                       ops["vd_e"], ops["sched_e"], bt)
+
+        def fn():
+            y, _ = dsp.grouped_matmul(x_p, w_v, mode=mode,
+                                      interpret=interp,
+                                      out_dtype=jnp.float32,
+                                      **{**kw, "slice_k": bt})
+            jax.block_until_ready(y)
+        return fn
+
+    best, best_us, baseline_us, sweep = _sweep(run_value, cands_v,
+                                               baseline_v, timer)
+    rows.append(_row("attn.value", g, hd, t, baseline_v, baseline_us,
+                     best, best_us, sweep))
+    return rows
+
+
 def default_cache_path(root: Optional[str] = None) -> str:
     """Where ``bench_models --tune`` persists the cache by default."""
     return os.path.join(root or os.getcwd(), "BENCH_autotune_cache.json")

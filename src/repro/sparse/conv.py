@@ -66,10 +66,15 @@ class PlannedConv:
              per-column slice activity (and optionally the "@elem"
              element activity) memoized at build time.
     kh/kw  : static spatial kernel extent (recovers the 4-D view).
+    site   : optional static :class:`~repro.sparse.site.OpSite` — the
+             declarative call-site descriptor this plan belongs to
+             (DESIGN.md §16).
     """
     weight: PlannedWeight
     kh: int = dataclasses.field(metadata=dict(static=True))
     kw: int = dataclasses.field(metadata=dict(static=True))
+    site: Optional[object] = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     @property
     def shape(self) -> Tuple[int, int, int, int]:

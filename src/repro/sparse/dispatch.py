@@ -41,6 +41,7 @@ the math.
 from __future__ import annotations
 
 import contextlib
+import inspect
 import warnings
 from typing import Optional, Tuple, Union
 
@@ -99,11 +100,15 @@ def warnings_suppressed():
 def kwargs_from_config(cfg, out_dtype=None) -> dict:
     """Dispatch kwargs from a ``ModelConfig``'s sparse_* fields.
 
-    ``out_dtype`` (optional) rides along to the dispatch entry points —
-    the sparse KV decode path (``attention.attend_sparse``) pins f32
-    accumulation through it so the XLA fallback matches dense attention
-    bit-for-bit; ``moe._expert_ffn`` forwards it the same way for
-    callers that need a pinned accumulation dtype.
+    The raw config-constant tier.  Model/serving call sites no longer
+    call this directly — they construct an :class:`~repro.sparse.site.
+    OpSite` and let :func:`repro.sparse.site.resolve` run the cache →
+    costmodel → config chain (DESIGN.md §16); this helper remains for
+    direct dispatch users (tests, benches) that want the hand-set
+    constants plus the in-dispatch ``autotune`` consultation.
+
+    ``out_dtype`` (optional) rides along to the dispatch entry points
+    for callers that need a pinned accumulation dtype.
 
     With ``cfg.sparse_autotune`` the returned kwargs also carry the
     per-call tuning-cache consultation (DESIGN.md §13): at each dispatch
@@ -557,6 +562,13 @@ def grouped_matmul(
     return y, steps
 
 
+# every knob project may forward to matmul — a resolved OpSite dict or a
+# hand-written call site must fail loudly on a typo'd knob name instead
+# of silently dropping it into **kwargs
+_MATMUL_KNOBS = frozenset(
+    p for p in inspect.signature(matmul).parameters if p not in ("x", "w"))
+
+
 def project(
     x: Operand,
     w: Weight,
@@ -574,7 +586,14 @@ def project(
     call sites.  ``plan_act`` is an optional cached weight-side slice
     activity over the *flattened* contraction axis (shape (S, prod(out
     dims))); without it the weight side is re-reduced on the fly.
+    ``kwargs`` must name real :func:`matmul` knobs — unknown names raise
+    rather than vanish.
     """
+    unknown = set(kwargs) - _MATMUL_KNOBS
+    if unknown:
+        raise TypeError(
+            f"sparse.project: unknown dispatch knob(s) {sorted(unknown)}; "
+            f"valid knobs: {sorted(_MATMUL_KNOBS)}")
     w_arr = _weight_array(w)
     k_dims = w_arr.shape[:n_contract]
     out_dims = w_arr.shape[n_contract:]

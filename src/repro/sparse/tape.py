@@ -18,12 +18,18 @@ The tape appends Python-side, so activate it around *eager* execution
 (e.g. ``RunConfig(scan_unroll=True)`` forwards, or un-jitted benchmark
 blocks).  Inside ``jit``/``scan`` traces the recorded values would be
 tracers — the engine's profile path therefore runs unrolled and eager.
+Entries that land abstract anyway (a ``jax.checkpoint``-remat'd body
+re-tracing during its residual replay) are tolerated: ``summarize``
+skips them instead of crashing, so profiling works under any
+``RunConfig.remat`` policy.
 """
 from __future__ import annotations
 
 import contextlib
 import contextvars
 from typing import List, Optional, Tuple
+
+import jax
 
 from repro.core import stats
 
@@ -80,17 +86,42 @@ def record(name: str, steps: stats.StepCounts,
         entries.append((name, steps, executed))
 
 
+def _concrete_int(v) -> Optional[int]:
+    """``int(v)`` when v is concrete, None for abstract tracers.
+
+    Entries recorded while a transform is *tracing* — most commonly the
+    ``jax.checkpoint`` (remat) residual-forward replay in train mode —
+    carry tracers instead of values.  They cannot be summarized, but
+    they must not crash the report for the eager entries around them.
+    """
+    try:
+        return int(v)
+    except (TypeError, jax.errors.TracerArrayConversionError,
+            jax.errors.ConcretizationTypeError):
+        return None
+
+
 def summarize(entries: List[Entry]) -> List[dict]:
-    """Concrete per-entry dicts (name, dense, sparse, executed, speedup)."""
+    """Concrete per-entry dicts (name, dense, sparse, executed, speedup).
+
+    Entries whose counts are abstract (recorded under a trace, e.g. a
+    remat'd layer body re-running inside ``jax.checkpoint``) are skipped
+    rather than raising — the summary covers every concretisable entry.
+    """
     out = []
     for name, sc, executed in entries:
-        dense, sparse = int(sc.dense), int(sc.sparse)
+        dense = _concrete_int(sc.dense)
+        sparse = _concrete_int(sc.sparse)
+        skipped = _concrete_int(sc.tiles_skipped)
+        ex = dense if executed is None else _concrete_int(executed)
+        if dense is None or sparse is None or skipped is None or ex is None:
+            continue
         out.append({
             "name": name,
             "dense_steps": dense,
             "sparse_steps": sparse,
-            "executed_steps": dense if executed is None else int(executed),
-            "tiles_skipped": int(sc.tiles_skipped),
+            "executed_steps": ex,
+            "tiles_skipped": skipped,
             "speedup": dense / max(sparse, 1),
         })
     return out

@@ -42,6 +42,11 @@ class PlannedWeight:
                    dispatch never re-reduces ``w != 0`` per call.
     elem_block_n : static block_n granularity of ``elem_act`` (0 = not
                    cached).
+    site         : optional static :class:`~repro.sparse.site.OpSite`
+                   descriptor — the declarative call-site identity this
+                   plan belongs to (op kind, tape name, logical axes).
+                   Sharding specs and knob resolution read it instead of
+                   per-call-site plumbing (DESIGN.md §16).
     """
     w: jax.Array
     slice_act: jax.Array
@@ -49,6 +54,8 @@ class PlannedWeight:
     elem_act: Optional[jax.Array] = None
     elem_block_n: int = dataclasses.field(default=0,
                                           metadata=dict(static=True))
+    site: Optional[object] = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     @property
     def shape(self):
@@ -173,7 +180,7 @@ def plan_layer_weights(params, keys=("w_up", "w_down", "w_gate"),
 
 
 def planned_or_array(w: jax.Array, plans, key: str, dtype, slice_k: int,
-                     block_n: int = 0):
+                     block_n: int = 0, site=None):
     """Attach a cached slice activity (``plans[key]``) to a weight.
 
     The shared model-side glue: casts ``w`` to the activation dtype
@@ -182,7 +189,9 @@ def planned_or_array(w: jax.Array, plans, key: str, dtype, slice_k: int,
     effective granularity the dispatch will clamp to — otherwise returns
     the bare array and the dispatch re-plans on the fly.  A
     ``"<key>@elem"`` sibling entry (see :func:`plan_layer_weights`)
-    rides along as the memoized ``condense="k"`` element activity.
+    rides along as the memoized ``condense="k"`` element activity, and
+    ``site`` (an :class:`~repro.sparse.site.OpSite`) as the plan's
+    static call-site descriptor.
     """
     w = w.astype(dtype)
     if plans is not None and key in plans:
@@ -190,5 +199,6 @@ def planned_or_array(w: jax.Array, plans, key: str, dtype, slice_k: int,
         return PlannedWeight(
             w=w, slice_act=plans[key],
             slice_k=pln.effective_slice_k(w.shape[-2], slice_k),
-            elem_act=elem, elem_block_n=block_n if elem is not None else 0)
+            elem_act=elem, elem_block_n=block_n if elem is not None else 0,
+            site=site)
     return w

@@ -267,6 +267,118 @@ def test_engine_autotune_keys_surface_decode_shapes():
 
 
 # ---------------------------------------------------------------------------
+# attention decode sites: first-class attn.* keys (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+def _attn_cfg(**over) -> ModelConfig:
+    base = dict(
+        name="tune_attn", family="dense", n_layers=1, d_model=64,
+        n_heads=8, n_kv_heads=4, d_ff=128, vocab_size=256,
+        sparse_mode="dual", sparse_kv=True, sparse_block_t=8,
+        sparse_block_m=8, sparse_block_n=16, sparse_slice_k=16)
+    base.update(over)
+    return ModelConfig(**base)
+
+
+def _fast_timer(fn):
+    return atn._default_timer(fn, warmup=0, repeat=1)
+
+
+def test_engine_autotune_keys_include_attention_sites():
+    from repro.models import transformer as tfm
+    from repro.serving.engine import Engine
+
+    cfg = _attn_cfg()
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, slots=1, capacity=16)
+    keys = eng.autotune_keys(prompt_len=8, decode_steps=1)
+    score = [k for k in keys if "|attn.score|" in k]
+    value = [k for k in keys if "|attn.value|" in k]
+    assert score and value, keys
+    # both carry the stacked-problem bucket (E = batch x kv_heads)
+    assert all("|e" in k for k in score + value), keys
+    # the M=1 decode projections stay first-class alongside them
+    assert any("|m1|" in k for k in keys), keys
+    assert all(k in atn.OBSERVED for k in keys)
+
+
+def test_tune_attn_tuned_not_worse_than_handset():
+    cfg = _attn_cfg()
+    rows = atn.tune_attn(cfg, batch=2, capacity=32, interpret=True,
+                         timer=_fast_timer, max_candidates=2)
+    assert [r["op"] for r in rows] == ["attn.score", "attn.value"]
+    score, value = rows
+    # the hand-set sparse_block_t is each sweep's baseline tile, timed
+    # in-sweep — tuned <= hand-set by construction
+    assert score["baseline"]["block_m"] == cfg.sparse_block_t
+    assert value["baseline"]["slice_k"] == cfg.sparse_block_t
+    for r in rows:
+        assert r["tuned"]["us"] <= r["baseline"]["us"], r
+        assert atn.get_cache().get(r["key"]) is not None
+
+
+def test_tuned_decode_matches_untuned():
+    from repro.models import transformer as tfm
+
+    cfg = _attn_cfg()
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+
+    def decode_logits(c):
+        toks = jnp.ones((1, 8), jnp.int32)
+        caches = tfm.init_caches(c, 1, 16)
+        out = tfm.forward(params, {"tokens": toks}, c, mode="prefill",
+                          caches=caches,
+                          positions=jnp.arange(8, dtype=jnp.int32))
+        nxt = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
+        out = tfm.forward(params, {"tokens": nxt[:, None]}, c,
+                          mode="decode", caches=out.caches,
+                          positions=jnp.asarray([8], jnp.int32))
+        return out.logits[:, 0]
+
+    y0 = decode_logits(cfg)
+    # sweep the decode geometry (t=16, E=1·kv_heads), then decode again
+    # with the cache consulted: schedules may change, math must not
+    atn.tune_attn(cfg, batch=1, capacity=16, interpret=True,
+                  timer=_fast_timer, max_candidates=2)
+    acfg = dataclasses.replace(cfg, sparse_autotune=True)
+    hits0 = atn.HITS
+    with dsp.warnings_suppressed():
+        y1 = decode_logits(acfg)
+    assert atn.HITS > hits0
+    assert float(jnp.abs(y1 - y0).max()) <= 1e-4
+
+
+def test_engine_consumes_tuned_attn_knobs_in_one_decode_trace():
+    from repro.models import transformer as tfm
+    from repro.serving.engine import Engine, Request
+
+    cfg = _attn_cfg()
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+
+    def run(c):
+        eng = Engine(params, c, slots=2, capacity=16)
+        for uid in range(2):
+            eng.submit(Request(uid=uid, prompt=[1, 2, 3 + uid],
+                               max_new_tokens=4))
+        done = {r.uid: tuple(r.output) for r in eng.run_to_completion()}
+        return eng, done
+
+    _, base = run(cfg)
+    # tune the engine's decode geometry (t = page-rounded capacity,
+    # E = slots x kv_heads), then serve it via site resolution
+    atn.tune_attn(cfg, batch=2, capacity=16, interpret=True,
+                  timer=_fast_timer, max_candidates=2)
+    hits0 = atn.HITS
+    with dsp.warnings_suppressed():
+        eng, tuned = run(dataclasses.replace(cfg, sparse_autotune=True))
+    # tuned knobs are resolved at trace time: consumed with zero extra
+    # traces (the PR 7 one-decode-trace contract), identical tokens
+    assert atn.HITS > hits0
+    assert eng.decode_traces == 1
+    assert tuned == base
+
+
+# ---------------------------------------------------------------------------
 # serving-grade XLA latency flags (dryrun against a dict env)
 # ---------------------------------------------------------------------------
 

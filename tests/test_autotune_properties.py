@@ -73,6 +73,40 @@ def test_candidates_are_valid_and_include_xla(shape, a_sp, w_sp, interpret):
         assert c.valid_for(m, n, k, interpret=interpret), (c, m, n, k)
 
 
+@given(op=st.sampled_from(("attn.score", "attn.value")),
+       capacity=st.integers(1, 512), g=st.integers(1, 16),
+       hd=st.integers(1, 256), kvh=st.integers(1, 16),
+       backend=st.sampled_from(atn.BACKENDS),
+       bm=st.integers(1, 512), bn=st.integers(1, 1024),
+       sk=st.integers(1, 2048),
+       interpret=st.booleans())
+def test_attn_knobs_served_from_cache_satisfy_kv_geometry(
+        op, capacity, g, hd, kvh, backend, bm, bn, sk, interpret):
+    """The attention decode sites (DESIGN.md §16) key on their true
+    matmul dims — (T, G, hd) for the score, (G, hd, T) for the value —
+    so whatever lands in the cache under an ``attn.*`` key, a lookup
+    either re-validates it against the planner predicates for that KV
+    geometry (incl. ``slice_k``, the value-side occupancy block_t,
+    bounded by the cache length) or degrades to the config fallback."""
+    atn.reset()
+    m, n, k = ((capacity, g, hd) if op == "attn.score"
+               else (g, hd, capacity))
+    extra = f"e{atn.bucket_dim(kvh)}"
+    key = atn.make_key(op, m, n, k, dtype=jnp.bfloat16, extra=extra)
+    atn.get_cache().entries[key] = {
+        "backend": backend, "block_m": bm, "block_n": bn, "slice_k": sk,
+        "us": 1.0, "baseline_us": None, "source": "tuned"}
+    kn = atn.lookup(op, m, n, k, dtype=jnp.bfloat16, extra=extra,
+                    interpret=interpret)
+    if kn is not None:
+        kw = kn.kwargs()
+        assert pln.knobs_valid(m, n, k, kn.block_m, kn.block_n,
+                               kn.slice_k, use_kernel=kw["use_kernel"],
+                               condense=kw["condense"],
+                               interpret=interpret, dtype_bytes=2)
+        assert kn.slice_k <= pln._round_up(k, 8)
+
+
 @given(m=st.integers(1, 512), s=st.one_of(
     st.none(), st.floats(-0.5, 1.5, allow_nan=False)))
 def test_key_buckets_are_stable(m, s):

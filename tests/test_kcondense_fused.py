@@ -225,10 +225,10 @@ def test_planned_schedule_roundtrip(rng):
 
 
 # ---------------------------------------------------------------------------
-# sparse_kv × sparse_kcondense: condense="k" flows through
-# kwargs_from_config into the bitmap-scheduled decode path (DESIGN.md
-# §10) — pin that the claimed-mask operands stay exact under element
-# condensation (see dispatch._lhs_element's contract)
+# sparse_kv × sparse_kcondense: condense="k" flows through the OpSite
+# resolution (DESIGN.md §16) into the bitmap-scheduled decode path
+# (DESIGN.md §10) — pin that the claimed-mask operands stay exact under
+# element condensation (see dispatch._lhs_element's contract)
 # ---------------------------------------------------------------------------
 
 def test_sparse_kv_decode_with_kcondense_matches_dense(rng):

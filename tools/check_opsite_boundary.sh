@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# OpSite boundary check (DESIGN.md §16).
+#
+# Outside repro/sparse/, model and serving code must route every sparse
+# matmul/conv through the declarative site layer (repro.sparse.site) —
+# never the raw dispatch surface.  This greps src/repro (excluding
+# src/repro/sparse/) for direct calls to dispatch.matmul /
+# grouped_matmul / project / conv2d or to kwargs_from_config and fails
+# on any hit.  `sp.site.matmul(...)` intentionally does not match
+# `sp\.matmul\(` — the site wrappers are the sanctioned route.
+set -u
+
+root="$(cd "$(dirname "$0")/.." && pwd)"
+pattern='(sp|sparse)\.(matmul|grouped_matmul|project|conv2d)\s*\(|(dispatch|dsp)\.(matmul|grouped_matmul|project|kwargs_from_config)\s*\('
+
+hits=$(grep -rnE "$pattern" "$root/src/repro" --include='*.py' \
+       | grep -v "^$root/src/repro/sparse/")
+
+if [ -n "$hits" ]; then
+    echo "OpSite boundary violation: direct dispatch calls outside" \
+         "src/repro/sparse/ (route them through repro.sparse.site):" >&2
+    echo "$hits" >&2
+    exit 1
+fi
+echo "OpSite boundary clean: no direct dispatch calls outside src/repro/sparse/"
