@@ -177,6 +177,129 @@ def run_tune(smoke: bool = False) -> dict:
             "hits": atn.HITS - hits0}
 
 
+def run_chaos(smoke: bool = False, seed: int = 0) -> dict:
+    """Seeded chaos smoke over the full fault matrix (DESIGN.md §17).
+
+    One workload, two arms:
+
+    * **reference** — XLA arm, no faults, ample pages;
+    * **chaos** — kernel backends raising on every call (→ per-site
+      quarantine onto the XLA arm), page allocations failing at 25%,
+      one forced preemption per ~5 ticks, an under-provisioned page
+      pool, a corrupted on-disk tuning cache, and one uid with poisoned
+      decode logits.
+
+    The acceptance contract asserted here: every non-poisoned request
+    completes with a token stream *identical* to the reference arm, the
+    poisoned request retires ``status="error"``, the engine neither
+    crashes nor livelocks, keeps its one-decode-trace contract, and the
+    §17 invariant validators come back clean at exit.
+    """
+    import os
+    import tempfile
+
+    from repro.sparse import autotune as atn
+    from repro.sparse import dispatch as dsp
+    from repro.sparse import site as ssite
+    from repro.testing import faults
+
+    cfg = dataclasses.replace(smoke_config("qwen1.5-110b"),
+                              sparse_mode="dual", sparse_kv=True,
+                              sparse_block_t=8)
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    n_req = 6 if smoke else 12
+    max_new = 6 if smoke else 10
+    lens = (3, 5, 8)
+    poisoned = {1}
+
+    base = _workload(n_req, lens, cfg.vocab_size, max_new)
+    clone = lambda: [Request(uid=r.uid, prompt=list(r.prompt),
+                             max_new_tokens=r.max_new_tokens)
+                     for r in base]
+
+    # reference arm: XLA knobs, no faults, ample pool
+    ssite.clear_quarantine()
+    atn.reset()
+    ref_eng = Engine(params, cfg, serve=ServeConfig(slots=2, capacity=32))
+    ref_reqs = clone()
+    with dsp.warnings_suppressed():
+        _drive(ref_eng, ref_reqs)
+    ref = {r.uid: tuple(r.output) for r in ref_reqs}
+
+    # a corrupted persisted tuning cache the chaos arm must tolerate
+    fd, cache_path = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    atn.record("matmul", 8, 8, 8, dtype=jax.numpy.float32, sparsity=None,
+               knobs=atn.Knobs("xla", 8, 8, 8), us=1.0)
+    atn.save_cache(cache_path)
+    atn.reset()
+    faults.corrupt_json(cache_path, "truncate")
+
+    chaos_cfg = dataclasses.replace(cfg, sparse_use_kernel=True,
+                                    sparse_autotune=True)
+    ssite.clear_quarantine()
+    print(f"# bench_serving [chaos]: seed={seed}, {n_req} requests, "
+          f"poisoned uids {sorted(poisoned)}, kernel faults always-on, "
+          "alloc faults 25%, preemption storm 20%, pages=6 of a "
+          "4-page/slot demand, corrupted tuning cache")
+    with dsp.warnings_suppressed():
+        import warnings as _w
+        with _w.catch_warnings():
+            _w.simplefilter("ignore")
+            atn.load_cache(cache_path)      # degrades to empty, no raise
+        assert atn.get_cache().entries == {}
+        t0 = time.perf_counter()
+        with faults.chaos(seed=seed, alloc_rate=0.25, storm_rate=0.2,
+                          poisoned_uids=poisoned):
+            # engine built INSIDE the fault context: the nan_logits
+            # poison mask rides the (single) decode trace from tick one
+            eng = Engine(params, chaos_cfg,
+                         serve=ServeConfig(slots=2, capacity=32,
+                                           page_size=8, pages=6))
+            reqs = clone()
+            for r in reqs:
+                eng.submit(r)
+            done = {r.uid: r for r in eng.run_to_completion()}
+            eng.validate_state()            # invariants clean at exit
+        dt = time.perf_counter() - t0
+    os.unlink(cache_path)
+
+    assert sorted(done) == sorted(ref), (sorted(done), sorted(ref))
+    mismatches = []
+    for uid, r in sorted(done.items()):
+        if uid in poisoned:
+            assert r.status == "error" and r.error == "nonfinite_logits", \
+                (uid, r.status, r.error)
+        else:
+            assert r.status == "done", (uid, r.status, r.error)
+            if tuple(r.output) != ref[uid]:
+                mismatches.append(uid)
+    assert not mismatches, f"token drift under chaos: uids {mismatches}"
+    st = eng.stats()
+    assert st["decode_traces"] == 1, st     # poison ride-along adds none
+    quarantines = ssite.quarantine_report()
+    assert quarantines, "kernel faults never hit a site"
+    assert st["errored"] == len(poisoned), st
+
+    emit("serving.chaos.wall_s", dt,
+         f"requests={n_req};errored={st['errored']};"
+         f"evictions={st['evictions']};ticks={st['ticks']};"
+         f"decode_traces={st['decode_traces']};"
+         f"quarantined_sites={len(quarantines)}")
+    print(f"# OK [chaos]: {n_req - len(poisoned)} request(s) "
+          "token-identical to the fault-free arm, "
+          f"{len(poisoned)} poisoned retired as errors, "
+          f"{len(quarantines)} site(s) quarantined to XLA, "
+          f"{st['evictions']} eviction(s), validators clean")
+    ssite.clear_quarantine()
+    atn.reset()
+    return {"seed": seed, "requests": n_req, "errored": st["errored"],
+            "evictions": st["evictions"], "ticks": st["ticks"],
+            "decode_traces": st["decode_traces"],
+            "quarantined_sites": sorted(quarantines),
+            "health": eng.health()}
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -188,13 +311,21 @@ if __name__ == "__main__":
                     help="also sweep the attn.score/attn.value decode "
                          "sites and replay the batched tick tuned vs "
                          "untuned (DESIGN.md §16)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the seeded fault-matrix chaos smoke "
+                         "(kernel/alloc/preemption/nan-logits faults + "
+                         "corrupted tuning cache) and assert graceful "
+                         "degradation (DESIGN.md §17)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write machine-readable results to PATH")
     args = ap.parse_args()
-    run(smoke=args.smoke)
-    if args.sparse:
-        run(smoke=args.smoke, sparse=True)
     doc = {"bench": "bench_serving", "smoke": args.smoke}
+    if not args.chaos:
+        run(smoke=args.smoke)
+        if args.sparse:
+            run(smoke=args.smoke, sparse=True)
     if args.tune:
         doc["tune"] = run_tune(smoke=args.smoke)
+    if args.chaos:
+        doc["chaos"] = run_chaos(smoke=args.smoke)
     dump_json(args.json, doc)

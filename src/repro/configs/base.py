@@ -223,6 +223,14 @@ class ServeConfig:
                                # estimated sparse compute first, from the
                                # StepCounts tape)
     eos_id: int = -1
+    # robustness knobs (DESIGN.md §17)
+    alloc_retries: int = 3     # bounded reclaim/evict attempts per page
+                               # allocation before the slot self-preempts
+    backoff_ticks: int = 2     # base requeue backoff after a failed
+                               # allocation (doubles per retry, capped)
+    watchdog_ticks: int = 200  # no-progress ticks before
+                               # run_to_completion raises EngineStalled
+                               # with a health snapshot; 0 disables
 
 
 @dataclasses.dataclass(frozen=True)
@@ -261,6 +269,10 @@ class RunConfig:
     # collectives + latency-hiding scheduler, applied to XLA_FLAGS
     # before backend init by the launch entry points.
     latency_flags: bool = False
+    # run the repro.sparse.validate invariant checks at dispatch
+    # boundaries and engine ticks (debug mode; same effect as
+    # REPRO_VALIDATE=1, scoped to this run)
+    validate: bool = False
     attn_chunk: int = 2048         # KV-chunked attention threshold/size
     learning_rate: float = 3e-4
     weight_decay: float = 0.1

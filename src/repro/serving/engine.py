@@ -25,10 +25,21 @@ one eager prefill).
 Encoder-decoder / cross-attention stacks (whisper, llama-vision) fall
 back to the legacy per-slot sequential control plane — their memory K/V
 are per-request and fixed-size, so there is nothing to page.
+
+Degradation contract (DESIGN.md §17): a request whose decode produces
+non-finite logits retires with ``status="error"`` without perturbing its
+batch siblings (the rows are independent through attention/MLP/LM-head);
+page-allocation failures self-preempt with bounded exponential backoff
+instead of crashing admission; ``run_to_completion`` watches for
+progress and raises :class:`EngineStalled` carrying an
+:meth:`Engine.health` snapshot plus the unfinished requests rather than
+silently dropping in-flight work.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import sys
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -41,6 +52,7 @@ from repro.models import model_zoo as zoo
 from repro.models import ssm as ssmm
 from repro.models import transformer as tfm
 from repro.serving.scheduler import PageAllocator, Scheduler, pack_prefills
+from repro.testing import faults
 
 
 @dataclasses.dataclass
@@ -50,10 +62,36 @@ class Request:
     max_new_tokens: int
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # lifecycle: queued → active → done | error (terminal; ``error``
+    # holds the reason: "nonfinite_logits" | "deadline")
+    status: str = "queued"
+    error: Optional[str] = None
+    # optional wall budget in engine ticks from submission; exceeded →
+    # terminal error retirement (queued or active alike)
+    deadline_ticks: Optional[int] = None
     # recompute-preemption resume point: prompt + output at eviction time
     # (the user-visible ``prompt`` is never mutated)
     resume_prompt: Optional[List[int]] = dataclasses.field(
         default=None, repr=False)
+    # robustness bookkeeping (DESIGN.md §17)
+    submit_tick: int = dataclasses.field(default=0, repr=False)
+    not_before: int = dataclasses.field(default=0, repr=False)
+    preempt_retries: int = dataclasses.field(default=0, repr=False)
+
+
+class EngineStalled(RuntimeError):
+    """``run_to_completion`` gave up: no progress within the watchdog
+    window, or the tick budget ran out with work still in flight.
+
+    Carries the evidence instead of dropping it: ``health`` is the
+    :meth:`Engine.health` JSON snapshot at raise time and ``unfinished``
+    the queued + active requests that did not complete.
+    """
+
+    def __init__(self, message: str, health: dict, unfinished):
+        super().__init__(message)
+        self.health = health
+        self.unfinished = list(unfinished)
 
 
 def _round_up(x: int, unit: int) -> int:
@@ -115,6 +153,16 @@ class Engine:
         self.insert_traces = 0
         self.decode_traces = 0
         self.decode_calls = 0
+        self.tokens_emitted = 0        # progress signal for the watchdog
+        self.errored = 0               # terminal error retirements
+
+        # robustness (DESIGN.md §17): invariant validators per tick when
+        # RunConfig.validate (or REPRO_VALIDATE=1) is set; the nan_logits
+        # fault is captured once here so the decode jit is poison-aware
+        # for the engine's whole life (one trace either way — the poison
+        # mask is a traced operand, never a recompile)
+        self._validate = bool(rc and getattr(rc, "validate", False))
+        self._logit_fault = faults.spec("nan_logits")
 
         # static weight-side sparse plans: built exactly once per engine
         # (weights don't change at inference), reused by every prefill
@@ -151,6 +199,14 @@ class Engine:
                 for _ in range(self.slots)]
 
     # -- jitted cores ------------------------------------------------
+    # Every core returns an extra per-row ``ok = all(isfinite(logits))``
+    # flag — the jit-compatible poison guard (DESIGN.md §17).  A request
+    # whose row goes non-finite (kernel garbage, injected NaN) retires
+    # with status="error" on the host; sibling rows are untouched (rows
+    # are independent through attention/MLP/LM-head).  The reduction is
+    # one fused pass over logits the step already materialised — far
+    # cheaper than the argmax — so the guard is always on.
+
     def _prefill_impl(self, tokens, true_len, caches):
         """Batched bucket prefill; logits gathered at each true length."""
         self.prefill_traces += 1
@@ -163,7 +219,8 @@ class Engine:
         logits = jnp.take_along_axis(out.logits, idx[:, None, None],
                                      axis=1)[:, 0]
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return out.caches, nxt
+        ok = jnp.all(jnp.isfinite(logits), axis=-1)
+        return out.caches, nxt, ok
 
     def _insert_impl(self, caches, pre, row, slot, pages, true_len):
         """Lift one prefilled row into the paged pool / per-slot state."""
@@ -184,23 +241,40 @@ class Engine:
             new[posk] = nc
         return new
 
-    def _decode_impl(self, toks, pos, caches):
-        """One batched decode step over every serving slot."""
+    def _decode_impl(self, toks, pos, caches, poison):
+        """One batched decode step over every serving slot.
+
+        ``poison`` NaNs the logits of flagged rows *inside* the trace
+        (all-False in production — the ``where`` fuses into the logits
+        pass, costing nothing).  It is a traced operand on every call,
+        not just under faults: a fault-only operand would compile a
+        *second* decode executable whose reassociated float sums can
+        flip argmax near-ties on rows the fault never touched.  Keeping
+        one executable is what makes chaos-run tokens bit-identical to
+        fault-free runs (DESIGN.md §17).
+        """
         self.decode_traces += 1
         out = tfm.forward(self.params, {"tokens": toks[:, None]},
                           self.cfg, mode="decode", caches=caches,
                           positions=pos[:, None], rc=self.rc,
                           weight_plans=self.weight_plans)
-        nxt = jnp.argmax(out.logits[:, -1], axis=-1).astype(jnp.int32)
-        return out.caches, nxt
+        logits = out.logits[:, -1]
+        if poison is not None:
+            logits = jnp.where(poison[:, None], jnp.float32(jnp.nan),
+                               logits)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        ok = jnp.all(jnp.isfinite(logits), axis=-1)
+        return out.caches, nxt, ok
 
     def _decode_one_impl(self, tok, pos, caches):
         out = tfm.forward(self.params, {"tokens": tok[None, None]},
                           self.cfg, mode="decode", caches=caches,
                           positions=pos[None], rc=self.rc,
                           weight_plans=self.weight_plans)
-        nxt = jnp.argmax(out.logits[0, 0], axis=-1).astype(jnp.int32)
-        return out.caches, nxt
+        logits = out.logits[0, 0]
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        ok = jnp.all(jnp.isfinite(logits))
+        return out.caches, nxt, ok
 
     # -- sparsity accounting ------------------------------------------
     def profile_sparsity(self, tokens, decode_steps: int = 0
@@ -366,6 +440,8 @@ class Engine:
             "insert_traces": self.insert_traces,
             "decode_traces": self.decode_traces,
             "decode_calls": self.decode_calls,
+            "tokens_emitted": self.tokens_emitted,
+            "errored": self.errored,
             "pages_free": self.allocator.available if self.paged else 0,
             "pages_total": self.n_pages if self.paged else 0,
         }
@@ -379,6 +455,81 @@ class Engine:
                 return sparse.kvcache.paged_occupancy_report(
                     c["kv"], mask_window=self.cfg.sliding_window or None)
         return None
+
+    def health(self) -> dict:
+        """JSON-serialisable control-plane snapshot (DESIGN.md §17).
+
+        This is what :class:`EngineStalled` carries and what the chaos
+        bench archives — enough to diagnose a stall post-mortem without
+        a debugger: who holds which slot, who is backed off until when,
+        which sparse sites degraded, and how the pool looks."""
+        from repro.sparse import autotune as atn
+        from repro.sparse import site as ssite
+        slots = {}
+        for i in range(self.slots):
+            req = self.active.get(i)
+            if req is None:
+                slots[str(i)] = None
+                continue
+            slots[str(i)] = {
+                "uid": req.uid, "status": req.status,
+                "pos": int(self.pos[i]),
+                "generated": len(req.output),
+                "max_new_tokens": req.max_new_tokens,
+                "admitted_tick": self.admitted_tick.get(i),
+            }
+        queue = [{"uid": r.uid, "status": r.status,
+                  "not_before": r.not_before,
+                  "preempt_retries": r.preempt_retries,
+                  "deadline_ticks": r.deadline_ticks}
+                 for r in self.scheduler.queue]
+        return {
+            "stats": self.stats(),
+            "tick": self.ticks,
+            "slots": slots,
+            "queue": queue,
+            "request_costs": {str(k): v
+                              for k, v in self.scheduler._cost.items()},
+            "quarantines": ssite.quarantine_report(),
+            "autotune": {"hits": atn.HITS, "misses": atn.MISSES,
+                         "stale": atn.STALE,
+                         "observed": len(atn.OBSERVED)},
+            "pool": self.pool_stats(),
+        }
+
+    def validate_state(self) -> None:
+        """Run the §17 serving invariants against live engine state:
+        allocator free-list integrity, page-ownership disjointness, and
+        paged-cache occupancy == popcount.  Raises
+        :class:`repro.sparse.validate.ValidationError` on violation."""
+        val = sparse.validate
+        val.check_allocator(self.allocator)
+        if not self.paged:
+            return
+        free = set(self.allocator._free)
+        held_all: List[int] = []
+        for slot, held in self.pages_held.items():
+            held_all.extend(held)
+            if free & set(held):
+                raise val.ValidationError(
+                    f"engine: slot {slot} holds pages that are also on "
+                    f"the free list: {sorted(free & set(held))}")
+            row = {int(p) for p in self.table_host[slot] if p > 0}
+            if not row <= set(held):
+                raise val.ValidationError(
+                    f"engine: slot {slot} block table references pages "
+                    f"it does not hold: {sorted(row - set(held))}")
+        if len(held_all) != len(set(held_all)):
+            raise val.ValidationError(
+                "engine: a physical page is held by two slots")
+        for c in self.caches.values():
+            if "kv" in c:
+                val.check_paged_kv(c["kv"], table=self.table_host)
+                break
+
+    def _maybe_validate(self) -> None:
+        if self._validate or sparse.validate.enabled():
+            self.validate_state()
 
     def _prompt_of(self, req: Request) -> List[int]:
         return req.resume_prompt or req.prompt
@@ -415,10 +566,62 @@ class Engine:
         # accumulates across preemptions, so original prompt + output is
         # exactly the token history a re-prefill must replay
         req.resume_prompt = req.prompt + req.output
+        req.status = "queued"
         self._retire(victim)
         self.scheduler.requeue(req)
         self.evictions += 1
         return True
+
+    def _requeue_with_backoff(self, req: Request) -> None:
+        """Self-preemption after a failed page allocation: requeue with
+        bounded exponential backoff so transient pool pressure cannot
+        livelock admission (every eligible tick retries a strictly
+        bounded amount of work, and the backoff window keeps the
+        starved request from monopolising the admission loop)."""
+        req.resume_prompt = req.prompt + req.output
+        req.status = "queued"
+        req.preempt_retries += 1
+        backoff = self.serve.backoff_ticks * (
+            2 ** min(req.preempt_retries - 1, 5))
+        req.not_before = self.ticks + backoff
+        self.scheduler.requeue(req)
+
+    def _error_retire(self, req: Request, reason: str,
+                      slot: Optional[int] = None) -> Request:
+        """Terminal error retirement (poisoned logits, blown deadline)."""
+        req.done = True
+        req.status = "error"
+        req.error = reason
+        self.errored += 1
+        if slot is not None:
+            if self.paged:
+                self._retire(slot)
+            else:
+                self.active[slot] = None
+        return req
+
+    def _append_token(self, req: Request, tok: int) -> None:
+        req.output.append(tok)
+        self.tokens_emitted += 1
+
+    def _deadline_blown(self, req: Request) -> bool:
+        return (req.deadline_ticks is not None
+                and self.ticks - req.submit_tick >= req.deadline_ticks)
+
+    def _expire_queued_deadlines(self) -> List[Request]:
+        """Retire queued requests whose tick deadline passed while they
+        waited — they must not consume a prefill."""
+        expired: List[Request] = []
+        q = self.scheduler.queue
+        if not any(r.deadline_ticks is not None for r in q):
+            return expired
+        keep = [r for r in q if not self._deadline_blown(r)]
+        if len(keep) != len(q):
+            expired = [self._error_retire(r, "deadline")
+                       for r in q if self._deadline_blown(r)]
+            q.clear()
+            q.extend(keep)
+        return expired
 
     def _reclaim_swa(self) -> int:
         """Free pages whose whole block fell behind the sliding window
@@ -448,7 +651,14 @@ class Engine:
     def _ensure_pages(self) -> None:
         """Back the next decode write of every active slot with a real
         page, reclaiming window-dead pages first and preempting (LIFO /
-        max-cost) when the pool is truly exhausted."""
+        max-cost) when the pool is truly exhausted.
+
+        Retries are bounded (``ServeConfig.alloc_retries``): when
+        reclaim + eviction still can't produce a page — e.g. an
+        injected allocator fault, or a pool smaller than one slot's
+        next write — the starved slot self-preempts with backoff
+        instead of raising, so one bad tick never takes the engine
+        down and admission cannot livelock."""
         for i in range(self.slots):
             if self.active[i] is None:
                 continue
@@ -456,14 +666,24 @@ class Engine:
             if self.table_host[i, lb] != 0:
                 continue
             got = self.allocator.alloc(1)
-            while got is None:
-                if not self._reclaim_swa() and not self._evict_one():
-                    raise RuntimeError("page pool exhausted and nothing "
-                                       "left to evict")
+            attempts = 0
+            while got is None and attempts < max(
+                    1, self.serve.alloc_retries):
+                attempts += 1
+                self._reclaim_swa()
+                if self.allocator.available == 0:
+                    self._evict_one()
                 if self.active[i] is None:
                     break              # this very request was the victim
                 got = self.allocator.alloc(1)
             if self.active[i] is None:
+                continue
+            if got is None:
+                # bounded retries exhausted: self-preempt with backoff
+                req = self.active[i]
+                self._retire(i)
+                self._requeue_with_backoff(req)
+                self.evictions += 1
                 continue
             self.table_host[i, lb] = got[0]
             self.pages_held.setdefault(i, []).append(got[0])
@@ -479,9 +699,11 @@ class Engine:
                 f"{self.capacity} (one slot must remain for decode)")
         if self.paged and self._prefill_pages(req) > self.n_pages:
             raise ValueError("prompt cannot fit the page pool")
+        req.submit_tick = self.ticks
         if req.max_new_tokens <= 0:
             # nothing to generate: retire at admission with no compute
             req.done = True
+            req.status = "done"
             self._early.append(req)
             return
         self.scheduler.submit(req)
@@ -497,7 +719,8 @@ class Engine:
         while len(admitted) < len(free_slots) and len(self.scheduler):
             req = self.scheduler.pop_next(
                 max_pages=self.allocator.available - reserved,
-                pages_of=self._prefill_pages)
+                pages_of=self._prefill_pages,
+                now=self.ticks)
             if req is None:
                 break
             admitted.append(req)
@@ -522,24 +745,39 @@ class Engine:
             pre = tfm.init_caches(self.cfg, n, lpad, sparse=False,
                                   full_history=True,
                                   quantized=self.quantized)
-            pre, nxt = self._prefill(jnp.asarray(toks),
-                                     jnp.asarray(lens), pre)
+            pre, nxt, ok = self._prefill(jnp.asarray(toks),
+                                         jnp.asarray(lens), pre)
             self.prefill_calls += 1
             nxt = np.asarray(nxt)
+            ok = np.asarray(ok)
             for r_i, req in enumerate(group):
+                if not bool(ok[r_i]):
+                    # poisoned prompt: its logits went non-finite — the
+                    # request retires terminally and never touches a
+                    # slot, so its batch siblings are unaffected
+                    finished.append(
+                        self._error_retire(req, "nonfinite_logits"))
+                    continue
                 tok = int(nxt[r_i])
-                req.output.append(tok)
+                self._append_token(req, tok)
                 if (len(req.output) >= req.max_new_tokens
                         or tok == self.eos_id):
                     # admission-retired: first token already finishes
                     # the request — it never occupies a slot or pages
                     req.done = True
+                    req.status = "done"
                     finished.append(req)
                     continue
-                slot = free_slots.pop(0)
                 nbr = self._prefill_pages(req)
                 pages = self.allocator.alloc(nbr)
-                assert pages is not None, "admission reserve violated"
+                if pages is None:
+                    # the reserve was computed before this prefill ran;
+                    # an injected allocator fault (or a concurrent
+                    # _ensure_pages grab) can still starve us here —
+                    # requeue with backoff rather than crash
+                    self._requeue_with_backoff(req)
+                    continue
+                slot = free_slots.pop(0)
                 self.table_host[slot, :] = 0
                 self.table_host[slot, :nbr] = pages
                 self.pages_held[slot] = list(pages)
@@ -550,6 +788,7 @@ class Engine:
                 self.pos[slot] = int(lens[r_i])
                 self.last_tok[slot] = tok
                 self.active[slot] = req
+                req.status = "active"
                 self.admitted_tick[slot] = self.ticks
                 self._table_dirty = True
         return finished
@@ -558,28 +797,34 @@ class Engine:
         finished: List[Request] = []
         for i in range(self.slots):
             if self.active[i] is None and len(self.scheduler):
-                req = self.scheduler.pop_next()
+                req = self.scheduler.pop_next(now=self.ticks)
                 if req is None:
                     break
                 prompt = self._prompt_of(req)
                 toks = jnp.asarray(prompt, jnp.int32)[None]
                 self.caches[i] = tfm.init_caches(
                     self.cfg, 1, self.capacity, quantized=self.quantized)
-                caches, nxt = self._prefill(
+                caches, nxt, ok = self._prefill(
                     toks, jnp.asarray([len(prompt)], jnp.int32),
                     self.caches[i])
                 self.prefill_calls += 1
                 self.caches[i] = caches
+                if not bool(np.asarray(ok)[0]):
+                    finished.append(
+                        self._error_retire(req, "nonfinite_logits"))
+                    continue
                 tok = int(nxt[0])
-                req.output.append(tok)
+                self._append_token(req, tok)
                 if (len(req.output) >= req.max_new_tokens
                         or tok == self.eos_id):
                     req.done = True
+                    req.status = "done"
                     finished.append(req)
                     continue
                 self.pos[i] = len(prompt)
                 self.last_tok[i] = tok
                 self.active[i] = req
+                req.status = "active"
         return finished
 
     def step(self) -> List[Request]:
@@ -587,34 +832,68 @@ class Engine:
         self.ticks += 1
         finished = self._early
         self._early = []
+        finished.extend(self._expire_queued_deadlines())
         finished.extend(self._admit())
         if not self.paged:
-            return finished + self._step_legacy()
+            out = finished + self._step_legacy()
+            self._maybe_validate()
+            return out
+        storm = faults.spec("preemption_storm")
+        if storm is not None and storm.fire():
+            self._evict_one()
         if all(r is None for r in self.active.values()):
+            self._maybe_validate()
             return finished
         self._ensure_pages()
         if all(r is None for r in self.active.values()):
+            self._maybe_validate()
             return finished
         if self._table_dirty:
             self._push_table()
-        self.caches, nxt = self._decode(
+        # The poison mask is ALWAYS passed (all-False when no nan_logits
+        # fault is installed): binding it only under faults would give
+        # the fault runs a different compiled executable than production
+        # decodes, and XLA is free to re-order float accumulations per
+        # program — enough to flip an argmax near-tie on rows the fault
+        # never touched.  One operand, one executable, bit-identical
+        # tokens with the harness on or off (DESIGN.md §17).
+        if self._logit_fault is not None:
+            poison = np.array(
+                [r is not None and self._logit_fault.poisons(r.uid)
+                 for r in (self.active[i] for i in range(self.slots))],
+                bool)
+        else:
+            poison = np.zeros(self.slots, bool)
+        self.caches, nxt, ok = self._decode(
             jnp.asarray(self.last_tok),
-            jnp.asarray(self.pos, jnp.int32), self.caches)
+            jnp.asarray(self.pos, jnp.int32), self.caches,
+            jnp.asarray(poison))
         self.decode_calls += 1
         nxt = np.asarray(nxt)
+        ok = np.asarray(ok)
         for i, req in self.active.items():
             if req is None:
                 continue
+            if not bool(ok[i]):
+                # poisoned decode: retire this row terminally; sibling
+                # rows in the same batch keep their (finite) tokens
+                finished.append(
+                    self._error_retire(req, "nonfinite_logits", i))
+                continue
             self.pos[i] += 1
             tok = int(nxt[i])
-            req.output.append(tok)
+            self._append_token(req, tok)
             self.last_tok[i] = tok
             if (len(req.output) >= req.max_new_tokens
                     or tok == self.eos_id
                     or self.pos[i] >= self.capacity - 1):
                 req.done = True
+                req.status = "done"
                 finished.append(req)
                 self._retire(i)
+            elif self._deadline_blown(req):
+                finished.append(self._error_retire(req, "deadline", i))
+        self._maybe_validate()
         return finished
 
     def _step_legacy(self) -> List[Request]:
@@ -622,31 +901,78 @@ class Engine:
         for i, req in self.active.items():
             if req is None:
                 continue
-            caches, nxt = self._decode_one(
+            caches, nxt, ok = self._decode_one(
                 jnp.asarray(self.last_tok[i], jnp.int32),
                 jnp.asarray(self.pos[i], jnp.int32), self.caches[i])
             self.caches[i] = caches
             self.decode_calls += 1
+            if not bool(np.asarray(ok)):
+                finished.append(
+                    self._error_retire(req, "nonfinite_logits", i))
+                continue
             self.pos[i] += 1
             tok = int(nxt)
-            req.output.append(tok)
+            self._append_token(req, tok)
             self.last_tok[i] = tok
             if (len(req.output) >= req.max_new_tokens
                     or tok == self.eos_id
                     or self.pos[i] >= self.capacity - 1):
                 req.done = True
+                req.status = "done"
                 finished.append(req)
                 self.active[i] = None
+            elif self._deadline_blown(req):
+                finished.append(self._error_retire(req, "deadline", i))
         return finished
 
+    def _idle(self) -> bool:
+        return (not len(self.scheduler) and not self._early
+                and all(v is None for v in self.active.values()))
+
+    def _unfinished(self) -> List[Request]:
+        live = [r for r in self.active.values() if r is not None]
+        live.extend(self.scheduler.queue)
+        live.extend(self._early)
+        return live
+
     def run_to_completion(self, max_ticks: int = 10_000) -> List[Request]:
+        """Drive ticks until the engine drains.
+
+        A no-progress watchdog (``ServeConfig.watchdog_ticks``, 0
+        disables) guards against livelock: if neither the finished
+        count nor ``tokens_emitted`` moves for that many consecutive
+        ticks — or ``max_ticks`` runs out with work still pending —
+        the health snapshot is dumped and :class:`EngineStalled`
+        raised, instead of silently dropping unfinished requests."""
         done: List[Request] = []
+        watchdog = self.serve.watchdog_ticks
+        stamp = (len(done), self.tokens_emitted)
+        stale = 0
         for _ in range(max_ticks):
             done.extend(self.step())
-            if not len(self.scheduler) and not self._early and all(
-                    v is None for v in self.active.values()):
-                break
+            if self._idle():
+                return done
+            now = (len(done), self.tokens_emitted)
+            stale = stale + 1 if now == stamp else 0
+            stamp = now
+            if watchdog and stale >= watchdog:
+                self._stall("no progress for "
+                            f"{watchdog} consecutive ticks")
+        if not self._idle():
+            self._stall(f"max_ticks={max_ticks} exhausted with "
+                        "unfinished requests")
         return done
+
+    def _stall(self, why: str) -> None:
+        health = self.health()
+        unfinished = self._unfinished()
+        print("[engine] STALLED: " + why, file=sys.stderr)
+        print(json.dumps(health, indent=2, default=str),
+              file=sys.stderr)
+        raise EngineStalled(
+            f"engine stalled: {why} "
+            f"({len(unfinished)} unfinished requests)",
+            health, unfinished)
 
     # legacy attribute: tests/tools that poked ``engine.queue`` keep
     # working against the scheduler's deque

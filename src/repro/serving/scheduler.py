@@ -44,6 +44,7 @@ class PageAllocator:
     def __init__(self, n_pages: int):
         self.n_pages = n_pages
         self._free: Deque[int] = deque(range(1, n_pages + 1))
+        self._free_set = set(self._free)
 
     @property
     def available(self) -> int:
@@ -51,14 +52,36 @@ class PageAllocator:
 
     def alloc(self, n: int) -> Optional[List[int]]:
         """n pages, or None (nothing consumed) if the pool can't cover it."""
+        if n <= 0:
+            raise ValueError(f"PageAllocator.alloc({n}): page count must "
+                             "be positive")
         if n > len(self._free):
             return None
-        return [self._free.popleft() for _ in range(n)]
+        out = [self._free.popleft() for _ in range(n)]
+        self._free_set.difference_update(out)
+        return out
 
     def free(self, pages: Sequence[int]) -> None:
+        """Return pages to the pool; raises on double-frees and ids
+        outside 1..n_pages (the trash page 0 is never allocatable)."""
         for p in pages:
-            assert 1 <= p <= self.n_pages, p
+            if not 1 <= p <= self.n_pages:
+                raise ValueError(f"PageAllocator.free({p}): page id "
+                                 f"outside 1..{self.n_pages}")
+            if p in self._free_set:
+                raise ValueError(f"PageAllocator.free({p}): double free "
+                                 "(page already on the free list)")
+            self._free_set.add(p)
             self._free.append(p)
+
+    def check(self) -> dict:
+        """Free-list uniqueness + range (repro.sparse.validate hook)."""
+        assert len(self._free) == len(self._free_set) \
+            and set(self._free) == self._free_set, \
+            "free list and free set disagree (duplicate or lost pages)"
+        assert all(1 <= p <= self.n_pages for p in self._free), \
+            f"free page id outside 1..{self.n_pages}"
+        return {"free": len(self._free), "total": self.n_pages}
 
 
 class Scheduler:
@@ -95,30 +118,41 @@ class Scheduler:
         return self._cost[req.uid]
 
     def pop_next(self, max_pages: Optional[int] = None,
-                 pages_of: Optional[Callable] = None):
+                 pages_of: Optional[Callable] = None,
+                 now: Optional[int] = None):
         """Next request to admit, or None.
 
         ``max_pages``/``pages_of`` optionally constrain admission to
         requests whose prefill fits the free pool right now; a request
         that doesn't fit stays queued (fcfs blocks on it — head-of-line
-        order is the policy's contract; cost skips over it).
+        order is the policy's contract; cost skips over it).  ``now``
+        (the engine tick) skips requests whose ``not_before`` backoff
+        stamp is still in the future — a request backing off after a
+        failed page allocation never blocks the fcfs head.
         """
         if not self.queue:
             return None
+
+        def eligible(r) -> bool:
+            return now is None or getattr(r, "not_before", 0) <= now
 
         def fits(r) -> bool:
             return (max_pages is None or pages_of is None
                     or pages_of(r) <= max_pages)
 
+        cand = [r for r in self.queue if eligible(r)]
+        if not cand:
+            return None
         if self.policy == "cost":
-            order = sorted(self.queue, key=lambda r: (self.cost(r), r.uid))
+            order = sorted(cand, key=lambda r: (self.cost(r), r.uid))
             for req in order:
                 if fits(req):
                     self.queue.remove(req)
                     return req
             return None
-        if fits(self.queue[0]):
-            return self.queue.popleft()
+        if fits(cand[0]):
+            self.queue.remove(cand[0])
+            return cand[0]
         return None
 
     def pick_victim(self, active: Sequence[Tuple[int, object, int]]

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models import transformer as tfm
+from repro.sparse import validate
 
 
 class DecodeState(NamedTuple):
@@ -66,7 +67,13 @@ def generate(params, batch, cfg: ModelConfig, *, max_new_tokens: int,
                              quantized=bool(rc and rc.kv_quant))
     prefill = make_prefill_step(cfg, rc)
     decode = make_decode_step(cfg, rc)
-    state, _ = prefill(params, batch, caches)
+    state, prefill_logits = prefill(params, batch, caches)
+    if validate.enabled():
+        # debug-mode numerics tripwire (DESIGN.md §17): eager prefill
+        # logits are concrete here; the decode scan below is traced, so
+        # check_finite silently skips it
+        validate.check_finite(prefill_logits, "serve_loop.generate: "
+                                              "prefill logits")
     first = state.last_token[:, 0]
     if max_new_tokens == 1:
         return first[:, None]

@@ -24,6 +24,9 @@ and the model zoo (DESIGN.md §4):
 * :mod:`~repro.sparse.site`       — :class:`OpSite`, the declarative
   per-call-site descriptor + cache → costmodel → config resolver every
   model/serving call site dispatches through (DESIGN.md §16).
+* :mod:`~repro.sparse.validate`   — cheap invariant validators for all
+  of the above, opt-in at dispatch boundaries via ``REPRO_VALIDATE=1``
+  (DESIGN.md §17).
 """
 from repro.sparse import tape  # noqa: F401
 from repro.sparse.activation import (  # noqa: F401
@@ -67,6 +70,8 @@ from repro.sparse.weights import (  # noqa: F401
     as_planned,
     plan_weight,
 )
+from repro.sparse import validate  # noqa: F401
+from repro.sparse.validate import ValidationError  # noqa: F401
 from repro.sparse import conv  # noqa: F401
 from repro.sparse.conv import (  # noqa: F401
     PlannedConv,

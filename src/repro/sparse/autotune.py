@@ -189,25 +189,54 @@ class TuningCache:
             "source": "tuned"}
 
     def save(self, path: Optional[str] = None) -> str:
+        """Atomic persist: write a sibling temp file, then rename — a
+        killed benchmark can truncate the temp, never the cache."""
         path = path or self.path
         if not path:
             raise ValueError("TuningCache.save: no path")
-        with open(path, "w") as f:
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
             json.dump({"version": CACHE_VERSION, "entries": self.entries},
                       f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
         self.path = path
         return path
 
     def load(self, path: str, merge: bool = True) -> "TuningCache":
-        with open(path) as f:
-            doc = json.load(f)
+        """Merge a persisted cache.
+
+        Truncated/corrupt JSON degrades to an empty document with a
+        warn-once (a damaged cache must never take the process down —
+        every lookup just falls back to config constants).  A *valid*
+        document with a foreign schema version still raises: that is a
+        deliberate mismatch, not damage.
+        """
+        from repro.sparse.dispatch import warn_once
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            if not isinstance(doc, dict):
+                raise json.JSONDecodeError(
+                    "top-level document is not an object", "", 0)
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            warn_once(f"tunecache-corrupt:{path}",
+                      f"tuning cache {path} is truncated or corrupt "
+                      f"({e}); continuing with an empty cache "
+                      "(dispatch falls back to config constants)")
+            doc = {"version": CACHE_VERSION, "entries": {}}
         if doc.get("version") != CACHE_VERSION:
             raise ValueError(
                 f"tuning cache {path}: version {doc.get('version')!r} "
                 f"!= {CACHE_VERSION}")
+        entries = doc.get("entries", {})
+        if not isinstance(entries, dict):
+            warn_once(f"tunecache-corrupt:{path}",
+                      f"tuning cache {path}: 'entries' is not an "
+                      "object; ignoring it")
+            entries = {}
         if not merge:
             self.entries.clear()
-        self.entries.update(doc.get("entries", {}))
+        self.entries.update(entries)
         self.path = path
         return self
 

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 from repro.core import stats
 from repro.sparse import plan as pln
 from repro.sparse import tape
+from repro.sparse import validate
 from repro.sparse.activation import SparseActivation
 from repro.sparse.weights import PlannedWeight
 
@@ -279,6 +280,8 @@ def matmul(
     if condense not in CONDENSE:
         raise ValueError(
             f"condense must be one of {CONDENSE}, got {condense!r}")
+    if validate.enabled():              # opt-in debug mode (DESIGN.md §17)
+        validate.check_operands(x, w)
     w_arr = _weight_array(w)
     if w_arr.ndim != 2:
         raise ValueError(f"matmul expects 2-D weights, got {w_arr.shape}; "
@@ -465,6 +468,8 @@ def grouped_matmul(
     if condense not in CONDENSE:
         raise ValueError(
             f"condense must be one of {CONDENSE}, got {condense!r}")
+    if validate.enabled():              # opt-in debug mode (DESIGN.md §17)
+        validate.check_operands(x, w)
     w_arr = _weight_array(w)
     xv = _values(x)
     if xv.ndim != 3 or w_arr.ndim != 3:

@@ -111,6 +111,68 @@ def make(op: str, name: str, *, axes: Tuple[str, ...] = (),
                   sparsity=float(sparsity))
 
 
+# ---------------------------------------------------------------------------
+# per-site quarantine (DESIGN.md §17): a kernel/kfused backend that
+# raised at a site is degraded to the XLA arm for the rest of the
+# session.  Numerics are untouched — the XLA arm computes the same
+# contraction — so a Pallas lowering failure costs a warn-once and the
+# kernel speedup at that one site, never the request or the process.
+
+_QUARANTINED: dict = {}          # (op, name) -> first failure reason
+
+
+def quarantined(st: OpSite) -> bool:
+    return (st.op, st.name) in _QUARANTINED
+
+
+def quarantine(st: OpSite, reason: str) -> None:
+    _QUARANTINED.setdefault((st.op, st.name), reason)
+
+
+def clear_quarantine() -> None:
+    """Lift all quarantines (tests / new process epoch)."""
+    _QUARANTINED.clear()
+
+
+def quarantine_report() -> dict:
+    """``{"op:name": reason}`` — part of ``Engine.health()``."""
+    return {f"{op}:{name}": r
+            for (op, name), r in sorted(_QUARANTINED.items())}
+
+
+def _degrade(st: OpSite, kw: dict) -> dict:
+    """Force the XLA arm of a quarantined site's resolved knobs."""
+    if kw.get("use_kernel") and quarantined(st):
+        kw = dict(kw, use_kernel=False, condense=None)
+    return kw
+
+
+def _guarded(st: OpSite, kw: dict, call):
+    """Run ``call(kw)``; a kernel-arm failure retries on the XLA arm
+    inside the same trace and quarantines the site.
+
+    Kernel backends are invoked at trace time (dispatch imports them
+    lazily inside its function bodies), so a lowering/backend exception
+    surfaces here whether the caller is eager or jitted.  If the XLA
+    retry *also* fails the error was never the kernel's — it
+    propagates untouched.
+    """
+    if not kw.get("use_kernel"):
+        return call(kw)
+    try:
+        return call(kw)
+    except Exception as e:  # noqa: BLE001 — backend failures are varied
+        fallback = dict(kw, use_kernel=False, condense=None)
+        out = call(fallback)          # raises if the fault wasn't the kernel's
+        quarantine(st, f"{type(e).__name__}: {e}")
+        dsp.warn_once(
+            f"quarantine:{st.op}:{st.name}",
+            f"sparse.site: kernel backend failed at {st.op}:{st.name} "
+            f"({type(e).__name__}: {e}); site degraded to the XLA arm "
+            "for the rest of the session (numerics preserved)")
+        return out
+
+
 def _base_kwargs(st: OpSite, cfg) -> dict:
     """Tier 3: the hand-set config constants for this site."""
     kw = dict(mode=cfg.sparse_mode, block_m=cfg.sparse_block_m,
@@ -153,7 +215,7 @@ def resolve(st: OpSite, cfg, *, m: int, n: int, k: int, e: int = 1,
     """
     kw = _base_kwargs(st, cfg)
     if cfg.sparse_mode == "dense":
-        return kw
+        return _degrade(st, kw)
     interp = dsp._auto_interpret(interpret)
     dt = jnp.dtype(st.dtype) if st.dtype else jnp.dtype(dtype)
     hint = st.sparsity if st.sparsity >= 0 else float(
@@ -168,14 +230,14 @@ def resolve(st: OpSite, cfg, *, m: int, n: int, k: int, e: int = 1,
                                    extra=extra)
         if kn is not None:
             kw.update(kn.kwargs())
-            return kw
+            return _degrade(st, kw)
     if getattr(cfg, "sparse_costmodel", False):
         kn = _costmodel_knobs(st.op, int(m), int(n), int(k), int(e),
                               dt.name, -1.0 if hint is None else hint,
                               interp)
         if kn is not None:
             kw.update(kn.kwargs())
-    return kw
+    return _degrade(st, kw)
 
 
 def _operand_values(x) -> jax.Array:
@@ -213,8 +275,9 @@ def matmul(x, w, site: Optional[OpSite], cfg, *,
     kw = resolved if resolved is not None else resolve(
         st, cfg, m=m, n=_weight_array(w).shape[-1], k=xv.shape[-1],
         dtype=xv.dtype, interpret=interpret)
-    return dsp.matmul(x, w, name=st.name, op=st.op, interpret=interpret,
-                      collect_stats=collect_stats, **kw)
+    return _guarded(st, _degrade(st, kw), lambda kw2: dsp.matmul(
+        x, w, name=st.name, op=st.op, interpret=interpret,
+        collect_stats=collect_stats, **kw2))
 
 
 def grouped_matmul(x, w, site: Optional[OpSite], cfg, *,
@@ -228,8 +291,9 @@ def grouped_matmul(x, w, site: Optional[OpSite], cfg, *,
     kw = resolved if resolved is not None else resolve(
         st, cfg, m=c, n=_weight_array(w).shape[-1], k=k, e=e,
         dtype=xv.dtype, interpret=interpret)
-    return dsp.grouped_matmul(x, w, name=st.name, interpret=interpret,
-                              collect_stats=collect_stats, **kw)
+    return _guarded(st, _degrade(st, kw), lambda kw2: dsp.grouped_matmul(
+        x, w, name=st.name, interpret=interpret,
+        collect_stats=collect_stats, **kw2))
 
 
 def project(x, w, site: Optional[OpSite], cfg, *, n_contract: int = 1,
@@ -253,9 +317,10 @@ def project(x, w, site: Optional[OpSite], cfg, *, n_contract: int = 1,
         m *= d
     kw = resolve(st, cfg, m=m, n=n, k=kflat, dtype=xv.dtype,
                  interpret=interpret)
-    return dsp.project(x, w, n_contract=n_contract, plan_act=plan_act,
-                       name=st.name, op=st.op, interpret=interpret,
-                       collect_stats=collect_stats, **kw)
+    return _guarded(st, kw, lambda kw2: dsp.project(
+        x, w, n_contract=n_contract, plan_act=plan_act, name=st.name,
+        op=st.op, interpret=interpret, collect_stats=collect_stats,
+        **kw2))
 
 
 def conv2d(x, w, stride: int = 1, *, site: Optional[OpSite] = None,
@@ -275,5 +340,6 @@ def conv2d(x, w, stride: int = 1, *, site: Optional[OpSite] = None,
     m = nb * i2c.out_size(h, kh, stride) * i2c.out_size(wid, kw_sp, stride)
     kw = resolve(st, cfg, m=m, n=f, k=kh * kw_sp * c, dtype=x.dtype,
                  interpret=interpret)
-    return scv.conv2d(x, w, stride, name=st.name, interpret=interpret,
-                      collect_stats=collect_stats, **kw)
+    return _guarded(st, kw, lambda kw2: scv.conv2d(
+        x, w, stride, name=st.name, interpret=interpret,
+        collect_stats=collect_stats, **kw2))

@@ -1,0 +1,384 @@
+"""Invariant validators for the sparse data structures (DESIGN.md §17).
+
+Cheap, composable checks over the structures the dispatch layer and the
+serving engine trust implicitly:
+
+* :func:`check_sparse_activation` — ``SparseActivation`` metadata is
+  self-consistent (slice activity is exactly the bitmap reduced at
+  ``slice_k``); ``strict=True`` additionally requires the bitmap to
+  cover every non-zero value (valid for relu-family activations — KV
+  score operands legitimately carry ``bitmap ⊂ nonzeros``, see
+  ``kvcache.score_operand``).
+* :func:`check_planned_weight` — a ``PlannedWeight``'s cached slice /
+  element activity *covers* the value-derived activity (declaring a
+  dead slice active only schedules wasted work; the reverse would skip
+  real contributions).
+* :func:`check_schedule` — front-pack / stable-partition schedules
+  never reference inactive positions in their counted prefix, counts
+  match the activity mask, and the packed prefix is strictly ascending.
+* :func:`check_paged_kv` / :func:`check_kv` — cache occupancy ``blk``
+  is exactly the popcount of the occupancy bitmap per time-block, and
+  per-slot occupancy equals ``min(pos, window)``.
+* :func:`check_tuning_cache` — every cached entry still satisfies
+  ``plan.knobs_valid`` at its bucket geometry.
+
+All validators raise :class:`ValidationError` and silently skip traced
+(abstract) operands — value-dependent checks are only meaningful on
+concrete arrays, so the opt-in dispatch-boundary mode costs nothing
+inside jit.  Enable globally with ``REPRO_VALIDATE=1`` (or
+:func:`enable` / ``RunConfig.validate``).
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core import bitmap as bm
+from repro.sparse import plan as pln
+from repro.sparse.activation import SparseActivation
+from repro.sparse.weights import PlannedWeight
+
+
+class ValidationError(AssertionError):
+    """A sparse-structure invariant does not hold."""
+
+
+# ---------------------------------------------------------------------------
+# enablement: env-driven by default, programmatically forceable
+
+_FORCED: Optional[bool] = None
+
+
+def enabled() -> bool:
+    """True when dispatch-boundary validation should run."""
+    if _FORCED is not None:
+        return _FORCED
+    return os.environ.get("REPRO_VALIDATE", "") not in ("", "0")
+
+
+def enable(on: bool = True) -> None:
+    """Force validation on/off regardless of ``REPRO_VALIDATE``."""
+    global _FORCED
+    _FORCED = bool(on)
+
+
+def reset() -> None:
+    """Return to env-driven enablement."""
+    global _FORCED
+    _FORCED = None
+
+
+@contextlib.contextmanager
+def enabled_within(on: bool = True) -> Iterator[None]:
+    """Scope validation on (or off) for a ``with`` block."""
+    global _FORCED
+    prev = _FORCED
+    _FORCED = bool(on)
+    try:
+        yield
+    finally:
+        _FORCED = prev
+
+
+def is_concrete(*arrays) -> bool:
+    """False if any argument is a traced (abstract) jax value."""
+    return not any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+def _fail(what: str, msg: str):
+    raise ValidationError(f"{what}: {msg}")
+
+
+# ---------------------------------------------------------------------------
+# SparseActivation / PlannedWeight
+
+
+def check_sparse_activation(sa: SparseActivation, *, strict: bool = False,
+                            what: str = "SparseActivation") -> None:
+    """Bitmap ⇔ slice-activity (and optionally values) consistency.
+
+    Non-strict (the dispatch-boundary default) checks only *metadata*
+    self-consistency: shapes line up and ``slice_act`` is exactly the
+    element bitmap reduced at ``slice_k`` granularity.  ``strict=True``
+    additionally requires every non-zero value to be covered by the
+    bitmap — true for relu-family activations, deliberately *not* true
+    for KV score operands (the occupancy ∧ schedule mask there is a
+    subset of the raw non-zeros; masked-out scores are about to be
+    -inf'd anyway).
+    """
+    k = sa.values.shape[-1]
+    words = -(-k // 32)
+    if sa.bitmap.shape != (*sa.values.shape[:-1], words):
+        _fail(what, f"bitmap shape {sa.bitmap.shape} != "
+                    f"{(*sa.values.shape[:-1], words)} for K={k}")
+    s = -(-k // sa.slice_k)
+    if sa.slice_act.shape != (*sa.values.shape[:-1], s):
+        _fail(what, f"slice_act shape {sa.slice_act.shape} != "
+                    f"{(*sa.values.shape[:-1], s)} for K={k} "
+                    f"slice_k={sa.slice_k}")
+    if not is_concrete(sa.values, sa.bitmap, sa.slice_act):
+        return
+    mask = np.asarray(sa.element_mask())
+    want = np.asarray(pln.slice_activity_lhs(mask, sa.slice_k))
+    got = np.asarray(sa.slice_act)
+    if not np.array_equal(got, want):
+        bad = int(np.sum(got != want))
+        _fail(what, f"slice_act disagrees with the bitmap at {bad} "
+                    f"slice position(s) (slice_k={sa.slice_k})")
+    if strict:
+        vals = np.asarray(sa.values)
+        stray = np.logical_and(vals != 0, ~mask)
+        if stray.any():
+            _fail(what, f"{int(stray.sum())} non-zero value(s) fall "
+                        "outside the bitmap (strict mode)")
+
+
+def check_planned_weight(w: PlannedWeight, *, values: bool = False,
+                         what: str = "PlannedWeight") -> None:
+    """PlannedWeight metadata shape consistency (+ optional value check).
+
+    Shapes are always checked: ``slice_act`` is ``(S, N)`` (or
+    ``(E, S, N)``) at ``S = ceil(K / slice_k)``.  ``values=True``
+    additionally requires the cached activity to *cover* the
+    value-derived activity — valid for :func:`plan_weight`-built plans
+    (there it is an equality), deliberately opt-in because the KV
+    decode's occupancy-derived value operand reads a recycled page pool
+    whose unwritten blocks may hold stale non-zeros (correctness there
+    comes from the probability operand's zeros, not V's).
+    """
+    arr = w.w
+    if arr.ndim not in (2, 3):
+        _fail(what, f"weights must be 2-D or 3-D, got {arr.shape}")
+    s = -(-arr.shape[-2] // w.slice_k)
+    want = (*arr.shape[:-2], s, arr.shape[-1])
+    if tuple(w.slice_act.shape) != want:
+        _fail(what, f"slice_act shape {tuple(w.slice_act.shape)} != "
+                    f"{want} for K={arr.shape[-2]} slice_k={w.slice_k}")
+    if w.elem_act is not None and w.elem_block_n:
+        nt = -(-arr.shape[-1] // w.elem_block_n)
+        ewant = (*arr.shape[:-2], arr.shape[-2], nt)
+        if tuple(w.elem_act.shape) != ewant:
+            _fail(what, f"elem_act shape {tuple(w.elem_act.shape)} != "
+                        f"{ewant} at block_n={w.elem_block_n}")
+    if not values or not is_concrete(arr, w.slice_act):
+        return
+    if arr.ndim == 2:
+        derived = pln.slice_activity_rhs(arr, w.slice_k)
+    else:
+        derived = jax.vmap(
+            lambda wi: pln.slice_activity_rhs(wi, w.slice_k))(arr)
+    uncovered = np.logical_and(np.asarray(derived),
+                               ~np.asarray(w.slice_act).astype(bool))
+    if uncovered.any():
+        _fail(what, f"{int(uncovered.sum())} k-slice(s) with non-zero "
+                    "weights are marked inactive in slice_act")
+    if w.elem_act is not None and w.elem_block_n \
+            and is_concrete(w.elem_act):
+        if arr.ndim == 2:
+            ed = pln.element_activity_rhs(arr, w.elem_block_n)
+        else:
+            ed = jax.vmap(lambda wi: pln.element_activity_rhs(
+                wi, w.elem_block_n))(arr)
+        euncov = np.logical_and(np.asarray(ed),
+                                ~np.asarray(w.elem_act).astype(bool))
+        if euncov.any():
+            _fail(what, f"{int(euncov.sum())} element(s) with non-zero "
+                        "weights are marked inactive in elem_act")
+
+
+# ---------------------------------------------------------------------------
+# schedules
+
+
+def check_schedule(ks, counts, act, *, tail: str = "repeat_last",
+                   what: str = "schedule") -> None:
+    """Front-pack / stable-partition schedule invariants.
+
+    For every fiber: ``counts`` equals the number of active positions,
+    the first ``counts`` scheduled indices are strictly ascending and
+    all reference *active* positions (never inactive/unwritten blocks),
+    and — for ``tail="repeat_last"`` (``plan.front_pack``) — the padded
+    tail repeats the last active index (0 when the fiber is empty).
+    ``tail="partition"`` (``plan.stable_partition``) instead requires
+    the full schedule to be a permutation of ``range(S)``.
+    """
+    if not is_concrete(ks, counts, act):
+        return
+    ks = np.asarray(ks)
+    counts = np.asarray(counts)
+    act = np.asarray(act).astype(bool)
+    s = act.shape[-1]
+    if ks.shape[-1] != s:
+        _fail(what, f"schedule width {ks.shape[-1]} != activity {s}")
+    fks = ks.reshape(-1, s)
+    fc = counts.reshape(-1)
+    fact = act.reshape(-1, s)
+    if fks.shape[0] != fc.shape[0] or fc.shape[0] != fact.shape[0]:
+        _fail(what, f"fiber counts disagree: ks {fks.shape}, "
+                    f"counts {fc.shape}, act {fact.shape}")
+    if not np.array_equal(fc, fact.sum(-1)):
+        _fail(what, "counts != number of active positions")
+    if fks.size and (fks.min() < 0 or fks.max() >= s):
+        _fail(what, f"scheduled index out of range 0..{s - 1}")
+    within = np.arange(s)[None, :] < fc[:, None]
+    hit = np.take_along_axis(fact, fks, axis=-1)
+    if np.logical_and(within, ~hit).any():
+        _fail(what, "counted prefix schedules an inactive position")
+    asc = np.diff(fks, axis=-1) > 0
+    if np.logical_and(within[:, 1:], ~asc).any():
+        _fail(what, "counted prefix is not strictly ascending")
+    if tail == "repeat_last":
+        rows = np.arange(fks.shape[0])
+        last = fks[rows, np.maximum(fc - 1, 0)]
+        want_tail = np.where(fc > 0, last, 0)[:, None]
+        bad = np.logical_and(~within, fks != want_tail)
+        if bad.any():
+            _fail(what, "padded tail does not repeat the last active "
+                        "index")
+    elif tail == "partition":
+        perm = np.sort(fks, axis=-1)
+        if not np.array_equal(perm, np.broadcast_to(np.arange(s),
+                                                    fks.shape)):
+            _fail(what, "schedule is not a permutation of range(S)")
+    else:
+        raise ValueError(f"unknown tail mode {tail!r}")
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+
+
+def _popcount_check(occ_words, blk, capacity: int, block_t: int,
+                    what: str) -> np.ndarray:
+    """blk == per-block popcount of the occupancy bitmap; returns the
+    unpacked (…, capacity) bool mask for further checks."""
+    mask = np.asarray(bm.unpack_bits(occ_words, axis=-1))[..., :capacity]
+    want = mask.reshape(*mask.shape[:-1], capacity // block_t,
+                        block_t).sum(-1)
+    got = np.asarray(blk)
+    if not np.array_equal(got, want):
+        bad = int(np.sum(got != want))
+        _fail(what, f"blk != popcount(occ) at {bad} block(s)")
+    if got.size and (got.min() < 0 or got.max() > block_t):
+        _fail(what, f"blk outside 0..{block_t}")
+    return mask
+
+
+def check_kv(cache, *, what: str = "SparseKVCache") -> None:
+    """Contiguous sparse KV cache: occupancy == popcount per block."""
+    if not is_concrete(cache.occ, cache.blk):
+        return
+    _popcount_check(cache.occ, cache.blk, cache.capacity, cache.block_t,
+                    what)
+
+
+def check_paged_kv(cache, *, table=None,
+                   what: str = "PagedSparseKVCache") -> None:
+    """Paged cache invariants.
+
+    * ``blk`` is exactly the per-page popcount of the occupancy bitmap.
+    * Per-slot occupancy equals ``min(pos, window)`` (the ring never
+      loses or invents written slots).
+    * Block-table entries are in range, and — when the authoritative
+      host ``table`` is supplied — every real (non-trash) page is
+      mapped by at most one slot.  The device-side table is only
+      checked for range (it may lag the host copy by one push).
+    """
+    c = cache
+    if c.k.ndim == 5:                       # stacked (layers, ...) pool
+        c = jax.tree_util.tree_map(lambda a: a[0], c)
+    if not is_concrete(c.occ, c.blk, c.pos, c.window, c.table):
+        return
+    mask = _popcount_check(c.occ, c.blk, c.capacity, c.page_size, what)
+    pos = np.asarray(c.pos)
+    window = np.asarray(c.window)
+    occupied = mask.sum(-1)
+    want = np.minimum(np.minimum(pos, window), c.capacity)
+    if not np.array_equal(occupied, np.broadcast_to(want,
+                                                    occupied.shape)):
+        _fail(what, f"per-slot occupancy {occupied.tolist()} != "
+                    f"min(pos, window) {np.ravel(want).tolist()}")
+    dev = np.asarray(c.table)
+    if dev.size and (dev.min() < 0 or dev.max() > c.n_pages):
+        _fail(what, f"device table entry outside 0..{c.n_pages}")
+    if table is not None:
+        t = np.asarray(table)
+        if t.size and (t.min() < 0 or t.max() > c.n_pages):
+            _fail(what, f"host table entry outside 0..{c.n_pages}")
+        mapped = t[t > 0]
+        if mapped.size != np.unique(mapped).size:
+            _fail(what, "a physical page is mapped by more than one "
+                        "slot/block")
+
+
+# ---------------------------------------------------------------------------
+# allocator + tuning cache
+
+
+def check_allocator(alloc, *, what: str = "PageAllocator") -> None:
+    """Free-list uniqueness / range (delegates to ``alloc.check()``)."""
+    try:
+        alloc.check()
+    except AssertionError as e:
+        _fail(what, str(e))
+
+
+def check_tuning_cache(cache=None, *, interpret: Optional[bool] = None,
+                       what: str = "TuningCache") -> List[str]:
+    """Every cache entry satisfies ``plan.knobs_valid`` at its bucket
+    geometry.  Returns the list of checked keys."""
+    from repro.sparse import autotune as atn
+
+    if cache is None:
+        cache = atn.get_cache()
+    checked = []
+    for key, entry in cache.entries.items():
+        parts = key.split("|")
+        if len(parts) < 7:
+            _fail(what, f"malformed key {key!r}")
+        platform, dtype_name = parts[0], parts[1]
+        try:
+            dims = {p[0]: int(p[1:]) for p in parts[3:6]}
+            kn = cache.get(key)
+        except (ValueError, KeyError, TypeError) as e:
+            _fail(what, f"unparseable entry {key!r}: {e}")
+        interp = (platform == "cpu") if interpret is None else interpret
+        if kn.backend not in atn.BACKENDS:
+            _fail(what, f"{key!r}: unknown backend {kn.backend!r}")
+        if not kn.valid_for(dims["m"], dims["n"], dims["k"],
+                            interpret=interp,
+                            dtype_bytes=atn._DTYPE_BYTES.get(
+                                dtype_name, 4)):
+            _fail(what, f"{key!r}: knobs {entry} violate "
+                        "plan.knobs_valid at their bucket geometry")
+        checked.append(key)
+    return checked
+
+
+# ---------------------------------------------------------------------------
+# dispatch boundary + misc
+
+
+def check_operands(*operands) -> None:
+    """Validate any sparse operands among ``operands`` (dispatch
+    boundary hook; plain arrays and tracers pass through)."""
+    for x in operands:
+        if isinstance(x, SparseActivation):
+            check_sparse_activation(x)
+        elif isinstance(x, PlannedWeight):
+            check_planned_weight(x)
+
+
+def check_finite(x, what: str = "array") -> None:
+    """All-finite check that silently skips traced values."""
+    arr = x.values if isinstance(x, SparseActivation) else x
+    if not is_concrete(arr):
+        return
+    a = np.asarray(arr)
+    if not np.all(np.isfinite(a)):
+        _fail(what, f"{int(np.sum(~np.isfinite(a)))} non-finite "
+                    "element(s)")

@@ -1,0 +1,8 @@
+"""Test-support machinery shipped with the package (DESIGN.md §17).
+
+``repro.testing.faults`` is the deterministic fault-injection harness;
+it lives inside ``src`` (not ``tests/``) so the chaos benchmark and the
+serving engine's cooperative patch points can import it without a test
+runner on the path.
+"""
+from repro.testing import faults  # noqa: F401

@@ -1,0 +1,397 @@
+"""Fault injection × graceful degradation (DESIGN.md §17, ISSUE 10).
+
+The degradation matrix under test, one fault class at a time:
+
+* ``kernel_matmul`` / ``kernel_grouped`` — the OpSite layer retries the
+  failing call on the XLA arm *inside the same trace*, quarantines the
+  site for the session, and the outputs match the XLA arm exactly
+  (numerics preserved; the paper's encode/schedule changes cost, never
+  math);
+* ``nan_logits`` — a poisoned request retires ``status="error"``
+  without perturbing its batch siblings (token streams identical to a
+  fault-free run);
+* ``page_alloc`` — admission requeues with bounded exponential backoff
+  instead of crashing, and every request still completes with the
+  fault-free token stream;
+* corrupt tuning-cache JSON — ``load`` degrades to an empty cache with
+  one warning; a *valid* document with a foreign version still raises;
+* watchdog — a livelocked ``run_to_completion`` raises
+  :class:`EngineStalled` carrying the health snapshot and the
+  unfinished requests instead of silently dropping them;
+* ``deadline_ticks`` — blown deadlines retire terminally, queued or
+  mid-decode alike.
+"""
+import dataclasses
+import json
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import sparse as sp
+from repro.configs import smoke_config
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.models import transformer as tfm
+from repro.serving import serve_loop
+from repro.serving.engine import Engine, EngineStalled, Request
+from repro.sparse import autotune as atn
+from repro.sparse import dispatch as dsp
+from repro.sparse import site as ssite
+from repro.testing import faults
+
+
+@pytest.fixture(autouse=True)
+def _clean_slate():
+    """Quarantines and warn-once state never leak across tests."""
+    ssite.clear_quarantine()
+    warned = set(dsp._WARNED)
+    yield
+    ssite.clear_quarantine()
+    dsp._WARNED.clear()
+    dsp._WARNED.update(warned)
+    assert not faults.active()      # no fault context leaked
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke_config("qwen1.5-110b")
+    params, _ = tfm.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# the Fault object itself
+# ---------------------------------------------------------------------------
+
+def test_fault_fire_is_seed_deterministic():
+    a = [faults.Fault("page_alloc", rate=0.5, seed=7).fire()
+         for _ in range(32)]
+    b = [faults.Fault("page_alloc", rate=0.5, seed=7).fire()
+         for _ in range(32)]
+    f = faults.Fault("page_alloc", rate=0.5, seed=7)
+    c = [f.fire() for _ in range(32)]
+    assert a == b            # same seed, call #1 each → identical
+    assert f.fired == sum(c)
+
+
+def test_fault_poisons_is_uid_deterministic():
+    f = faults.Fault("nan_logits", rate=0.5, seed=3)
+    marks = {uid: f.poisons(uid) for uid in range(64)}
+    assert marks == {uid: f.poisons(uid) for uid in range(64)}
+    assert 0 < sum(marks.values()) < 64
+    g = faults.Fault("nan_logits", uids=frozenset({4, 9}))
+    assert g.poisons(4) and g.poisons(9) and not g.poisons(5)
+
+
+def test_inject_rejects_unknown_and_double_install():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        with faults.inject("cosmic_ray"):
+            pass
+    with faults.inject("page_alloc", rate=0.0):
+        with pytest.raises(RuntimeError, match="already installed"):
+            with faults.inject("page_alloc"):
+                pass
+    assert not faults.installed("page_alloc")
+
+
+# ---------------------------------------------------------------------------
+# kernel faults → per-site quarantine, numerics preserved
+# ---------------------------------------------------------------------------
+
+def _site_cfg(**kw) -> ModelConfig:
+    base = dict(name="faults", family="dense", n_layers=1, d_model=32,
+                n_heads=4, n_kv_heads=4, d_ff=64, vocab_size=64,
+                sparse_mode="dual", sparse_use_kernel=True,
+                sparse_block_m=8, sparse_block_n=16, sparse_slice_k=16)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_kernel_fault_quarantines_site_and_preserves_numerics(rng):
+    cfg = _site_cfg()
+    x = sp.relu(jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32)),
+                slice_k=16)
+    w = sp.plan_weight(
+        jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32)),
+        slice_k=16, block_n=16)
+    st = ssite.make("matmul", "faults.mm", axes=("a", "b"))
+    ref, _ = ssite.matmul(x, w, st, dataclasses.replace(
+        cfg, sparse_use_kernel=False))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with faults.inject("kernel_matmul") as f:
+            out, _ = ssite.matmul(x, w, st, cfg)
+            assert f.fired >= 1
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=0, atol=0)
+    assert "matmul:faults.mm" in ssite.quarantine_report()
+    # quarantined: later calls skip the kernel arm entirely (the fault
+    # context is gone, yet the stub would no longer be consulted anyway)
+    out2, _ = ssite.matmul(x, w, st, cfg)
+    np.testing.assert_array_equal(np.asarray(out2), np.asarray(ref))
+
+
+def test_kernel_fault_quarantine_inside_jit(rng):
+    """Dispatch imports kernel backends lazily at trace time, so the
+    same retry-and-quarantine works under jax.jit."""
+    cfg = _site_cfg()
+    xv = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+    w = sp.plan_weight(
+        jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32)),
+        slice_k=16, block_n=16)
+    st = ssite.make("matmul", "faults.jit", axes=("a", "b"))
+
+    def f(xv):
+        out, _ = ssite.matmul(sp.relu(xv, slice_k=16), w, st, cfg)
+        return out
+
+    ref = jax.jit(
+        lambda v: ssite.matmul(sp.relu(v, slice_k=16), w, st,
+                               dataclasses.replace(
+                                   cfg, sparse_use_kernel=False))[0])(xv)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with faults.inject("kernel_matmul"):
+            out = jax.jit(f)(xv)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert "matmul:faults.jit" in ssite.quarantine_report()
+
+
+def test_nonkernel_errors_propagate_unmasked(rng):
+    """_guarded must not eat errors the XLA retry also hits — a shape
+    bug is a bug, not a kernel failure."""
+    cfg = _site_cfg()
+    x = sp.relu(jnp.asarray(rng.normal(size=(8, 48)).astype(np.float32)),
+                slice_k=16)          # K=48 mismatches the 64-row weight
+    w = sp.plan_weight(
+        jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32)),
+        slice_k=16, block_n=16)
+    with pytest.raises(Exception):
+        ssite.matmul(x, w, ssite.make("matmul", "faults.bad",
+                                      axes=("a", "b")), cfg)
+    assert "matmul:faults.bad" not in ssite.quarantine_report()
+
+
+# ---------------------------------------------------------------------------
+# nan_activation
+# ---------------------------------------------------------------------------
+
+def test_nan_activation_poisons_outputs():
+    h = jnp.ones((4, 32))
+    clean = sp.activate(h, None, "relu", 8)
+    assert bool(jnp.all(jnp.isfinite(clean.values)))
+    with faults.inject("nan_activation") as f:
+        dirty = sp.activate(h, None, "relu", 8)
+    assert f.fired == 1
+    assert not bool(jnp.all(jnp.isfinite(dirty.values)))
+    # uninstalling restores the clean path
+    again = sp.activate(h, None, "relu", 8)
+    assert bool(jnp.all(jnp.isfinite(again.values)))
+
+
+# ---------------------------------------------------------------------------
+# engine: poisoned logits retire without touching siblings
+# ---------------------------------------------------------------------------
+
+def _run(cfg, params, prompts, max_new=4, poisoned=(), deadline=None,
+         **serve_kw):
+    sv = ServeConfig(slots=2, capacity=32, **serve_kw)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        eng = Engine(params, cfg, serve=sv)
+        for uid, p in enumerate(prompts):
+            eng.submit(Request(uid=uid, prompt=p, max_new_tokens=max_new,
+                               deadline_ticks=deadline))
+        done = {r.uid: r for r in eng.run_to_completion()}
+    return eng, done
+
+
+def test_poisoned_request_retires_without_killing_siblings(model):
+    cfg, params = model
+    prompts = [[5, 6, 7], [11, 3, 9, 2], [8, 1]]
+    _, ref = _run(cfg, params, prompts)
+    with faults.inject("nan_logits", uids={1}):
+        eng, done = _run(cfg, params, prompts)
+    assert sorted(done) == [0, 1, 2]
+    assert done[1].status == "error"
+    assert done[1].error == "nonfinite_logits"
+    for uid in (0, 2):              # siblings: bit-identical tokens
+        assert done[uid].status == "done"
+        assert done[uid].output == ref[uid].output
+    assert eng.errored == 1
+    assert eng.decode_traces == 1   # the poison ride-along adds no trace
+    eng.validate_state()            # invariants clean at exit
+
+
+def test_all_poisoned_batch_drains(model):
+    cfg, params = model
+    with faults.inject("nan_logits", rate=1.0):
+        eng, done = _run(cfg, params, [[1, 2], [3, 4]])
+    assert all(r.status == "error" for r in done.values())
+    assert eng._idle()
+
+
+# ---------------------------------------------------------------------------
+# engine: page-allocator exhaustion → bounded retries + backoff
+# ---------------------------------------------------------------------------
+
+def test_alloc_fault_backs_off_and_completes(model):
+    cfg, params = model
+    prompts = [[5, 6, 7], [11, 3, 9, 2]]
+    _, ref = _run(cfg, params, prompts)
+    with faults.inject("page_alloc", rate=0.5, seed=11) as f:
+        eng, done = _run(cfg, params, prompts)
+    assert f.fired >= 1
+    for uid in ref:
+        assert done[uid].status == "done"
+        assert done[uid].output == ref[uid].output
+    eng.validate_state()
+
+
+def test_alloc_starvation_requeues_with_backoff(model):
+    """Total exhaustion never crashes: the starved request sits in the
+    queue with a bounded-backoff eligibility time."""
+    cfg, params = model
+    sv = ServeConfig(slots=1, capacity=32, backoff_ticks=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        eng = Engine(params, cfg, serve=sv)
+        req = Request(uid=0, prompt=[1, 2, 3], max_new_tokens=8)
+        eng.submit(req)
+        with faults.inject("page_alloc", rate=1.0):
+            for _ in range(3):
+                eng.step()
+    assert not req.done
+    assert req.status == "queued"
+    assert req.preempt_retries >= 1
+    assert req.not_before > 0       # backed off, not busy-spinning
+    assert req.not_before - eng.ticks <= sv.backoff_ticks * 2 ** 5
+    done = {r.uid: r for r in eng.run_to_completion()}
+    assert done[0].status == "done" and len(done[0].output) == 8
+
+
+# ---------------------------------------------------------------------------
+# corrupt tuning cache
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["truncate", "garbage", "binary"])
+def test_corrupt_cache_degrades_to_empty(tmp_path, mode):
+    path = str(tmp_path / "cache.json")
+    atn.reset()
+    atn.record("matmul", 64, 128, 256, dtype=jnp.float32, sparsity=0.5,
+               knobs=atn.Knobs("xla", 8, 8, 8), us=10.0)
+    atn.save_cache(path)
+    atn.reset()
+    faults.corrupt_json(path, mode)
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        atn.load_cache(path)
+    assert atn.get_cache().entries == {}
+    atn.reset()
+
+
+def test_valid_foreign_version_still_raises(tmp_path):
+    """Corruption tolerance must not swallow the version guard."""
+    path = tmp_path / "bad.json"
+    path.write_text('{"version": 999, "entries": {}}')
+    with pytest.raises(ValueError, match="version"):
+        atn.load_cache(str(path))
+
+
+def test_save_is_atomic(tmp_path):
+    path = str(tmp_path / "cache.json")
+    atn.reset()
+    atn.record("matmul", 8, 8, 8, dtype=jnp.float32, sparsity=None,
+               knobs=atn.Knobs("xla", 8, 8, 8), us=1.0)
+    atn.save_cache(path)
+    with open(path) as fh:
+        json.load(fh)               # complete document, no temp litter
+    assert list((tmp_path).glob("*.tmp.*")) == []
+    atn.reset()
+
+
+# ---------------------------------------------------------------------------
+# watchdog + deadlines
+# ---------------------------------------------------------------------------
+
+def test_watchdog_raises_engine_stalled(model):
+    cfg, params = model
+    sv = ServeConfig(slots=1, capacity=32, watchdog_ticks=5)
+    eng = Engine(params, cfg, serve=sv)
+    req = Request(uid=0, prompt=[1, 2, 3], max_new_tokens=4)
+    eng.submit(req)
+    req.not_before = 10 ** 9        # simulated never-eligible livelock
+    with pytest.raises(EngineStalled) as ei:
+        eng.run_to_completion(max_ticks=50)
+    assert [r.uid for r in ei.value.unfinished] == [0]
+    health = ei.value.health
+    assert health["queue"][0]["uid"] == 0
+    json.dumps(health, default=str)     # snapshot is serialisable
+
+
+def test_max_ticks_exhaustion_reports_instead_of_dropping(model):
+    cfg, params = model
+    eng = Engine(params, cfg, slots=1, capacity=32)
+    eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=200))
+    with pytest.raises(EngineStalled, match="max_ticks"):
+        eng.run_to_completion(max_ticks=3)
+
+
+def test_deadline_expires_queued_and_active(model):
+    cfg, params = model
+    sv = ServeConfig(slots=1, capacity=32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        eng = Engine(params, cfg, serve=sv)
+        # slots=1: uid 1 waits queued behind uid 0 and blows its
+        # deadline there; uid 0 blows its own mid-decode
+        eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=50,
+                           deadline_ticks=3))
+        eng.submit(Request(uid=1, prompt=[4, 5], max_new_tokens=4,
+                           deadline_ticks=2))
+        done = {r.uid: r for r in eng.run_to_completion()}
+    assert done[0].status == "error" and done[0].error == "deadline"
+    assert 0 < len(done[0].output) < 50     # partial stream preserved
+    assert done[1].status == "error" and done[1].error == "deadline"
+    assert eng._idle()
+
+
+def test_generous_deadline_is_harmless(model):
+    cfg, params = model
+    prompts = [[5, 6, 7]]
+    _, ref = _run(cfg, params, prompts)
+    _, done = _run(cfg, params, prompts, deadline=10_000)
+    assert done[0].status == "done"
+    assert done[0].output == ref[0].output
+
+
+# ---------------------------------------------------------------------------
+# preemption storm
+# ---------------------------------------------------------------------------
+
+def test_preemption_storm_preserves_tokens(model):
+    cfg, params = model
+    prompts = [[5, 6, 7], [11, 3, 9, 2], [8, 1]]
+    _, ref = _run(cfg, params, prompts, max_new=6)
+    with faults.inject("preemption_storm", rate=0.4, seed=5) as f:
+        eng, done = _run(cfg, params, prompts, max_new=6)
+    assert f.fired >= 1
+    for uid in ref:
+        assert done[uid].status == "done"
+        assert done[uid].output == ref[uid].output
+    assert eng.evictions >= 1
+    eng.validate_state()
+
+
+# ---------------------------------------------------------------------------
+# the composite chaos context
+# ---------------------------------------------------------------------------
+
+def test_chaos_context_installs_and_restores():
+    with faults.chaos(seed=0, poisoned_uids={3}) as installed:
+        assert set(installed) == {"kernel_matmul", "kernel_grouped",
+                                  "page_alloc", "preemption_storm",
+                                  "nan_logits"}
+        assert faults.active() == sorted(installed)
+    assert not faults.active()

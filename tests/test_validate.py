@@ -1,0 +1,305 @@
+"""Invariant validators (DESIGN.md §17, ISSUE 10).
+
+The contract under test:
+
+* structures built by the library's own constructors (``sparsify`` /
+  ``relu`` / ``plan_weight`` / ``front_pack`` / ``stable_partition`` /
+  the autotuner's ``record``) always validate clean — the validators
+  encode invariants the code actually maintains, not aspirations;
+* any single-field mutation of those structures is *detected* — the
+  checks are not vacuous;
+* validation is opt-in and zero-cost when off: the dispatch boundary
+  only runs :func:`check_operands` under ``REPRO_VALIDATE=1`` /
+  :func:`validate.enable`, and value checks silently skip traced
+  operands;
+* the :class:`PageAllocator` hard-fails double-frees and out-of-range
+  frees instead of corrupting its free list.
+
+The randomized sweeps draw from seeded generators (not hypothesis) so
+they run identically in every environment, container included.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import sparse as sp
+from repro.serving.scheduler import PageAllocator
+from repro.sparse import autotune as atn
+from repro.sparse import plan as pln
+from repro.sparse import validate as val
+from repro.sparse.validate import ValidationError
+
+
+@pytest.fixture(autouse=True)
+def _env_driven():
+    """Validators run env-driven unless a test forces them on/off."""
+    val.reset()
+    yield
+    val.reset()
+
+
+def _draws(seed, n=25):
+    """Seeded (rows, k, slice_k, mask) sweep over awkward shapes."""
+    g = np.random.default_rng(seed)
+    for _ in range(n):
+        rows = int(g.integers(1, 5))
+        k = int(g.integers(1, 71))
+        slice_k = int(g.choice([4, 8, 16, 32]))
+        mask = g.random((rows, k)) < g.random()
+        yield rows, k, slice_k, mask
+
+
+# ---------------------------------------------------------------------------
+# SparseActivation
+# ---------------------------------------------------------------------------
+
+def test_sparsify_always_validates():
+    for _, _, slice_k, mask in _draws(0):
+        x = np.where(mask, 1.0, 0.0).astype(np.float32)
+        sa = sp.sparsify(jnp.asarray(x), mask=jnp.asarray(mask),
+                         slice_k=slice_k)
+        val.check_sparse_activation(sa, strict=True)   # never raises
+
+
+def test_mutated_slice_act_is_detected():
+    for _, _, slice_k, mask in _draws(1, n=10):
+        x = np.where(mask, 1.0, 0.0).astype(np.float32)
+        sa = sp.sparsify(jnp.asarray(x), mask=jnp.asarray(mask),
+                         slice_k=slice_k)
+        flipped = sp.SparseActivation(
+            values=sa.values, bitmap=sa.bitmap,
+            slice_act=jnp.logical_not(sa.slice_act), slice_k=slice_k)
+        with pytest.raises(ValidationError, match="slice_act"):
+            val.check_sparse_activation(flipped)
+
+
+def test_strict_mode_catches_stray_values():
+    """A non-zero outside the bitmap passes non-strict (the KV score
+    operand shape) but fails strict (the relu-family contract)."""
+    x = jnp.zeros((2, 40), jnp.float32)
+    mask = jnp.zeros((2, 40), bool)
+    sa = sp.sparsify(x, mask=mask, slice_k=8)
+    leaky = sa.map_values(lambda v: v.at[0, 3].set(7.0))
+    val.check_sparse_activation(leaky, strict=False)
+    with pytest.raises(ValidationError, match="outside the bitmap"):
+        val.check_sparse_activation(leaky, strict=True)
+
+
+def test_wrong_metadata_shape_is_detected():
+    sa = sp.relu(jnp.ones((3, 32)), slice_k=8)
+    bad = sp.SparseActivation(values=sa.values, bitmap=sa.bitmap,
+                              slice_act=sa.slice_act[:, :-1], slice_k=8)
+    with pytest.raises(ValidationError, match="shape"):
+        val.check_sparse_activation(bad)
+
+
+def test_traced_operands_are_skipped():
+    """Inside jit the value checks are silently skipped — the opt-in
+    boundary mode must cost nothing under a trace."""
+    def f(x):
+        sa = sp.relu(x, slice_k=8)
+        bad = sp.SparseActivation(values=sa.values, bitmap=sa.bitmap,
+                                  slice_act=jnp.logical_not(sa.slice_act),
+                                  slice_k=8)
+        val.check_sparse_activation(bad)    # inconsistent, but traced
+        return sa.values.sum()
+    jax.jit(f)(jnp.ones((2, 32)))           # must not raise
+
+
+# ---------------------------------------------------------------------------
+# PlannedWeight
+# ---------------------------------------------------------------------------
+
+def test_plan_weight_validates_with_values(rng):
+    w = rng.normal(size=(64, 32)).astype(np.float32)
+    w[rng.random(w.shape) < 0.6] = 0.0
+    pw = sp.plan_weight(jnp.asarray(w), slice_k=16, block_n=16)
+    val.check_planned_weight(pw, values=True)
+
+
+def test_plan_weight_mutation_detected(rng):
+    w = rng.normal(size=(64, 32)).astype(np.float32)
+    pw = sp.plan_weight(jnp.asarray(w), slice_k=16, block_n=16)
+    dead = dataclasses.replace(
+        pw, slice_act=jnp.zeros_like(pw.slice_act))
+    with pytest.raises(ValidationError, match="inactive"):
+        val.check_planned_weight(dead, values=True)
+
+
+def test_grouped_plan_weight_validates(rng):
+    w = rng.normal(size=(3, 32, 16)).astype(np.float32)
+    w[rng.random(w.shape) < 0.5] = 0.0
+    pw = sp.plan_weight(jnp.asarray(w), slice_k=8, block_n=8)
+    val.check_planned_weight(pw, values=True)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def _acts(seed, n=25):
+    g = np.random.default_rng(seed)
+    for _ in range(n):
+        fibers = int(g.integers(1, 6))
+        s = int(g.integers(1, 18))
+        yield g.random((fibers, s)) < g.random()
+
+
+def test_front_pack_schedule_validates():
+    for act in _acts(2):
+        ks, counts = sp.front_pack(jnp.asarray(act))
+        val.check_schedule(ks, counts, act, tail="repeat_last")
+
+
+def test_stable_partition_schedule_validates():
+    for act in _acts(3):
+        ks, counts = pln.stable_partition(jnp.asarray(act))
+        val.check_schedule(ks, counts, act, tail="partition")
+
+
+def test_corrupted_schedule_is_detected():
+    """Pointing the first scheduled index at an inactive position must
+    always be caught for fibers with both active and inactive slots."""
+    corrupted = 0
+    for act in _acts(4, n=40):
+        ks, counts = sp.front_pack(jnp.asarray(act))
+        ks = np.asarray(ks).copy()
+        counts = np.asarray(counts)
+        inactive = np.flatnonzero(~act[0])
+        if counts[0] == 0 or inactive.size == 0:
+            continue                # nothing to corrupt in this draw
+        ks[0, 0] = inactive[0]
+        with pytest.raises(ValidationError):
+            val.check_schedule(ks, counts, act, tail="repeat_last")
+        corrupted += 1
+    assert corrupted > 5            # the sweep really exercised the check
+
+
+def test_schedule_count_mismatch_detected():
+    act = np.asarray([[True, False, True, True]])
+    ks, counts = sp.front_pack(jnp.asarray(act))
+    with pytest.raises(ValidationError, match="counts"):
+        val.check_schedule(ks, np.asarray(counts) + 1, act)
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+def test_allocator_double_free_raises():
+    alloc = PageAllocator(8)
+    pages = alloc.alloc(3)
+    alloc.free(pages)
+    with pytest.raises(ValueError, match="double free"):
+        alloc.free([pages[0]])
+    val.check_allocator(alloc)      # the failed free must not corrupt
+
+
+def test_allocator_out_of_range_free_raises():
+    alloc = PageAllocator(4)
+    with pytest.raises(ValueError, match="outside"):
+        alloc.free([99])
+    with pytest.raises(ValueError, match="outside"):
+        alloc.free([0])             # 0 is the trash page, never pooled
+
+
+def test_allocator_rejects_nonpositive_alloc():
+    alloc = PageAllocator(4)
+    with pytest.raises(ValueError):
+        alloc.alloc(0)
+
+
+def test_allocator_exhaustion_returns_none_and_recovers():
+    alloc = PageAllocator(2)
+    got = alloc.alloc(2)
+    assert alloc.alloc(1) is None
+    alloc.free(got)
+    assert len(alloc.alloc(2)) == 2
+    val.check_allocator(alloc)
+
+
+def test_check_allocator_detects_corruption():
+    alloc = PageAllocator(4)
+    alloc._free.append(alloc._free[0])        # duplicate entry
+    with pytest.raises(ValidationError):
+        val.check_allocator(alloc)
+
+
+# ---------------------------------------------------------------------------
+# tuning cache
+# ---------------------------------------------------------------------------
+
+def test_recorded_entries_validate():
+    atn.reset()
+    atn.record("matmul", 64, 128, 256, dtype=jnp.float32, sparsity=0.5,
+               knobs=atn.Knobs("xla", 8, 8, 8), us=10.0)
+    atn.record("grouped", 16, 32, 64, dtype=jnp.float32, sparsity=None,
+               knobs=atn.Knobs("kernel", 16, 16, 16), us=5.0, extra="e4")
+    checked = val.check_tuning_cache(interpret=True)
+    assert len(checked) >= 2
+    atn.reset()
+
+
+def test_invalid_cache_entry_detected():
+    atn.reset()
+    key = atn.record("matmul", 64, 128, 256, dtype=jnp.float32,
+                     sparsity=0.5, knobs=atn.Knobs("xla", 8, 8, 8),
+                     us=10.0)
+    # a kernel backend at a block_m that cannot tile the bucket geometry
+    atn.get_cache().entries[key]["backend"] = "kernel"
+    atn.get_cache().entries[key]["block_m"] = 7
+    with pytest.raises(ValidationError):
+        val.check_tuning_cache(interpret=True)
+    atn.reset()
+
+
+# ---------------------------------------------------------------------------
+# enablement + the dispatch boundary
+# ---------------------------------------------------------------------------
+
+def _inconsistent_sa():
+    x = np.linspace(-1, 1, 64, dtype=np.float32).reshape(2, 32)
+    sa = sp.relu(jnp.asarray(x), slice_k=8)
+    return sp.SparseActivation(values=sa.values, bitmap=sa.bitmap,
+                               slice_act=jnp.logical_not(sa.slice_act),
+                               slice_k=8)
+
+
+def test_dispatch_boundary_validation_is_opt_in(rng):
+    bad = _inconsistent_sa()
+    w = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    kw = dict(mode="dual", block_m=8, block_n=8, slice_k=8)
+    # off (default): the inconsistent operand sails through
+    assert not val.enabled()
+    out, _ = sp.dispatch.matmul(bad, w, **kw)
+    assert out.shape == (2, 16)
+    # on: the same call trips the boundary check
+    with val.enabled_within(True):
+        assert val.enabled()
+        with pytest.raises(ValidationError):
+            sp.dispatch.matmul(bad, w, **kw)
+    assert not val.enabled()
+
+
+def test_enable_reset_roundtrip(monkeypatch):
+    monkeypatch.delenv("REPRO_VALIDATE", raising=False)
+    assert not val.enabled()
+    val.enable(True)
+    assert val.enabled()
+    val.reset()
+    assert not val.enabled()
+    monkeypatch.setenv("REPRO_VALIDATE", "1")
+    assert val.enabled()
+    monkeypatch.setenv("REPRO_VALIDATE", "0")
+    assert not val.enabled()
+
+
+def test_check_finite():
+    val.check_finite(jnp.ones((4,)))
+    with pytest.raises(ValidationError, match="non-finite"):
+        val.check_finite(jnp.asarray([1.0, np.nan]))
+    # traced values skip silently
+    jax.jit(lambda x: (val.check_finite(x), x)[1])(jnp.ones(3))
